@@ -1,0 +1,27 @@
+"""Paper §3.2.2: Algorithm 1 packs ~1M graphs in about one second."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.binpack import create_balanced_batches
+from repro.data.molecules import SyntheticCFMDataset
+
+
+def main(n: int = 1_000_000):
+    ds = SyntheticCFMDataset(n, seed=5)
+    t0 = time.perf_counter()
+    b = create_balanced_batches(ds.sizes, 3072, 256)
+    dt = time.perf_counter() - t0
+    rows = [
+        f"binpack_speed,n={n},seconds={dt:.2f},graphs_per_sec={n/dt:.0f},"
+        f"bins={b.n_bins}"
+    ]
+    for r in rows:
+        print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

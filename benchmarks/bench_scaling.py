@@ -1,0 +1,66 @@
+"""Paper Figures 7/8 (strong scaling) + 10 (weak scaling).
+
+Strong scaling: 2.6M-sample dataset, 16 -> 740 GPUs; per-epoch time from the
+calibrated straggler model for all four configurations (baseline, +LB, +KO,
++both).  Strong-scaling efficiency uses the paper's formula
+T1/(P x T_P) x 100% referenced to 16 GPUs.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.bench_ablation import TPU_ROOFLINE_STEP_SPEEDUP
+from benchmarks.common import epoch_time_model
+from repro.core.binpack import create_balanced_batches, fixed_count_batches
+from repro.data.molecules import SyntheticCFMDataset
+
+GPU_COUNTS = [16, 32, 64, 128, 256, 512, 740]
+
+
+def main(n: int = 260_000):
+    # kernel factor: the TPU roofline model's whole-step fused/unfused ratio
+    # (see bench_ablation docstring for why CPU-measured kappa doesn't apply)
+    kappa = TPU_ROOFLINE_STEP_SPEEDUP
+    ds = SyntheticCFMDataset(n, seed=2)
+    rows = []
+    t16 = {}
+    for P in GPU_COUNTS:
+        base = fixed_count_batches(ds.sizes, 6, P, shuffle=True)
+        bal = create_balanced_batches(ds.sizes, 3072, P)
+        times = {
+            "baseline": epoch_time_model(base, P),
+            "lb": epoch_time_model(bal, P),
+            "kernel": epoch_time_model(base, P, kappa=kappa),
+            "lb+kernel": epoch_time_model(bal, P, kappa=kappa),
+        }
+        if P == 16:
+            t16 = dict(times)
+        eff = (
+            t16["lb+kernel"] / (P / 16 * times["lb+kernel"]) * 100
+            if times["lb+kernel"]
+            else 0.0
+        )
+        rows.append(
+            f"fig7_strong,P={P},"
+            + ",".join(f"t_{k}={v:.3e}" for k, v in times.items())
+            + f",speedup_vs_baseline={times['baseline']/times['lb+kernel']:.2f}"
+            + f",efficiency_pct={eff:.1f}"
+        )
+
+    # weak scaling (Fig 10): ~constant graphs/GPU
+    for P, n_w in [(16, 60_000), (32, 120_000), (64, 260_000)]:
+        ds_w = SyntheticCFMDataset(n_w, seed=3)
+        base = fixed_count_batches(ds_w.sizes, 6, P, shuffle=True)
+        bal = create_balanced_batches(ds_w.sizes, 3072, P)
+        rows.append(
+            f"fig10_weak,P={P},n={n_w},t_baseline={epoch_time_model(base, P):.3e},"
+            f"t_lb={epoch_time_model(bal, P):.3e},"
+            f"t_lb_kernel={epoch_time_model(bal, P, kappa=kappa):.3e}"
+        )
+    for r in rows:
+        print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Beyond-paper: Algorithm 1 as an LM sequence packer (DESIGN.md §4) —
+padding + per-rank balance vs fixed-count document batching."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.sequence_pack import packing_stats
+
+
+def main():
+    rng = np.random.default_rng(0)
+    # long-tail document lengths (power-law-ish, like web corpora)
+    raw = ((rng.pareto(1.2, size=20_000) + 1) * 180).astype(int)
+    rows = []
+    for seq_len in (2048, 4096, 8192):
+        # real pipelines truncate/split documents at the context length
+        lengths = np.clip(raw, 1, seq_len)
+        st = packing_stats(lengths, seq_len, n_ranks=32)
+        rows.append(
+            f"seqpack,seq_len={seq_len},balanced_padding={st['balanced_padding']:.3f},"
+            f"fixed_padding={st['fixed_padding']:.3f},"
+            f"balanced_straggler={st['balanced_straggler']:.3f},"
+            f"fixed_straggler={st['fixed_straggler']:.3f}"
+        )
+    for r in rows:
+        print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Shared benchmark utilities: timing + the straggler epoch-time model.
+
+The scaling/ablation benchmarks reproduce the paper's *measured* quantities
+with a calibrated cost model (this container is a single CPU core; the
+hardware-sensitive inputs — per-token step cost and the fused-kernel speedup
+— are measured on-device here and plugged into the same straggler model the
+paper's Figures 6-10 reflect):
+
+    T_epoch = sum_steps  max_rank( work(rank, step) )  x  c_token / kappa
+
+where work = tokens in the rank's bin for that step, c_token is the
+calibrated per-token cost and kappa the measured kernel speedup.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Sequence
+
+import numpy as np
+
+from repro.core.binpack import Bins
+
+
+def timeit(fn: Callable, *args, repeats: int = 5, warmup: int = 2) -> float:
+    """Median wall seconds per call (fn must block, e.g. via block_until_ready)."""
+    for _ in range(warmup):
+        fn(*args)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def epoch_time_model(
+    bins: Bins, n_ranks: int, c_token: float = 1.0, kappa: float = 1.0,
+    cost_exponent: float = 1.0,
+) -> float:
+    """Straggler model: per step (one bin per rank), the slowest rank gates."""
+    loads = bins.loads().astype(np.float64) ** cost_exponent
+    steps = len(loads) // n_ranks
+    if steps == 0:
+        return 0.0
+    per_step = loads[: steps * n_ranks].reshape(steps, n_ranks).max(axis=1)
+    return float(per_step.sum() * c_token / kappa)
+
+
+def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.3f},{derived}"

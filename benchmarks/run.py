@@ -1,0 +1,74 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run --only fig6
+
+Prints CSV-ish rows (``name,...metrics``) and a roofline summary from the
+dry-run artifacts if present.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+SUITES = [
+    ("table3_dataset", "benchmarks.bench_dataset"),
+    ("fig12_distribution", "benchmarks.bench_distribution"),
+    ("sec4_kernels", "benchmarks.bench_kernels"),
+    ("fig6_ablation", "benchmarks.bench_ablation"),
+    ("fig7_10_scaling", "benchmarks.bench_scaling"),
+    ("fig11_capacity", "benchmarks.bench_capacity"),
+    ("sec322_binpack_speed", "benchmarks.bench_binpack_speed"),
+    ("seqpack_beyond_paper", "benchmarks.bench_seqpack"),
+]
+
+
+def roofline_summary():
+    path = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun_results.json")
+    if not os.path.exists(path):
+        print("roofline,skipped(no dryrun_results.json; run repro.launch.dryrun)")
+        return
+    with open(path) as f:
+        results = json.load(f)
+    ok = sum(1 for r in results.values() if r.get("ok") and not r.get("skipped"))
+    skip = sum(1 for r in results.values() if r.get("skipped"))
+    fail = sum(1 for r in results.values() if not r.get("ok"))
+    print(f"roofline,cells_ok={ok},skipped={skip},failed={fail}")
+    for key, r in sorted(results.items()):
+        if r.get("ok") and not r.get("skipped") and "roofline" in r:
+            rl = r["roofline"]
+            print(
+                f"roofline,{key},dominant={rl['dominant']},"
+                f"fraction={rl['roofline_fraction']:.4f},"
+                f"step_lb_s={rl['step_time_lb_s']:.4f}"
+            )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    t0 = time.perf_counter()
+    for name, module in SUITES:
+        if args.only and args.only not in name:
+            continue
+        print(f"# === {name} ({module}) ===", flush=True)
+        t1 = time.perf_counter()
+        try:
+            mod = __import__(module, fromlist=["main"])
+            mod.main()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name},ERROR,{type(e).__name__}:{e}")
+        print(f"# {name} took {time.perf_counter() - t1:.1f}s", flush=True)
+    if not args.only:
+        print("# === roofline (from dry-run artifacts) ===")
+        roofline_summary()
+    print(f"# total {time.perf_counter() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

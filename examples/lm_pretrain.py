@@ -1,0 +1,83 @@
+"""LM pretraining demo over any assigned architecture (--arch), with the
+paper's bin-packing applied to *sequence packing* (block-diagonal attention
+via segment IDs).
+
+    PYTHONPATH=src python examples/lm_pretrain.py --arch qwen3-14b --steps 20
+    PYTHONPATH=src python examples/lm_pretrain.py --arch jamba-v0.1-52b
+
+Runs the REDUCED config of the family on CPU; the full config is exercised
+by the dry-run (repro.launch.dryrun).
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_reduced
+from repro.data.sequence_pack import pack_documents, packing_stats
+from repro.launch.lm_train_step import make_lm_train_step
+from repro.models.model import init_params
+
+
+def synth_docs(n_docs, vocab, seed=0):
+    rng = np.random.default_rng(seed)
+    lengths = np.minimum((rng.pareto(1.5, size=n_docs) + 1) * 24, 250).astype(int)
+
+    def token_fn(d, ln):
+        r = np.random.default_rng(d)
+        return r.integers(1, vocab, size=ln)
+
+    return lengths, token_fn
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-14b", help=f"one of {ARCH_IDS}")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch)
+    print(f"arch={cfg.name} layers={cfg.n_layers} d={cfg.d_model} vocab={cfg.vocab}")
+
+    lengths, token_fn = synth_docs(400, cfg.vocab)
+    st = packing_stats(lengths, args.seq_len, args.batch)
+    print(
+        f"packing: balanced padding={st['balanced_padding']:.3f} "
+        f"(fixed-count would pad {st['fixed_padding']:.3f})"
+    )
+    packed = pack_documents(lengths, args.seq_len, args.batch, token_fn)
+
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    m = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    v = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    step = jax.jit(make_lm_train_step(cfg, lr=1e-3))
+
+    n_bins = packed.tokens.shape[0]
+    t0 = time.perf_counter()
+    for i in range(args.steps):
+        lo = (i * args.batch) % max(1, n_bins - args.batch + 1)
+        tok = jnp.asarray(packed.tokens[lo : lo + args.batch])
+        seg = jnp.asarray(packed.segment_ids[lo : lo + args.batch])
+        pos = jnp.asarray(packed.positions[lo : lo + args.batch])
+        labels = jnp.where(
+            (seg > 0) & (jnp.roll(seg, -1, axis=1) == seg),
+            jnp.roll(tok, -1, axis=1), -1,
+        )
+        batch = {"tokens": tok, "labels": labels, "positions": pos, "segments": seg}
+        if cfg.n_prefix_embeds:
+            batch["prefix_embeds"] = jnp.zeros(
+                (tok.shape[0], cfg.n_prefix_embeds, cfg.d_model), jnp.float32
+            )
+        params, m, v, loss = step(params, m, v, batch, jnp.asarray(i))
+        if i % max(1, args.steps // 10) == 0 or i == args.steps - 1:
+            print(f"step {i:4d}  loss={float(loss):.4f}")
+    dt = time.perf_counter() - t0
+    print(f"{args.steps} steps in {dt:.1f}s — OK")
+
+
+if __name__ == "__main__":
+    main()

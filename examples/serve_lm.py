@@ -1,0 +1,56 @@
+"""Batched LM serving demo: prefill a batch of prompts, then decode tokens
+with the ring-buffer KV cache (windowed archs allocate only `window` slots).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch gemma3-4b --tokens 24
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_reduced
+from repro.models.model import decode_step, forward_prefill, init_params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-4b", help=f"one of {ARCH_IDS}")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    B, S = args.batch, args.prompt_len
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+
+    t0 = time.perf_counter()
+    prefill = jax.jit(lambda p, t: forward_prefill(p, cfg, t))
+    logits, state = prefill(params, prompts)
+    print(f"prefill {B}x{S} in {time.perf_counter()-t0:.2f}s "
+          f"(incl. compile); cache slots per swa layer = "
+          f"{cfg.window if cfg.window else S}")
+
+    step = jax.jit(lambda p, s, t, pos: decode_step(p, s, cfg, t, pos))
+    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    out_tokens = [np.asarray(tok)[:, 0]]
+    t0 = time.perf_counter()
+    for i in range(args.tokens - 1):
+        logits, state = step(params, state, tok, jnp.asarray(S + i, jnp.int32))
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        out_tokens.append(np.asarray(tok)[:, 0])
+    dt = time.perf_counter() - t0
+    seqs = np.stack(out_tokens, axis=1)
+    print(f"decoded {args.tokens} tokens/seq x {B} seqs "
+          f"({(args.tokens-1)*B/max(dt,1e-9):.1f} tok/s after compile)")
+    print("greedy continuations (token ids):")
+    for b in range(B):
+        print(f"  seq{b}: {seqs[b][:12].tolist()}...")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

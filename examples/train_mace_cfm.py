@@ -1,0 +1,70 @@
+"""End-to-end CFM training driver (the paper's workload, CPU-scaled).
+
+Composes every subsystem: Table-3-style synthetic dataset -> Algorithm 1
+balanced sampler -> static-shape collation -> fused-contraction MACE ->
+AdamW + EMA -> atomic checkpoints + auto-resume.
+
+    PYTHONPATH=src python examples/train_mace_cfm.py \
+        --steps 300 --n-graphs 2000 --capacity 512 --channels 32
+
+Flags scale from smoke (defaults) to the paper's config
+(--channels 128 --capacity 3072 --correlation 2 on real hardware).
+Compare against the fixed-count baseline with --sampler fixed.
+"""
+import argparse
+import time
+
+from repro.core.mace import MaceConfig, param_count
+from repro.data.molecules import SyntheticCFMDataset
+from repro.train.train_loop import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--n-graphs", type=int, default=2000)
+    ap.add_argument("--capacity", type=int, default=512)
+    ap.add_argument("--channels", type=int, default=32)
+    ap.add_argument("--correlation", type=int, default=2)
+    ap.add_argument("--max-atoms", type=int, default=256)
+    ap.add_argument("--sampler", choices=["balanced", "fixed"], default="balanced")
+    ap.add_argument("--impl", choices=["ref", "fused", "pallas"], default="fused")
+    ap.add_argument("--ckpt-dir", default="/tmp/mace_cfm_run")
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+
+    cfg = MaceConfig(
+        n_species=10, channels=args.channels, hidden_ls=(0, 1), sh_lmax=3,
+        a_ls=(0, 1, 2, 3), correlation=args.correlation, n_interactions=2,
+        avg_num_neighbors=12.0, impl=args.impl,
+    )
+    ds = SyntheticCFMDataset(args.n_graphs, seed=0, max_atoms=args.max_atoms)
+    tcfg = TrainerConfig(
+        capacity=args.capacity, edge_factor=48, max_graphs=max(16, args.capacity // 8),
+        lr=5e-3, ema_decay=0.99, ckpt_dir=args.ckpt_dir, ckpt_every=50,
+        compress_grads=args.compress_grads,
+    )
+    tr = Trainer(cfg, tcfg, ds, sampler=args.sampler, seed=0)
+    if tr.maybe_restore():
+        print(f"resumed from step {tr.global_step}")
+    print(
+        f"params={param_count(tr.params):,} graphs={len(ds)} "
+        f"steps/epoch={tr.sampler.steps_per_epoch()} sampler={args.sampler}"
+    )
+
+    t0 = time.perf_counter()
+    out = tr.train(n_epochs=1_000_000, max_steps=args.steps)
+    dt = time.perf_counter() - t0
+    hist = out["history"]
+    if hist:
+        k = max(1, len(hist) // 10)
+        for i in range(0, len(hist), k):
+            h = hist[i]
+            print(f"step {i:5d}  loss={h['loss']:.4f}  e_rmse={h['e_rmse']:.4f}  f_rmse={h['f_rmse']:.4f}")
+        print(f"final loss={hist[-1]['loss']:.4f}  ({len(hist)} steps in {dt:.1f}s, "
+              f"{len(hist)/dt:.2f} steps/s)")
+    print("checkpoint at", tcfg.ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Config registry: one module per assigned architecture (+ the paper's own
+MACE CFM workload).  ``get_config(name)`` returns the full published config;
+``get_reduced(name)`` returns the same family scaled down for CPU smoke tests.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.models.model import ArchConfig
+
+ARCH_IDS = [
+    "internvl2_26b",
+    "musicgen_large",
+    "qwen3_14b",
+    "qwen2_5_3b",
+    "granite_3_2b",
+    "gemma3_4b",
+    "xlstm_125m",
+    "mixtral_8x22b",
+    "qwen3_moe_235b_a22b",
+    "jamba_v0_1_52b",
+]
+
+# canonical CLI ids (--arch <id>)
+CLI_ALIASES = {
+    "internvl2-26b": "internvl2_26b",
+    "musicgen-large": "musicgen_large",
+    "qwen3-14b": "qwen3_14b",
+    "qwen2.5-3b": "qwen2_5_3b",
+    "granite-3-2b": "granite_3_2b",
+    "gemma3-4b": "gemma3_4b",
+    "xlstm-125m": "xlstm_125m",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+}
+
+
+def get_config(name: str) -> ArchConfig:
+    name = CLI_ALIASES.get(name, name).replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{name}")
+    return mod.CONFIG
+
+
+def get_reduced(name: str) -> ArchConfig:
+    name = CLI_ALIASES.get(name, name).replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{name}")
+    return mod.REDUCED
+
+
+def all_configs() -> Dict[str, ArchConfig]:
+    return {n: get_config(n) for n in ARCH_IDS}

@@ -1,0 +1,17 @@
+"""The paper's primary contributions: balanced data distribution (binpack)
+and the equivariant tensor-contraction compute core of MACE."""
+from .binpack import (  # noqa: F401
+    balance_metrics,
+    best_fit_decreasing,
+    create_balanced_batches,
+    first_fit_decreasing,
+    fixed_count_batches,
+)
+from .irreps import LSpec, lspec, sh_spec  # noqa: F401
+from .mace import (  # noqa: F401
+    MaceConfig,
+    init_mace,
+    mace_energy,
+    mace_energy_forces,
+    weighted_loss,
+)

@@ -1,0 +1,126 @@
+"""Channelwise tensor product (paper Algorithm 2): the edge-level operation
+
+    A~_{ji,k,l3m3} = sum_{(l1,l2)->l3} R_{ji,k,(l1l2l3)}
+                     sum_{m1,m2} C^{l3m3}_{l1m1,l2m2} Y_{ji,l1m1} h_{j,k,l2m2}
+
+Two host-side implementations (the Pallas kernel lives in
+``repro.kernels.channelwise_tp``):
+
+* ``tp_ref``   — the *baseline*: one dense-CG einsum per (l1,l2,l3) path,
+  mirroring stock e3nn's chain-of-small-kernels structure (Observation 3).
+* ``tp_fused`` — the optimized pure-JAX form: all CG paths flattened into one
+  compile-time sparse table; a single gather → multiply → one matmul.  This
+  is the XLA-level analogue of the paper's fused kernel and also serves as
+  the oracle for the Pallas version.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .cg import cg_nonzeros, real_cg
+from .irreps import LSpec, tp_paths
+
+
+@dataclasses.dataclass(frozen=True)
+class TPSpec:
+    """Static description of a channelwise tensor product."""
+
+    y_spec: LSpec     # spherical harmonics irreps (edge attr)
+    h_spec: LSpec     # node feature irreps (sender)
+    out_spec: LSpec   # output (atomic basis A) irreps
+
+    @property
+    def paths(self) -> List[Tuple[int, int, int]]:
+        return tp_paths(self.y_spec, self.h_spec, self.out_spec)
+
+    @property
+    def n_paths(self) -> int:
+        return len(self.paths)
+
+
+@dataclasses.dataclass(frozen=True)
+class TPTables:
+    """Compile-time sparse CG tables, flattened across all paths."""
+
+    m1: np.ndarray      # [nnz] index into y dim
+    m2: np.ndarray      # [nnz] index into h dim
+    m3: np.ndarray      # [nnz] index into out dim
+    path: np.ndarray    # [nnz] path id (for the radial weight gather)
+    val: np.ndarray     # [nnz]
+    dim_out: int
+    n_paths: int
+
+
+def build_tp_tables(spec: TPSpec) -> TPTables:
+    m1l, m2l, m3l, pl, vl = [], [], [], [], []
+    for p, (l1, l2, l3) in enumerate(spec.paths):
+        o1 = spec.y_spec.slice_for(l1).start
+        o2 = spec.h_spec.slice_for(l2).start
+        o3 = spec.out_spec.slice_for(l3).start
+        for (a, b, c, v) in cg_nonzeros(l1, l2, l3):
+            m1l.append(o1 + a)
+            m2l.append(o2 + b)
+            m3l.append(o3 + c)
+            pl.append(p)
+            vl.append(v)
+    return TPTables(
+        m1=np.asarray(m1l, np.int32),
+        m2=np.asarray(m2l, np.int32),
+        m3=np.asarray(m3l, np.int32),
+        path=np.asarray(pl, np.int32),
+        val=np.asarray(vl, np.float64),
+        dim_out=spec.out_spec.dim,
+        n_paths=spec.n_paths,
+    )
+
+
+def tp_ref(
+    Y: jnp.ndarray,      # [E, dim_y]
+    h_send: jnp.ndarray, # [E, k, dim_h]   (already gathered to edges)
+    R: jnp.ndarray,      # [E, n_paths, k]
+    spec: TPSpec,
+) -> jnp.ndarray:
+    """Baseline: one dense einsum per CG path (e3nn-style op chain)."""
+    E, k = h_send.shape[0], h_send.shape[1]
+    out = jnp.zeros((E, k, spec.out_spec.dim), dtype=h_send.dtype)
+    for p, (l1, l2, l3) in enumerate(spec.paths):
+        C = jnp.asarray(real_cg(l1, l2, l3), dtype=h_send.dtype)
+        y_p = Y[:, spec.y_spec.slice_for(l1)]
+        h_p = h_send[:, :, spec.h_spec.slice_for(l2)]
+        r_p = R[:, p, :]
+        # [E,k,d3] = C[a,b,c] * Y[e,a] * h[e,k,b] * R[e,k]
+        block = jnp.einsum("abc,ea,ekb->ekc", C, y_p, h_p) * r_p[:, :, None]
+        sl = spec.out_spec.slice_for(l3)
+        out = out.at[:, :, sl].add(block)
+    return out
+
+
+def tp_fused(
+    Y: jnp.ndarray,
+    h_send: jnp.ndarray,
+    R: jnp.ndarray,
+    spec: TPSpec,
+    tables: TPTables | None = None,
+) -> jnp.ndarray:
+    """Fused sparse-table implementation: single gather + one matmul."""
+    t = tables or build_tp_tables(spec)
+    dt = h_send.dtype
+    val = jnp.asarray(t.val, dt)
+    yg = Y[:, t.m1]                      # [E, nnz]
+    hg = h_send[:, :, t.m2]              # [E, k, nnz]
+    rg = jnp.swapaxes(R[:, t.path, :], 1, 2)  # [E, k, nnz]
+    contrib = (yg[:, None, :] * val[None, None, :]) * hg * rg
+    scatter = jnp.asarray(
+        _onehot(t.m3, t.dim_out), dt
+    )  # [nnz, dim_out], compile-time constant
+    return contrib @ scatter
+
+
+def _onehot(idx: np.ndarray, depth: int) -> np.ndarray:
+    out = np.zeros((len(idx), depth), np.float64)
+    out[np.arange(len(idx)), idx] = 1.0
+    return out

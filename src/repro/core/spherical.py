@@ -1,0 +1,73 @@
+"""Real spherical harmonics in JAX, evaluated as fitted polynomials.
+
+The coefficient tables come from :func:`repro.core.cg.real_sh_polys`, which
+derives them from the *same* complex→real construction as the CG tensors, so
+model equivariance holds by construction (verified in tests via Wigner-D
+matrices that are themselves derived from these SH).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from .cg import monomial_exponents, real_sh_polys
+
+
+def spherical_harmonics(
+    lmax: int, vectors: jnp.ndarray, normalize: bool = True, eps: float = 1e-9
+) -> jnp.ndarray:
+    """Evaluate real SH for l = 0..lmax.
+
+    Args:
+      lmax: maximum order.
+      vectors: [..., 3] (need not be unit length if ``normalize``).
+      normalize: safe-normalise inputs (padding rows of zeros are fine —
+        they evaluate to Y(z_hat)-like garbage that callers mask out).
+
+    Returns:
+      [..., sum(2l+1)] concatenated l-blocks, ascending l.
+    """
+    v = vectors
+    if normalize:
+        # clamp BEFORE the sqrt: d(sqrt)/dx at 0 is inf, and padded edges have
+        # exactly-zero vectors — grad must flow to the clamp, not the sqrt.
+        n2 = jnp.sum(v * v, axis=-1, keepdims=True)
+        n = jnp.sqrt(jnp.maximum(n2, eps * eps))
+        v = v / n
+    x, y, z = v[..., 0], v[..., 1], v[..., 2]
+
+    blocks = []
+    for l in range(lmax + 1):
+        coeffs = jnp.asarray(np.asarray(real_sh_polys(l)), dtype=vectors.dtype)
+        monos = jnp.stack(
+            [
+                _int_pow(x, a) * _int_pow(y, b) * _int_pow(z, c)
+                for (a, b, c) in monomial_exponents(l)
+            ],
+            axis=-1,
+        )  # [..., n_mono]
+        blocks.append(monos @ coeffs.T)  # [..., 2l+1]
+    return jnp.concatenate(blocks, axis=-1)
+
+
+def _int_pow(t: jnp.ndarray, p: int) -> jnp.ndarray:
+    if p == 0:
+        return jnp.ones_like(t)
+    out = t
+    for _ in range(p - 1):
+        out = out * t
+    return out
+
+
+def sh_dim(lmax: int) -> int:
+    return sum(2 * l + 1 for l in range(lmax + 1))
+
+
+def sh_block_slices(lmax: int) -> Sequence[slice]:
+    out, off = [], 0
+    for l in range(lmax + 1):
+        out.append(slice(off, off + 2 * l + 1))
+        off += 2 * l + 1
+    return out

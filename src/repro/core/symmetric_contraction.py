@@ -1,0 +1,147 @@
+"""Symmetric tensor contraction (paper Algorithm 3): raise the atomic basis
+A_{i,k,lm} to correlation order nu, producing higher-body-order features
+
+    B_{i,k,LM} = sum_{nu=1}^{nu_max} sum_eta W^{(nu)}_{z_i,k,eta}
+                 sum_{m1..m_nu} U^{(L,nu)}[m1..m_nu, M, eta] prod_x A_{i,k,m_x}
+
+with the generalized Clebsch-Gordan U tensors of :func:`repro.core.cg.u_tensor`.
+
+Implementations:
+* ``symcon_ref``   — dense-U einsums, one per (L, nu): the e3nn-style baseline.
+* ``symcon_fused`` — compile-time sparse U tables, single fused
+  gather→product→matmul per (L, nu).  Oracle for the Pallas kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .cg import u_tensor, u_tensor_nonzeros
+from .irreps import LSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class SymConSpec:
+    in_spec: LSpec         # irreps of A (e.g. 0+1+2+3)
+    out_spec: LSpec        # irreps of B (e.g. 0+1)
+    nu_max: int            # max correlation order (paper: 2; MACE default 3)
+
+    def terms(self) -> List[Tuple[int, int]]:
+        """All (L, nu) pairs with a nonempty path space."""
+        out = []
+        for L in self.out_spec:
+            for nu in range(1, self.nu_max + 1):
+                U = u_tensor(tuple(self.in_spec.ls), L, nu)
+                if U.shape[-1] > 0:
+                    out.append((L, nu))
+        return out
+
+    def n_paths(self, L: int, nu: int) -> int:
+        return u_tensor(tuple(self.in_spec.ls), L, nu).shape[-1]
+
+    def weight_shapes(self, n_species: int, channels: int):
+        """Parameter shapes: {(L, nu): [n_species, channels, n_paths]}."""
+        return {
+            (L, nu): (n_species, channels, self.n_paths(L, nu))
+            for (L, nu) in self.terms()
+        }
+
+
+def init_symcon_weights(
+    key: jax.Array, spec: SymConSpec, n_species: int, channels: int, dtype=jnp.float32
+) -> Dict[str, jnp.ndarray]:
+    params = {}
+    shapes = spec.weight_shapes(n_species, channels)
+    keys = jax.random.split(key, max(len(shapes), 1))
+    for i, ((L, nu), shp) in enumerate(sorted(shapes.items())):
+        params[f"w_L{L}_nu{nu}"] = jax.random.normal(keys[i], shp, dtype) / np.sqrt(
+            shp[-1]
+        )
+    return params
+
+
+def symcon_ref(
+    A: jnp.ndarray,            # [N, k, dim_in]
+    species: jnp.ndarray,      # [N] int
+    weights: Dict[str, jnp.ndarray],
+    spec: SymConSpec,
+) -> jnp.ndarray:
+    """Dense-U baseline.  Returns B: [N, k, dim_out]."""
+    N, k, _ = A.shape
+    dt = A.dtype
+    out = jnp.zeros((N, k, spec.out_spec.dim), dtype=dt)
+    for (L, nu) in spec.terms():
+        U = jnp.asarray(u_tensor(tuple(spec.in_spec.ls), L, nu), dt)
+        W = weights[f"w_L{L}_nu{nu}"][species]  # [N, k, n_paths]
+        if nu == 1:
+            bl = jnp.einsum("aMe,nka,nke->nkM", U, A, W)
+        elif nu == 2:
+            bl = jnp.einsum("abMe,nka,nkb,nke->nkM", U, A, A, W)
+        elif nu == 3:
+            bl = jnp.einsum("abcMe,nka,nkb,nkc,nke->nkM", U, A, A, A, W)
+        else:
+            raise NotImplementedError(nu)
+        out = out.at[:, :, spec.out_spec.slice_for(L)].add(bl)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class SymConTables:
+    """Sparse U tables per (L, nu)."""
+
+    entries: Tuple[Tuple[int, int, np.ndarray, np.ndarray, np.ndarray, np.ndarray], ...]
+    # each: (L, nu, idx [nnz, nu], M [nnz], eta [nnz], val [nnz])
+
+
+def build_symcon_tables(spec: SymConSpec) -> SymConTables:
+    entries = []
+    for (L, nu) in spec.terms():
+        idx, M, eta, val = u_tensor_nonzeros(tuple(spec.in_spec.ls), L, nu)
+        entries.append((L, nu, idx, M, eta, val))
+    return SymConTables(tuple(entries))
+
+
+def symcon_fused(
+    A: jnp.ndarray,
+    species: jnp.ndarray,
+    weights: Dict[str, jnp.ndarray],
+    spec: SymConSpec,
+    tables: SymConTables | None = None,
+) -> jnp.ndarray:
+    """Fused sparse-table implementation."""
+    t = tables or build_symcon_tables(spec)
+    N, k, _ = A.shape
+    dt = A.dtype
+    out = jnp.zeros((N, k, spec.out_spec.dim), dtype=dt)
+    for (L, nu, idx, M, eta, val) in t.entries:
+        W = weights[f"w_L{L}_nu{nu}"][species]          # [N, k, n_paths]
+        prod = A[:, :, idx[:, 0]]
+        for x in range(1, nu):
+            prod = prod * A[:, :, idx[:, x]]             # [N, k, nnz]
+        wg = W[:, :, eta]                                # [N, k, nnz]
+        contrib = prod * wg * jnp.asarray(val, dt)
+        scatter = jnp.asarray(_onehot(M, 2 * L + 1), dt)  # [nnz, 2L+1]
+        bl = contrib @ scatter
+        out = out.at[:, :, spec.out_spec.slice_for(L)].add(bl)
+    return out
+
+
+def _onehot(idx: np.ndarray, depth: int) -> np.ndarray:
+    out = np.zeros((len(idx), depth), np.float64)
+    out[np.arange(len(idx)), idx] = 1.0
+    return out
+
+
+def symcon_flops(spec: SymConSpec, N: int, k: int) -> int:
+    """Useful-FLOP estimate for the fused scheme (roofline bookkeeping)."""
+    t = build_symcon_tables(spec)
+    total = 0
+    for (L, nu, idx, M, eta, val) in t.entries:
+        nnz = len(val)
+        total += N * k * nnz * (nu - 1 + 2)      # products + weight + val
+        total += N * k * nnz * (2 * L + 1) * 2   # scatter matmul
+    return total

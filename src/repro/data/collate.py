@@ -1,0 +1,93 @@
+"""Static-shape collation of molecular graphs into padded device batches.
+
+A *bin* (the paper's minibatch) is collated to fixed node/edge/graph counts
+so every training step hits the same compiled program regardless of which
+graphs Algorithm 1 placed in the bin — padding is the memory objective the
+packer minimises (Eq. 4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .molecules import Molecule
+
+
+@dataclasses.dataclass(frozen=True)
+class BinShape:
+    """Static shapes for one bin; derived from capacity once per run."""
+
+    max_nodes: int           # == bin capacity C
+    max_edges: int           # C * edge_factor
+    max_graphs: int
+
+    @staticmethod
+    def for_capacity(capacity: int, edge_factor: int = 24, max_graphs: Optional[int] = None):
+        return BinShape(
+            max_nodes=capacity,
+            max_edges=capacity * edge_factor,
+            max_graphs=max_graphs or max(8, capacity // 8),
+        )
+
+
+def collate_bin(
+    mols: Sequence[Molecule], shape: BinShape, *, strict: bool = False
+) -> Dict[str, np.ndarray]:
+    """Concatenate graphs block-diagonally (Fig. 3) and pad to ``shape``."""
+    N, E, G = shape.max_nodes, shape.max_edges, shape.max_graphs
+    n_tot = sum(m.n_atoms for m in mols)
+    e_tot = sum(m.n_edges for m in mols)
+    if n_tot > N or len(mols) > G:
+        raise ValueError(f"bin overflow: nodes {n_tot}/{N} graphs {len(mols)}/{G}")
+    if e_tot > E:
+        if strict:
+            raise ValueError(f"edge overflow: {e_tot}/{E}")
+        # drop whole trailing graphs until it fits (never silently truncate edges)
+        kept: List[Molecule] = []
+        acc = 0
+        for m in mols:
+            if acc + m.n_edges <= E:
+                kept.append(m)
+                acc += m.n_edges
+        mols = kept
+
+    species = np.zeros(N, np.int32)
+    positions = np.zeros((N, 3), np.float32)
+    node_mask = np.zeros(N, bool)
+    senders = np.zeros(E, np.int32)
+    receivers = np.zeros(E, np.int32)
+    edge_mask = np.zeros(E, bool)
+    graph_id = np.zeros(N, np.int32)
+    energy = np.zeros(G, np.float32)
+    forces = np.zeros((N, 3), np.float32)
+
+    n_off = e_off = 0
+    for g, m in enumerate(mols):
+        n, e = m.n_atoms, m.n_edges
+        species[n_off : n_off + n] = m.species
+        positions[n_off : n_off + n] = m.positions
+        node_mask[n_off : n_off + n] = True
+        graph_id[n_off : n_off + n] = g
+        senders[e_off : e_off + e] = m.senders + n_off
+        receivers[e_off : e_off + e] = m.receivers + n_off
+        edge_mask[e_off : e_off + e] = True
+        energy[g] = m.energy
+        forces[n_off : n_off + n] = m.forces
+        n_off += n
+        e_off += e
+
+    # padded nodes join a dedicated spare graph slot (zero weight in loss)
+    graph_id[n_off:] = G - 1 if len(mols) < G else G - 1
+    return {
+        "species": species,
+        "positions": positions,
+        "node_mask": node_mask,
+        "senders": senders,
+        "receivers": receivers,
+        "edge_mask": edge_mask,
+        "graph_id": graph_id,
+        "energy": energy,
+        "forces": forces,
+    }

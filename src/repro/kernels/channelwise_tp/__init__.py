@@ -1,0 +1,1 @@
+from .ops import interaction_pallas, tp_pallas, block_edges  # noqa: F401

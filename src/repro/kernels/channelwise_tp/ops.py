@@ -1,0 +1,126 @@
+"""Public wrappers for the fused channelwise-TP(+scatter) kernel.
+
+``block_edges``      — host-side (numpy) edge blocking: sort by receiver,
+                       group into atom tiles, pad each tile's edge list.
+                       Runs in the data pipeline alongside Algorithm 1.
+``interaction_pallas`` — full fused TP+scatter given blocked edges.
+``tp_pallas``        — TP-only drop-in for ``tp_fused`` (scatter outside);
+                       used by the MACE model's ``impl="pallas"`` mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.channelwise_tp import TPSpec, TPTables, build_tp_tables
+
+from .kernel import tp_scatter_pallas_raw
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeBlocking:
+    """Static edge blocking for one batch shape."""
+
+    perm: np.ndarray         # [E_p] -> original edge id (padding slots -> 0)
+    valid: np.ndarray        # [E_p] bool
+    local_rcv: np.ndarray    # [E_p] receiver index within its atom tile
+    n_atom_tiles: int
+    block_n: int
+    epb: int                 # padded edges per atom tile
+
+
+def block_edges(
+    receivers: np.ndarray,
+    edge_mask: np.ndarray,
+    n_atoms: int,
+    *,
+    block_n: int = 32,
+    block_e: int = 128,
+) -> EdgeBlocking:
+    receivers = np.asarray(receivers)
+    edge_mask = np.asarray(edge_mask).astype(bool)
+    n_tiles = -(-n_atoms // block_n)
+    eids = [[] for _ in range(n_tiles)]
+    for e in np.nonzero(edge_mask)[0]:
+        eids[int(receivers[e]) // block_n].append(int(e))
+    epb = max((len(x) for x in eids), default=0)
+    epb = max(block_e, -(-epb // block_e) * block_e)
+
+    perm = np.zeros((n_tiles * epb,), np.int64)
+    valid = np.zeros((n_tiles * epb,), bool)
+    local = np.zeros((n_tiles * epb,), np.int32)
+    for t, lst in enumerate(eids):
+        for s, e in enumerate(lst):
+            perm[t * epb + s] = e
+            valid[t * epb + s] = True
+            local[t * epb + s] = int(receivers[e]) - t * block_n
+    return EdgeBlocking(perm, valid, local, n_tiles, block_n, epb)
+
+
+def interaction_pallas(
+    Y: jnp.ndarray,          # [E, d_sh]
+    h_send: jnp.ndarray,     # [E, k, d_h]
+    R: jnp.ndarray,          # [E, n_paths, k]
+    blocking: EdgeBlocking,
+    spec: TPSpec,
+    tables: TPTables | None = None,
+    *,
+    n_atoms: int,
+    block_e: int = 128,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Fused TP + scatter. Returns A [n_atoms, k, d_out]."""
+    t = tables or build_tp_tables(spec)
+    perm = jnp.asarray(blocking.perm)
+    Y_b = Y[perm]                                 # [E_p, d_sh]
+    h_b = jnp.swapaxes(h_send[perm], 1, 2)        # [E_p, d_h, k]
+    R_b = R[perm]                                 # [E_p, n_paths, k] (already k-minor)
+    lr = jnp.asarray(blocking.local_rcv)[:, None]
+    em = jnp.asarray(blocking.valid, h_b.dtype)[:, None]
+
+    A_t = tp_scatter_pallas_raw(
+        Y_b, h_b, R_b, lr, em, spec, t,
+        n_atom_tiles=blocking.n_atom_tiles,
+        block_n=blocking.block_n,
+        block_e=min(block_e, blocking.epb),
+        interpret=interpret,
+    )                                             # [tiles*block_n, d_out, k]
+    A = jnp.swapaxes(A_t, 1, 2)[:n_atoms]
+    return A
+
+
+def tp_pallas(
+    Y: jnp.ndarray,
+    h_send: jnp.ndarray,
+    R: jnp.ndarray,
+    spec: TPSpec,
+    tables: TPTables | None = None,
+    *,
+    block_e: int = 128,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """TP-only drop-in for ``tp_fused`` (identity 'scatter': each edge is its
+    own segment).  Lets the MACE model run impl="pallas" without changing its
+    aggregation path; the fully fused variant is ``interaction_pallas``."""
+    t = tables or build_tp_tables(spec)
+    E, k = h_send.shape[0], h_send.shape[1]
+    pad = (-E) % block_e
+    Y_b = jnp.pad(Y, ((0, pad), (0, 0)))
+    h_b = jnp.pad(jnp.swapaxes(h_send, 1, 2), ((0, pad), (0, 0), (0, 0)))
+    R_b = jnp.pad(R, ((0, pad), (0, 0), (0, 0)))  # [E_p, n_paths, k] (k-minor)
+    E_p = E + pad
+    # one "atom" tile per edge block; local receiver = position in block
+    n_tiles = E_p // block_e
+    lr = jnp.tile(jnp.arange(block_e, dtype=jnp.int32), n_tiles)[:, None]
+    em = jnp.ones((E_p, 1), h_b.dtype)
+
+    A_t = tp_scatter_pallas_raw(
+        Y_b, h_b, R_b, lr, em, spec, t,
+        n_atom_tiles=n_tiles, block_n=block_e, block_e=block_e,
+        interpret=interpret,
+    )                                             # [E_p, d_out, k]
+    return jnp.swapaxes(A_t, 1, 2)[:E]

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the fused channelwise-TP(+scatter) kernel: the
+per-path dense-CG einsum chain (e3nn-style) followed by segment_sum."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.channelwise_tp import TPSpec, tp_ref
+
+
+def tp_reference(Y, h_send, R, spec: TPSpec) -> jnp.ndarray:
+    return tp_ref(Y, h_send, R, spec)
+
+
+def interaction_reference(
+    Y, h_send, R, receivers, edge_mask, n_atoms: int, spec: TPSpec
+) -> jnp.ndarray:
+    msgs = tp_ref(Y, h_send, R, spec)
+    msgs = msgs * edge_mask.astype(msgs.dtype)[:, None, None]
+    return jax.ops.segment_sum(msgs, receivers, n_atoms)

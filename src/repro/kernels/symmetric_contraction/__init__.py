@@ -1,0 +1,1 @@
+from .ops import symcon_pallas  # noqa: F401

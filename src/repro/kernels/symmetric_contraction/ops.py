@@ -1,0 +1,44 @@
+"""jit'd public wrapper for the fused symmetric-contraction kernel.
+
+Handles layout (model uses [N, k, d]; kernel wants k minor), atom-tile
+padding, and species->weight gathering.  Drop-in replacement for
+``symcon_fused`` / ``symcon_ref`` (same signature modulo static args).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+from repro.core.symmetric_contraction import SymConSpec, SymConTables, build_symcon_tables
+
+from .kernel import gather_weights, symcon_pallas_raw
+
+
+def symcon_pallas(
+    A: jnp.ndarray,                 # [N, k, d_in]
+    species: jnp.ndarray,           # [N]
+    weights: Dict[str, jnp.ndarray],
+    spec: SymConSpec,
+    tables: SymConTables | None = None,
+    *,
+    block_n: int = 32,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    t = tables or build_symcon_tables(spec)
+    N, k, d_in = A.shape
+    pad = (-N) % block_n
+    Wg = gather_weights(weights, species, spec, t)  # [N, k, P]
+
+    A_t = jnp.swapaxes(A, 1, 2)                     # [N, d_in, k]
+    W_t = jnp.swapaxes(Wg, 1, 2)                    # [N, P, k]
+    if pad:
+        A_t = jnp.pad(A_t, ((0, pad), (0, 0), (0, 0)))
+        W_t = jnp.pad(W_t, ((0, pad), (0, 0), (0, 0)))
+
+    B_t = symcon_pallas_raw(
+        A_t, W_t, spec, t, block_n=block_n, interpret=interpret
+    )                                               # [N+pad, d_out, k]
+    if pad:
+        B_t = B_t[:N]
+    return jnp.swapaxes(B_t, 1, 2)                  # [N, k, d_out]

@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the fused symmetric-contraction kernel.
+
+The oracle is the dense-U einsum of :func:`repro.core.symmetric_contraction.
+symcon_ref` — i.e. the mathematical definition, NOT the sparse-table
+implementation (which is itself an optimized form and is tested against this
+same oracle)."""
+from repro.core.symmetric_contraction import symcon_ref as symcon_reference  # noqa: F401

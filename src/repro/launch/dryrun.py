@@ -1,0 +1,373 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, capture memory/cost analysis + collective traffic.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3_14b --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --arch mace_cfm --mesh multi
+
+Results append incrementally to experiments/dryrun_results.json (cells
+already present are skipped unless --force), so the full sweep is resumable.
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.lm_train_step import (
+    make_lm_train_step,
+    make_lm_train_step_ddp,
+    opt_state_specs,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import (
+    LM_SHAPES,
+    MACE_SHAPES,
+    lm_batch_specs,
+    lm_decode_state_specs,
+    lm_param_specs,
+    sds,
+    shape_skip_reason,
+)
+from repro.launch.sharding import (
+    lm_batch_shardings,
+    lm_param_shardings,
+    lm_param_shardings_inference,
+    lm_state_shardings,
+    mace_batch_shardings,
+    mace_param_shardings,
+    tp_enabled,
+)
+from repro.models.model import decode_step, forward_prefill, set_activation_sharding
+from repro.roofline.analytic import lm_cell_cost, mace_cell_cost
+from repro.roofline.analysis import RECOMMENDATION, roofline_terms
+from repro.roofline.hlo import collective_bytes_from_hlo
+
+RESULTS_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun_results.json"
+)
+
+
+def _attach(tree_specs, tree_shardings):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        tree_specs,
+        tree_shardings,
+    )
+
+
+def build_lm_cell(arch: str, shape_name: str, mesh, overrides: Dict[str, Any]):
+    import dataclasses
+    cfg = get_config(arch)
+    shape = LM_SHAPES[shape_name]
+    kind = shape["kind"]
+    if kind in ("prefill", "decode"):
+        # deployment reality: serving keeps bf16 weights, TP-resident
+        cfg = dataclasses.replace(cfg, param_dtype=jnp.bfloat16)
+    model_overrides = {
+        k: v for k, v in (overrides or {}).items() if not k.startswith("_")
+    }
+    if model_overrides:
+        cfg = dataclasses.replace(cfg, **model_overrides)
+
+    p_specs = lm_param_specs(cfg)
+    tp = overrides.get("_tp", tp_enabled(cfg)) if overrides else tp_enabled(cfg)
+    if kind in ("prefill", "decode"):
+        p_shard = lm_param_shardings_inference(mesh, p_specs, tp=tp)
+    else:
+        p_shard = lm_param_shardings(
+            mesh, p_specs, tp=tp, mode=(overrides or {}).get("_mode")
+        )
+    p_in = _attach(p_specs, p_shard)
+
+    if kind == "train":
+        if (overrides or {}).get("_ddp"):
+            # manual-DP (shard_map): params/opt replicated, one grad psum
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            rep = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(
+                    s.shape, s.dtype, sharding=NamedSharding(mesh, P())
+                ),
+                p_specs,
+            )
+            p_in = rep
+            p_shard = jax.tree.map(lambda _: NamedSharding(mesh, P()), p_specs)
+        m_specs, v_specs = opt_state_specs(p_specs)
+        m_in = _attach(m_specs, p_shard)
+        v_in = _attach(v_specs, p_shard)
+        b_specs = lm_batch_specs(cfg, shape)
+        b_in = _attach(b_specs, lm_batch_shardings(mesh, b_specs))
+        step_in = sds((), jnp.int32)
+        if (overrides or {}).get("_ddp"):
+            fn = make_lm_train_step_ddp(
+                cfg, mesh, compress=bool((overrides or {}).get("_compress"))
+            )
+        else:
+            fn = make_lm_train_step(
+                cfg, micro_batches=(overrides or {}).get("_micro", 1)
+            )
+        jitted = jax.jit(fn, donate_argnums=(0, 1, 2))
+        args = (p_in, m_in, v_in, b_in, step_in)
+    elif kind == "prefill":
+        B, S = shape["batch"], shape["seq"]
+        tok_in = sds((B, S), jnp.int32, lm_batch_shardings(mesh, {"t": sds((B, S), jnp.int32)})["t"])
+        args = (p_in, tok_in)
+        if cfg.n_prefix_embeds:
+            pe = sds((B, cfg.n_prefix_embeds, cfg.d_model), jnp.float32)
+            pe_in = _attach({"p": pe}, lm_batch_shardings(mesh, {"p": pe}))["p"]
+            args = (p_in, tok_in, pe_in)
+        jitted = jax.jit(lambda p, t, *rest: forward_prefill(p, cfg, t, *rest))
+    else:  # decode
+        B, S = shape["batch"], shape["seq"]
+        s_specs = lm_decode_state_specs(cfg, B, S)
+        s_in = _attach(s_specs, lm_state_shardings(mesh, s_specs, B))
+        tok_in = sds((B, 1), jnp.int32, lm_batch_shardings(mesh, {"t": sds((B, 1), jnp.int32)})["t"])
+        pos_in = sds((), jnp.int32)
+        jitted = jax.jit(
+            lambda p, s, t, pos: decode_step(p, s, cfg, t, pos),
+            donate_argnums=(1,),
+        )
+        args = (p_in, s_in, tok_in, pos_in)
+    cost = lm_cell_cost(cfg, shape)
+    return jitted, args, cost, "bf16"
+
+
+def build_mace_cell(mesh, shape_name: str = "train_bins"):
+    from repro.configs.mace_cfm import CONFIG as mcfg
+    from repro.core.mace import weighted_loss, init_mace
+    from repro.train.optimizer import adamw, apply_updates
+
+    spec = MACE_SHAPES[shape_name]
+    cap, ef = spec["capacity"], spec["edge_factor"]
+    n_dp = 1
+    for a in mesh.axis_names:
+        if a != "model":
+            n_dp *= mesh.shape[a]
+    nb = n_dp  # one bin per DP rank (the paper's DDP layout)
+    N, E, G = cap, cap * ef, 256
+
+    batch_one = {
+        "species": sds((nb, N), jnp.int32),
+        "positions": sds((nb, N, 3), jnp.float32),
+        "node_mask": sds((nb, N), jnp.bool_),
+        "senders": sds((nb, E), jnp.int32),
+        "receivers": sds((nb, E), jnp.int32),
+        "edge_mask": sds((nb, E), jnp.bool_),
+        "graph_id": sds((nb, N), jnp.int32),
+        "energy": sds((nb, G), jnp.float32),
+        "forces": sds((nb, N, 3), jnp.float32),
+    }
+    p_specs = jax.eval_shape(lambda k: init_mace(k, mcfg), jax.random.PRNGKey(0))
+    p_shard = mace_param_shardings(mesh, p_specs)
+    p_in = _attach(p_specs, p_shard)
+    m_in, v_in = (_attach(jax.tree.map(lambda s: sds(s.shape, jnp.float32), p_specs), p_shard),) * 2
+    b_in = _attach(batch_one, mace_batch_shardings(mesh, batch_one))
+    opt = adamw(5e-3)
+
+    def step(params, m, v, batch, step_idx):
+        def loss_fn(p):
+            losses = jax.vmap(
+                lambda b: weighted_loss(p, mcfg, b, G)[0]
+            )(batch)
+            return jnp.mean(losses)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        updates, new_state = opt.update(grads, {"m": m, "v": v}, params, step_idx)
+        params = apply_updates(params, updates)
+        return params, new_state["m"], new_state["v"], loss
+
+    jitted = jax.jit(step, donate_argnums=(0, 1, 2))
+    args = (p_in, m_in, v_in, b_in, sds((), jnp.int32))
+    cost = mace_cell_cost(mcfg, nb, cap, ef)
+    return jitted, args, cost, "fp32"
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, overrides=None) -> Dict[str, Any]:
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "ok": False,
+    }
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    chips = mesh.size
+    rec["chips"] = chips
+
+    if arch != "mace_cfm":
+        cfg = get_config(arch)
+        reason = shape_skip_reason(cfg, shape_name)
+        if reason:
+            rec.update(ok=True, skipped=reason)
+            return rec
+
+    t0 = time.perf_counter()
+    try:
+        if arch == "mace_cfm":
+            jitted, args, cost, dtype = build_mace_cell(mesh, shape_name)
+        else:
+            jitted, args, cost, dtype = build_lm_cell(
+                arch, shape_name, mesh, overrides or {}
+            )
+            # pin the residual stream to pure-DP sharding (B > 1 only)
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.launch.mesh import dp_axes
+            B = LM_SHAPES[shape_name]["batch"]
+            if B > 1 and not (overrides or {}).get("_no_act_constraint") and not (
+                overrides or {}
+            ).get("_ddp"):
+                set_activation_sharding(
+                    NamedSharding(mesh, P(dp_axes(mesh), None, None))
+                )
+            if (overrides or {}).get("_ep"):
+                from repro.models.moe import set_ep_sharding
+                set_ep_sharding(
+                    NamedSharding(mesh, P("model", None, None)),
+                    NamedSharding(mesh, P("model", None, None))
+                    if (overrides or {}).get("_ep_weights")
+                    else None,
+                )
+        with mesh:
+            lowered = jitted.lower(*args)
+            rec["lower_s"] = round(time.perf_counter() - t0, 1)
+            t1 = time.perf_counter()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.perf_counter() - t1, 1)
+
+            ma = compiled.memory_analysis()
+            rec["memory_per_device"] = {
+                "argument_gb": ma.argument_size_in_bytes / 1e9,
+                "output_gb": ma.output_size_in_bytes / 1e9,
+                "temp_gb": ma.temp_size_in_bytes / 1e9,
+                "alias_gb": ma.alias_size_in_bytes / 1e9,
+                "peak_gb": (
+                    ma.argument_size_in_bytes
+                    + ma.output_size_in_bytes
+                    + ma.temp_size_in_bytes
+                    - ma.alias_size_in_bytes
+                ) / 1e9,
+            }
+            ca = compiled.cost_analysis() or {}
+            rec["cost_analysis"] = {
+                "flops": float(ca.get("flops", -1.0)),
+                "bytes_accessed": float(ca.get("bytes accessed", -1.0)),
+                "note": "trip-count-blind for scanned programs; see analytic",
+            }
+            coll = collective_bytes_from_hlo(compiled.as_text())
+            rec["collectives_per_device"] = coll
+
+        rec["analytic"] = cost
+        rl = roofline_terms(
+            flops=cost["flops"],
+            hbm_bytes=cost["hbm_bytes"],
+            collective_bytes_per_device=coll.get("total", 0.0),
+            chips=chips,
+            dtype=dtype,
+        )
+        rl["model_flops_ratio"] = (
+            cost["model_flops"] / cost["flops"] if cost["flops"] else 0.0
+        )
+        rl["recommendation"] = RECOMMENDATION[rl["dominant"]]
+        rec["roofline"] = rl
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    finally:
+        set_activation_sharding(None)
+        from repro.models.moe import set_ep_sharding
+        set_ep_sharding(None)
+    rec["wall_s"] = round(time.perf_counter() - t0, 1)
+    return rec
+
+
+def load_results() -> Dict[str, Any]:
+    if os.path.exists(RESULTS_PATH):
+        with open(RESULTS_PATH) as f:
+            return json.load(f)
+    return {}
+
+
+def save_results(results: Dict[str, Any]) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(RESULTS_PATH)), exist_ok=True)
+    with open(RESULTS_PATH, "w") as f:
+        json.dump(results, f, indent=1, default=float)
+
+
+def cell_key(arch, shape, mesh):
+    return f"{arch}|{shape}|{mesh}"
+
+
+# best-known per-arch training overrides from the §Perf hillclimb
+OPTIMIZED_OVERRIDES = {
+    "xlstm_125m": {"_ddp": True, "_compress": True},
+    "granite_3_2b": {"_mode": "fsdp"},
+    "qwen2_5_3b": {"_mode": "fsdp"},
+    "musicgen_large": {"_mode": "fsdp"},
+    "gemma3_4b": {"_mode": "fsdp"},
+    "qwen3_moe_235b_a22b": {"_ep": True, "_ep_weights": True},
+    "mixtral_8x22b": {"_ep": True, "_ep_weights": True},
+    "jamba_v0_1_52b": {"_ep": True, "_ep_weights": True},
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default=None, choices=[None, "single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument(
+        "--opt", action="store_true",
+        help="apply best-known hillclimb overrides; results keyed '|opt'",
+    )
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ARCH_IDS + ["mace_cfm"]
+    meshes = [args.mesh] if args.mesh else ["single", "multi"]
+
+    results = load_results()
+    for arch in archs:
+        shapes = (
+            [args.shape]
+            if args.shape
+            else (list(MACE_SHAPES) if arch == "mace_cfm" else list(LM_SHAPES))
+        )
+        for shape in shapes:
+            for mesh_name in meshes:
+                key = cell_key(arch, shape, mesh_name)
+                overrides = None
+                if args.opt:
+                    overrides = OPTIMIZED_OVERRIDES.get(arch)
+                    if not overrides or shape.startswith(("decode", "prefill", "long")):
+                        continue  # optimized overrides target train cells
+                    key += "|opt"
+                if key in results and results[key].get("ok") and not args.force:
+                    print(f"[skip cached] {key}")
+                    continue
+                print(f"[run] {key}", flush=True)
+                rec = run_cell(arch, shape, mesh_name, overrides=overrides)
+                if args.opt:
+                    rec["overrides"] = overrides
+                results[key] = rec
+                save_results(results)
+                status = "OK" if rec.get("ok") else f"FAIL ({rec.get('error')})"
+                if rec.get("skipped"):
+                    status = "SKIP"
+                print(
+                    f"  -> {status} wall={rec.get('wall_s')}s "
+                    f"peak={rec.get('memory_per_device', {}).get('peak_gb', 0):.2f}GB "
+                    f"coll={rec.get('collectives_per_device', {}).get('total', 0)/1e6:.1f}MB/dev",
+                    flush=True,
+                )
+
+
+if __name__ == "__main__":
+    main()

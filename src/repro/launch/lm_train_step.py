@@ -1,0 +1,137 @@
+"""LM train step: value_and_grad + AdamW, microbatch-accumulation option.
+
+``micro_batches > 1`` splits the global batch along B and lax.scan-s
+value_and_grad over the slices, accumulating fp32 grads — the activation
+peak shrinks by the factor, at the cost of one grads-sized buffer.  This is
+a first-class §Perf lever for memory-bound train cells.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import ArchConfig, forward_train
+from repro.train.optimizer import adamw, apply_updates
+
+
+def make_lm_train_step(cfg: ArchConfig, lr: float = 3e-4, micro_batches: int = 1):
+    opt = adamw(lr, weight_decay=0.1)
+
+    def loss_fn(params, batch):
+        loss, metrics = forward_train(params, cfg, batch)
+        return loss, metrics
+
+    def grads_of(params, batch):
+        if micro_batches == 1:
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+            return loss, grads
+
+        def split(t):
+            B = t.shape[0]
+            assert B % micro_batches == 0
+            return t.reshape(micro_batches, B // micro_batches, *t.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        def body(carry, mb):
+            loss_acc, gacc = carry
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, mb
+            )
+            gacc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / micro_batches, gacc, grads
+            )
+            return (loss_acc + loss / micro_batches, gacc), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32), g0), micro)
+        return loss, grads
+
+    def step(params, m, v, batch, step_idx):
+        loss, grads = grads_of(params, batch)
+        updates, new_state = opt.update(grads, {"m": m, "v": v}, params, step_idx)
+        params = apply_updates(params, updates)
+        return params, new_state["m"], new_state["v"], loss
+
+    return step
+
+
+def opt_state_specs(param_specs):
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return jax.tree.map(f32, param_specs), jax.tree.map(f32, param_specs)
+
+
+def make_lm_train_step_ddp(
+    cfg: ArchConfig, mesh, lr: float = 3e-4, compress: bool = False
+):
+    """Manual-DP (shard_map) train step for small recurrent models.
+
+    Motivation (EXPERIMENTS.md §Perf, xlstm): under GSPMD auto-partitioning,
+    the gradient of a weight closed over by a per-timestep scan (the sLSTM
+    recurrent matrix) is all-reduced EVERY timestep — 4096 x 2.4 MB x layers
+    per step.  Inside shard_map everything is shard-local; grads are psum'd
+    exactly once after the backward pass — the mathematically identical DDP
+    schedule the paper's PyTorch baseline uses.  ``compress=True`` runs the
+    int8 + shared-scale all-reduce (repro.train.compression), quartering the
+    payload (error feedback is carried by the caller for exactness; here the
+    quantisation noise is the documented trade-off)."""
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.train.compression import compressed_psum
+    from .mesh import dp_axes
+
+    dp = dp_axes(mesh)
+    opt = adamw(lr, weight_decay=0.1)
+    axis = dp[-1] if len(dp) == 1 else dp
+
+    def local_step(params, m, v, batch, step_idx):
+        def loss_fn(p):
+            return forward_train(p, cfg, batch)[0]
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        if compress:
+            grads = jax.tree.map(
+                lambda g: compressed_psum(g.astype(jnp.float32), axis), grads
+            )
+            loss = jax.lax.pmean(loss, axis)
+        else:
+            grads = jax.tree.map(
+                lambda g: jax.lax.pmean(g.astype(jnp.float32), axis), grads
+            )
+            loss = jax.lax.pmean(loss, axis)
+        updates, new_state = opt.update(grads, {"m": m, "v": v}, params, step_idx)
+        params = apply_updates(params, updates)
+        return params, new_state["m"], new_state["v"], loss
+
+    rep = jax.tree.map(lambda _: P(), {"_": 0})["_"]  # replicated spec
+
+    def specs_like(tree, spec):
+        return jax.tree.map(lambda _: spec, tree)
+
+    def step(params, m, v, batch, step_idx):
+        batch_specs = jax.tree.map(lambda _: P(dp), batch)
+        return shard_map(
+            local_step,
+            mesh=mesh,
+            in_specs=(
+                specs_like(params, P()),
+                specs_like(m, P()),
+                specs_like(v, P()),
+                batch_specs,
+                P(),
+            ),
+            out_specs=(
+                specs_like(params, P()),
+                specs_like(m, P()),
+                specs_like(v, P()),
+                P(),
+            ),
+            check_vma=False,
+        )(params, m, v, batch, step_idx)
+
+    return step

@@ -1,0 +1,63 @@
+"""Batched serving entry point: continuous-batching skeleton over the
+prefill/decode paths (TP-resident weights; ring-buffer KV caches).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma3-4b --requests 8
+
+On a pod slice, weights are sharded with
+``repro.launch.sharding.lm_param_shardings_inference`` (no FSDP: see
+EXPERIMENTS.md §Perf — per-token weight gathers cost params-bytes of ICI).
+This CPU entry point runs the reduced config to demonstrate the loop.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.models.model import decode_step, forward_prefill, init_decode_state, init_params
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-4b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    prefill = jax.jit(lambda p, t: forward_prefill(p, cfg, t))
+    step = jax.jit(lambda p, s, t, pos: decode_step(p, s, cfg, t, pos))
+
+    rng = np.random.default_rng(0)
+    pending = [
+        rng.integers(0, cfg.vocab, size=args.prompt_len).astype(np.int32)
+        for _ in range(args.requests)
+    ]
+    done = 0
+    t0 = time.perf_counter()
+    while pending:
+        batch = pending[: args.batch]
+        pending = pending[args.batch :]
+        prompts = jnp.asarray(np.stack(batch))
+        logits, state = prefill(params, prompts)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        for i in range(args.max_new - 1):
+            logits, state = step(
+                params, state, tok, jnp.asarray(args.prompt_len + i, jnp.int32)
+            )
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        done += len(batch)
+        print(f"served {done}/{args.requests} "
+              f"({done * args.max_new / (time.perf_counter() - t0):.1f} tok/s)")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""The assigned input-shape set and per-(arch x shape) input specs.
+
+Every spec is a ShapeDtypeStruct (weak-type-correct, shardable, no device
+allocation) — the dry-run lowers against these.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import ArchConfig, init_decode_state, init_params
+
+LM_SHAPES: Dict[str, Dict[str, Any]] = {
+    "train_4k":    {"kind": "train",   "seq": 4096,    "batch": 256},
+    "prefill_32k": {"kind": "prefill", "seq": 32768,   "batch": 32},
+    "decode_32k":  {"kind": "decode",  "seq": 32768,   "batch": 128},
+    "long_500k":   {"kind": "decode",  "seq": 524288,  "batch": 1},
+}
+
+# MACE: the paper's own workload — one 3072-token bin per DP rank.
+MACE_SHAPES: Dict[str, Dict[str, Any]] = {
+    "train_bins": {"kind": "mace_train", "capacity": 3072, "edge_factor": 24},
+}
+
+
+def sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def lm_param_specs(cfg: ArchConfig):
+    return jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+
+
+def lm_batch_specs(cfg: ArchConfig, shape: Dict[str, Any]):
+    B, S = shape["batch"], shape["seq"]
+    batch = {
+        "tokens": sds((B, S), jnp.int32),
+        "labels": sds((B, S), jnp.int32),
+    }
+    if cfg.n_prefix_embeds:
+        batch["prefix_embeds"] = sds(
+            (B, cfg.n_prefix_embeds, cfg.d_model), jnp.float32
+        )
+    return batch
+
+
+def lm_decode_state_specs(cfg: ArchConfig, batch: int, max_seq: int):
+    return jax.eval_shape(
+        lambda: init_decode_state(cfg, batch, max_seq)
+    )
+
+
+def shape_skip_reason(cfg: ArchConfig, shape_name: str) -> Optional[str]:
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return (
+            "pure full-attention arch: 512k dense-KV decode is "
+            "memory/bandwidth-infeasible; sub-quadratic attention required "
+            "(DESIGN.md §7)"
+        )
+    return None

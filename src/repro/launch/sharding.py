@@ -1,0 +1,312 @@
+"""Partition rules: FSDP x TP (x EP) shardings for params, optimizer state,
+batches and decode states, per (arch x shape x mesh).
+
+Scheme (DESIGN.md §5):
+* params: Megatron TP on the 'model' axis (column-parallel in-projections,
+  row-parallel out-projections, expert-parallel MoE when E % model == 0)
+  PLUS ZeRO-3 FSDP on the data axes for the other big dimension;
+* optimizer moments mirror param shardings;
+* batches: tokens sharded over DP axes;
+* decode states: batch over DP, KV-cache *sequence* over 'model' (flash-
+  decoding style — the softmax reductions over the sharded axis become small
+  stat all-reduces); batch-1 long-context shards sequence over every axis.
+
+Every spec is divisibility-checked: a mesh axis is dropped (replicated) when
+the dim is not divisible — GSPMD would pad-and-mask uneven shards silently,
+which wastes memory at these scales; we prefer explicit replication.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .mesh import dp_axes
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _checked(mesh: Mesh, shape, spec_axes) -> P:
+    """Drop axes that don't divide their dim."""
+    out = []
+    for dim, axes in zip(shape, spec_axes):
+        if axes is None:
+            out.append(None)
+            continue
+        ax = (axes,) if isinstance(axes, str) else tuple(axes)
+        keep = []
+        for a in ax:
+            size = mesh.shape[a]
+            if dim % int(np.prod([mesh.shape[k] for k in keep] + [size])) == 0:
+                keep.append(a)
+        if not keep:
+            out.append(None)
+        elif len(keep) == 1:
+            out.append(keep[0])
+        else:
+            out.append(tuple(keep))
+    return P(*out)
+
+
+def _ns(mesh, shape, axes) -> NamedSharding:
+    return NamedSharding(mesh, _checked(mesh, shape, axes))
+
+
+# --------------------------- LM param rules ---------------------------------
+
+_RULES = [
+    # (regex on last path component, rule fn(shape, dp, E_ok) -> axes tuple)
+    (r"^embed$",      lambda s, dp, eo: ("model", dp)),
+    (r"^head$",       lambda s, dp, eo: (dp, "model")),
+    (r"^(wq|wk|wv)$", lambda s, dp, eo: (dp, "model")),
+    (r"^wo$",         lambda s, dp, eo: ("model", dp)),
+    (r"^(wi|wg)$",    lambda s, dp, eo: (("model", dp, None) if len(s) == 3 else (dp, "model"))),
+    # moe experts: [E, d, f]; expert-parallel if divisible else f over model
+    (r"^router$",     lambda s, dp, eo: (dp, None)),
+    (r"^(b[qkv])$",   lambda s, dp, eo: ("model",)),
+    (r"^w_in$",       lambda s, dp, eo: (dp, "model")),
+    (r"^w_out$",      lambda s, dp, eo: ("model", dp)),
+    (r"^w_bcdt$",     lambda s, dp, eo: ("model", None)),
+    (r"^w_dt$",       lambda s, dp, eo: (None, "model")),
+    (r"^(conv)$",     lambda s, dp, eo: (None, "model")),
+    (r"^(conv_b|dt_bias|D)$", lambda s, dp, eo: ("model",)),
+    (r"^A_log$",      lambda s, dp, eo: ("model", None)),
+    (r"^wo_gate$",    lambda s, dp, eo: (dp, "model")),
+    (r"^(wi_gate|wf|w[if])$", lambda s, dp, eo: (dp, None)),
+    (r"^wx$",         lambda s, dp, eo: (dp, "model")),
+    (r"^up$",         lambda s, dp, eo: (dp, "model")),
+    (r"^down$",       lambda s, dp, eo: ("model", dp)),
+]
+
+
+def _moe_expert_axes(shape, dp, mesh, name):
+    """[E, d, f] (wi/wg) or [E, f, d] (wo)."""
+    E = shape[0]
+    if E % mesh.shape["model"] == 0:
+        return ("model", dp, None)
+    if name in ("wi", "wg"):
+        return (None, dp, "model")
+    return (None, "model", dp)
+
+
+def lm_param_shardings(
+    mesh: Mesh, params_tree: Any, tp: bool = True, mode: str = None
+) -> Any:
+    """Map a (ShapeDtypeStruct) param pytree to NamedShardings by path.
+
+    ``mode`` (overrides ``tp``):
+      * "tp_fsdp"   — Megatron TP on 'model' + ZeRO-3 FSDP on dp (default
+                      for >1B models; the huge-model regime);
+      * "fsdp"      — no TP: largest dim of every leaf sharded over dp only.
+                      Right for 1-8B dense models at 4k tokens/chip, where
+                      TP activation all-reduces dominate (granite: 6.6s ->
+                      0.5s collective, EXPERIMENTS.md §Perf);
+      * "replicate" — pure DDP (small recurrent models whose per-timestep
+                      scans would otherwise contain weight-grad collectives).
+    """
+    dp = dp_axes(mesh)
+    if mode is None:
+        mode = "tp_fsdp" if tp else "replicate"
+
+    def one(path, leaf):
+        names = [p.key for p in path if hasattr(p, "key")]
+        name = names[-1] if names else ""
+        in_seg = any(n.startswith("seg") for n in names)
+        in_moe = False
+        # moe expert tensors are 3-D (+stack): wi/wg/wo with rank>=3
+        shape = tuple(leaf.shape)
+        core = shape[1:] if in_seg else shape
+        if name in ("wi", "wg", "wo") and len(core) == 3:
+            in_moe = True
+
+        if mode == "replicate":
+            # small model: fully replicate (FSDP weight-gather per timestep
+            # would put collectives inside the recurrent scans)
+            axes = tuple(None for _ in core)
+        elif mode == "fsdp":
+            axes = [None] * len(core)
+            if core:
+                big = int(np.argmax(core))
+                if core[big] % _axis_size(mesh, dp) == 0 or core[big] > 4 * _axis_size(mesh, dp):
+                    axes[big] = dp
+            axes = tuple(axes)
+        elif in_moe:
+            axes = _moe_expert_axes(core, dp, mesh, name)
+        else:
+            axes = None
+            for pat, rule in _RULES:
+                if re.match(pat, name):
+                    axes = rule(core, dp, True)
+                    break
+            if axes is None:
+                # norms / biases / small leftovers: replicate
+                axes = tuple(None for _ in core)
+        if len(axes) < len(core):  # pad rule to rank
+            axes = tuple(axes) + (None,) * (len(core) - len(axes))
+        if in_seg:
+            axes = (None,) + tuple(axes)
+        return _ns(mesh, shape, axes)
+
+    return jax.tree_util.tree_map_with_path(one, params_tree)
+
+
+def tp_enabled(cfg) -> bool:
+    """TP policy: models below ~1B params run pure-DP (TP collectives would
+    dominate; cf. EXPERIMENTS.md xlstm baseline)."""
+    return cfg.param_count() > 1_000_000_000
+
+
+# --------------------------- inference rules --------------------------------
+
+_INFER_COL = re.compile(r"^(wq|wk|wv|wi|wg|w_in|wx|up|wo_gate|w_dt)$")
+_INFER_ROW = re.compile(r"^(wo|w_out|down|w_bcdt)$")
+
+
+def lm_param_shardings_inference(mesh: Mesh, params_tree: Any, tp: bool = True) -> Any:
+    """Serving-time shardings: Megatron TP only — weights stay resident and
+    sharded over 'model'; NO FSDP (per-token weight all-gathers would cost
+    ~params_bytes of ICI traffic per decode step, cf. the qwen3 decode
+    baseline in EXPERIMENTS.md §Perf).  Huge MoE stacks additionally spread
+    the expert/contraction dim over the DP axes so 100B+ params fit."""
+    dp = dp_axes(mesh)
+
+    def one(path, leaf):
+        names = [p.key for p in path if hasattr(p, "key")]
+        name = names[-1] if names else ""
+        in_seg = any(n.startswith("seg") for n in names)
+        shape = tuple(leaf.shape)
+        core = shape[1:] if in_seg else shape
+
+        if not tp:
+            axes = tuple(None for _ in core)
+        elif name in ("wi", "wg") and len(core) == 3:   # moe [E, d, f]
+            if core[0] % _axis_size(mesh, dp) == 0:
+                axes = (dp, None, "model")
+            else:
+                axes = (None, dp, "model")
+        elif name == "wo" and len(core) == 3:           # moe [E, f, d]
+            if core[0] % _axis_size(mesh, dp) == 0:
+                axes = (dp, "model", None)
+            else:
+                axes = (None, ("model",) + tuple(dp) if isinstance(dp, tuple) else ("model", dp), None)
+                axes = (None, "model", dp)
+        elif name == "embed":
+            axes = ("model", None)
+        elif name == "head":
+            axes = (None, "model")
+        elif _INFER_COL.match(name) and len(core) == 2:
+            axes = (None, "model")
+        elif _INFER_ROW.match(name) and len(core) == 2:
+            axes = ("model", None)
+        elif name in ("conv",):
+            axes = (None, "model")
+        elif name in ("conv_b", "dt_bias", "D", "bq", "bk", "bv"):
+            axes = ("model",)
+        elif name == "A_log":
+            axes = ("model", None)
+        else:
+            axes = tuple(None for _ in core)
+        if len(axes) < len(core):
+            axes = tuple(axes) + (None,) * (len(core) - len(axes))
+        if in_seg:
+            axes = (None,) + tuple(axes)
+        return _ns(mesh, shape, axes)
+
+    return jax.tree_util.tree_map_with_path(one, params_tree)
+
+
+# --------------------------- batch / state rules ----------------------------
+
+
+def lm_batch_shardings(mesh: Mesh, batch_tree: Any) -> Any:
+    dp = dp_axes(mesh)
+
+    def one(path, leaf):
+        shape = tuple(leaf.shape)
+        if len(shape) == 0:
+            return NamedSharding(mesh, P())
+        axes = (dp,) + (None,) * (len(shape) - 1)
+        return _ns(mesh, shape, axes)
+
+    return jax.tree_util.tree_map_with_path(one, batch_tree)
+
+
+def lm_state_shardings(mesh: Mesh, state_tree: Any, batch_size: int) -> Any:
+    """Decode-state shardings.  KV sequence rides 'model' (B > 1) or all
+    axes (B == 1, long-context)."""
+    dp = dp_axes(mesh)
+    seq_axes = "model" if batch_size > 1 else tuple(dp) + ("model",)
+    b_axes = dp if batch_size > 1 else None
+
+    def one(path, leaf):
+        names = [p.key for p in path if hasattr(p, "key")]
+        name = names[-1] if names else ""
+        shape = tuple(leaf.shape)
+        # leading stack dim (reps) always unsharded
+        if name in ("k", "v"):          # [reps, B, slots, H, dh]
+            axes = (None, b_axes, seq_axes, None, None)
+        elif name == "pos":             # [reps, B, slots]
+            axes = (None, b_axes, seq_axes)
+        elif name == "h" and len(shape) == 4:   # mamba [reps, B, di, ds]
+            axes = (None, b_axes, "model" if batch_size > 1 else tuple(dp) + ("model",), None)
+        elif name == "conv_buf":        # [reps, B, dc-1, di]
+            axes = (None, b_axes, None, "model")
+        elif name == "C":               # mlstm [reps, B, H, dh, dh]
+            axes = (None, b_axes, None, None, None)
+        else:
+            axes = (None, b_axes) + (None,) * (len(shape) - 2)
+        return _ns(mesh, shape, axes)
+
+    return jax.tree_util.tree_map_with_path(one, state_tree)
+
+
+# --------------------------- MACE rules --------------------------------------
+
+
+def mace_param_shardings(mesh: Mesh, params_tree: Any, channel_tp: bool = False) -> Any:
+    """MACE param shardings.
+
+    Default (paper-faithful): pure DDP — params replicated, one gradient
+    all-reduce per step (§5.1.2 of the paper uses PyTorch DDP).
+    ``channel_tp=True`` shards the 128-channel axis over 'model'
+    (a beyond-paper hypothesis; the dry-run REFUTED it — per-op activation
+    all-reduces dominate at 3072-token bins, see EXPERIMENTS.md §Perf)."""
+
+    def one(path, leaf):
+        names = [p.key for p in path if hasattr(p, "key")]
+        name = names[-1] if names else ""
+        shape = tuple(leaf.shape)
+        if (
+            channel_tp
+            and len(shape) >= 2
+            and shape[-1] >= mesh.shape["model"]
+            and shape[-1] % mesh.shape["model"] == 0
+            and name != "e0"
+        ):
+            axes = (None,) * (len(shape) - 1) + ("model",)
+        else:
+            axes = (None,) * len(shape)
+        return NamedSharding(mesh, P(*axes))
+
+    return jax.tree_util.tree_map_with_path(one, params_tree)
+
+
+def mace_batch_shardings(mesh: Mesh, batch_tree: Any) -> Any:
+    """Bins are the DP unit: leading (bins) axis over DP axes."""
+    dp = dp_axes(mesh)
+
+    def one(path, leaf):
+        shape = tuple(leaf.shape)
+        axes = (dp,) + (None,) * (len(shape) - 1)
+        return _ns(mesh, shape, axes)
+
+    return jax.tree_util.tree_map_with_path(one, batch_tree)

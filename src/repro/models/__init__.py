@@ -1,0 +1,1 @@
+from .model import ArchConfig, init_params, forward_train, decode_step, init_decode_state  # noqa: F401

@@ -1,0 +1,105 @@
+"""GQA attention block: qk-norm (qwen3), QKV bias (qwen2.5), sliding window
+(mixtral / gemma3 locals), RoPE; train path (chunked flash) + decode path
+(single token vs. KV cache)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import chunked_attention, make_dense, rms_norm, rope
+
+Params = Dict[str, Any]
+
+
+def init_attention(key, cfg, dtype=jnp.float32) -> Params:
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": make_dense(ks[0], d, hq * dh, dtype),
+        "wk": make_dense(ks[1], d, hkv * dh, dtype),
+        "wv": make_dense(ks[2], d, hkv * dh, dtype),
+        "wo": make_dense(ks[3], hq * dh, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * dh,), dtype)
+        p["bk"] = jnp.zeros((hkv * dh,), dtype)
+        p["bv"] = jnp.zeros((hkv * dh,), dtype)
+    if cfg.qk_norm:
+        p["qnorm"] = jnp.zeros((dh,), dtype)
+        p["knorm"] = jnp.zeros((dh,), dtype)
+    return p
+
+
+def _project_qkv(p: Params, cfg, x, positions):
+    B, S, _ = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, hq, dh)
+    k = k.reshape(B, S, hkv, dh)
+    v = v.reshape(B, S, hkv, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["qnorm"])
+        k = rms_norm(k, p["knorm"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_train(
+    p: Params, cfg, x: jnp.ndarray, positions: jnp.ndarray,
+    segments: Optional[jnp.ndarray], window: Optional[int],
+    return_kv: bool = False,
+):
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    out = chunked_attention(
+        q, k, v,
+        q_positions=positions, kv_positions=positions,
+        q_segments=segments, kv_segments=segments,
+        window=window, chunk=cfg.attn_chunk,
+    )
+    B, S = x.shape[:2]
+    out = out.reshape(B, S, cfg.n_heads * cfg.head_dim) @ p["wo"]
+    if not return_kv:
+        return out
+
+    # Build a ring-buffer cache compatible with decode: entry for absolute
+    # position p lives at slot p % slots.
+    slots = S if window is None else min(S, window)
+    if slots == S:
+        ck, cv, cp = k, v, positions
+    else:
+        keep = jnp.arange(S - slots, S)          # last `slots` positions
+        order = jnp.argsort(keep % slots)        # slot-aligned permutation
+        idx = keep[order]
+        ck, cv = k[:, idx], v[:, idx]
+        cp = positions[:, idx]
+    return out, {"k": ck, "v": cv, "pos": cp.astype(jnp.int32)}
+
+
+def attention_decode(
+    p: Params, cfg, x: jnp.ndarray, pos: jnp.ndarray,
+    cache_k: jnp.ndarray, cache_v: jnp.ndarray, window: Optional[int],
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode.  x: [B, 1, d]; pos: scalar int32 (current position);
+    cache_k/v: [B, S_max, Hkv, dh].  Returns (out, new_k, new_v)."""
+    B = x.shape[0]
+    S_max = cache_k.shape[1]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k, (0, pos, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v, (0, pos, 0, 0))
+    kv_pos = jnp.broadcast_to(jnp.arange(S_max, dtype=jnp.int32)[None], (B, S_max))
+    kv_valid = kv_pos <= pos
+    out = chunked_attention(
+        q, cache_k, cache_v,
+        q_positions=positions, kv_positions=kv_pos, kv_valid=kv_valid,
+        window=window, chunk=cfg.attn_chunk,
+    )
+    out = out.reshape(B, 1, cfg.n_heads * cfg.head_dim) @ p["wo"]
+    return out, cache_k, cache_v

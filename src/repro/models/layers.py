@@ -1,0 +1,168 @@
+"""Shared LM layers: norms, RoPE, MLPs, and memory-bounded chunked attention.
+
+Attention is written flash-style (lax.scan over KV chunks with running
+max/sum) so that no [S, S] score tensor is ever materialised — mandatory for
+the 32k prefill shapes, and the honest stand-in for the fused TPU attention
+kernel when we lower on the CPU host for the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+NEG_INF = -1e30
+
+
+def make_dense(key, d_in, d_out, dtype=jnp.float32, scale=None):
+    s = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return jax.random.normal(key, (d_in, d_out), dtype) * s
+
+
+def rms_norm(x, w, eps=1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    n = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (n * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 1e4) -> jnp.ndarray:
+    """x: [B, S, H, dh]; positions: [B, S]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = (theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, S, half]
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# chunked (flash-style) attention
+# ---------------------------------------------------------------------------
+
+
+def chunked_attention(
+    q: jnp.ndarray,              # [B, Sq, Hq, dh]
+    k: jnp.ndarray,              # [B, Skv, Hkv, dh]
+    v: jnp.ndarray,              # [B, Skv, Hkv, dh]
+    *,
+    q_positions: jnp.ndarray,    # [B, Sq] absolute positions of queries
+    kv_positions: jnp.ndarray,   # [B, Skv]
+    kv_valid: Optional[jnp.ndarray] = None,   # [B, Skv] bool
+    q_segments: Optional[jnp.ndarray] = None,  # [B, Sq] packed-seq segment ids
+    kv_segments: Optional[jnp.ndarray] = None,
+    window: Optional[int] = None,  # sliding-window size (None = global)
+    chunk: int = 1024,
+) -> jnp.ndarray:
+    """Causal (optionally windowed / packed-segment) attention, O(Skv/chunk)
+    memory.  Returns [B, Sq, Hq, dh]."""
+    B, Sq, Hq, dh = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    rep = Hq // Hkv
+    scale = 1.0 / np.sqrt(dh)
+    q_ = (q * scale).reshape(B, Sq, Hkv, rep, dh)
+
+    if Sq == 1:
+        # decode: single-pass over the (possibly sequence-sharded) cache —
+        # a chunk scan would dynamic-slice the sharded S axis and force a
+        # full cache all-gather (flash-decoding keeps S sharded; the softmax
+        # reductions over S become small stat collectives instead).
+        logits = jnp.einsum("bqhrd,bchd->bqhrc", q_, k).astype(jnp.float32)
+        mask = kv_positions[:, None, :] <= q_positions[:, :, None]
+        if kv_valid is not None:
+            mask &= kv_valid[:, None, :]
+        if window is not None:
+            mask &= kv_positions[:, None, :] > (q_positions[:, :, None] - window)
+        if kv_segments is not None and q_segments is not None:
+            mask &= kv_segments[:, None, :] == q_segments[:, :, None]
+        logits = jnp.where(mask[:, :, None, None, :], logits, NEG_INF)
+        p = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bqhrc,bchd->bqhrd", p.astype(v.dtype), v)
+        return out.reshape(B, Sq, Hq, dh).astype(q.dtype)
+
+    chunk = min(chunk, Skv)
+    n_chunks = -(-Skv // chunk)
+    pad = n_chunks * chunk - Skv
+    if pad:
+        padk = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        k, v = padk(k), padk(v)
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pad)), constant_values=-1)
+        kv_valid = padk(
+            kv_valid if kv_valid is not None else jnp.ones((B, Skv), bool)
+        )
+        if kv_segments is not None:
+            kv_segments = jnp.pad(kv_segments, ((0, 0), (0, pad)), constant_values=-1)
+    elif kv_valid is None:
+        kv_valid = jnp.ones((B, Skv), bool)
+
+    k_c = k.reshape(B, n_chunks, chunk, Hkv, dh)
+    v_c = v.reshape(B, n_chunks, chunk, Hkv, dh)
+    kp_c = kv_positions.reshape(B, n_chunks, chunk)
+    kvld_c = kv_valid.reshape(B, n_chunks, chunk)
+    ksg_c = (
+        kv_segments.reshape(B, n_chunks, chunk) if kv_segments is not None else None
+    )
+
+    def body(carry, xs):
+        acc, m, s = carry
+        if ksg_c is not None:
+            kc, vc, kp, kvld, ksg = xs
+        else:
+            kc, vc, kp, kvld = xs
+            ksg = None
+        # scores: [B, Sq, Hkv, rep, chunk]
+        logits = jnp.einsum("bqhrd,bchd->bqhrc", q_, kc.swapaxes(1, 1))
+        mask = (kp[:, None, :] <= q_positions[:, :, None]) & kvld[:, None, :]
+        if window is not None:
+            mask &= kp[:, None, :] > (q_positions[:, :, None] - window)
+        if ksg is not None and q_segments is not None:
+            mask &= ksg[:, None, :] == q_segments[:, :, None]
+        logits = jnp.where(mask[:, :, None, None, :], logits.astype(jnp.float32), NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        s_new = s * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bqhrc,bchd->bqhrd", p.astype(vc.dtype), vc
+        ).astype(jnp.float32)
+        return (acc_new, m_new, s_new), None
+
+    acc0 = jnp.zeros((B, Sq, Hkv, rep, dh), jnp.float32)
+    m0 = jnp.full((B, Sq, Hkv, rep), NEG_INF, jnp.float32)
+    s0 = jnp.zeros((B, Sq, Hkv, rep), jnp.float32)
+    xs = (
+        (k_c.swapaxes(0, 1), v_c.swapaxes(0, 1), kp_c.swapaxes(0, 1),
+         kvld_c.swapaxes(0, 1))
+        + ((ksg_c.swapaxes(0, 1),) if ksg_c is not None else ())
+    )
+    # flash-attention backward: recompute each chunk's probabilities in the
+    # bwd pass instead of stashing [B, Sq, Hq, chunk] softmax tensors for
+    # every chunk (34 GB/device on granite train before this remat)
+    (acc, m, s), _ = jax.lax.scan(jax.checkpoint(body), (acc0, m0, s0), xs)
+    out = acc / jnp.maximum(s[..., None], 1e-30)
+    return out.reshape(B, Sq, Hq, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_swiglu(key, d, f, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": make_dense(k1, d, f, dtype),
+        "wg": make_dense(k2, d, f, dtype),
+        "wo": make_dense(k3, f, d, dtype),
+    }
+
+
+def apply_swiglu(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return (jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])) @ p["wo"]

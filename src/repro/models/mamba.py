@@ -1,0 +1,142 @@
+"""Mamba (S6) mixer for Jamba: selective SSM with associative-scan training
+path and O(1)-state decode path."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import make_dense
+
+Params = Dict[str, Any]
+
+
+def init_mamba(key, cfg, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    ds, dc = cfg.mamba_d_state, cfg.mamba_d_conv
+    ks = jax.random.split(key, 7)
+    dt_rank = max(1, d // 16)
+    return {
+        "w_in": make_dense(ks[0], d, 2 * di, dtype),
+        "conv": jax.random.normal(ks[1], (dc, di), dtype) * 0.2,
+        "conv_b": jnp.zeros((di,), dtype),
+        "w_bcdt": make_dense(ks[2], di, 2 * ds + dt_rank, dtype),
+        "w_dt": make_dense(ks[3], dt_rank, di, dtype),
+        "dt_bias": jnp.log(jnp.expm1(jnp.linspace(1e-3, 1e-1, di))).astype(dtype),
+        "A_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))
+        ).astype(dtype),
+        "D": jnp.ones((di,), dtype),
+        "w_out": make_dense(ks[4], di, d, dtype),
+    }
+
+
+def _ssm_params(p: Params, cfg, xz):
+    """Common projections.  xz: [B, S, di] (post-conv).  Returns dt, A, B, C."""
+    ds = cfg.mamba_d_state
+    d = cfg.d_model
+    dt_rank = max(1, d // 16)
+    bcdt = xz @ p["w_bcdt"]                              # [B, S, 2ds+R]
+    Bm = bcdt[..., :ds]
+    Cm = bcdt[..., ds : 2 * ds]
+    dt = jax.nn.softplus(bcdt[..., 2 * ds :] @ p["w_dt"] + p["dt_bias"])  # [B,S,di]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))         # [di, ds]
+    return dt, A, Bm, Cm
+
+
+def mamba_train(
+    p: Params, cfg, x: jnp.ndarray, chunk: int = 256, return_state: bool = False
+):
+    """x: [B, S, d] -> [B, S, d].
+
+    Chunked selective scan: lax.scan over S/chunk chunks carrying the SSM
+    state; within a chunk, a parallel associative scan.  Bounds the
+    [B, c, d_inner, d_state] discretised-dynamics working set (the naive
+    full-S version is ~petabytes at the 32k-prefill shape)."""
+    B, S, d = x.shape
+    di = cfg.mamba_expand * d
+    dc = cfg.mamba_d_conv
+
+    xg = x @ p["w_in"]                                    # [B, S, 2di]
+    xs, z = xg[..., :di], xg[..., di:]
+    # causal depthwise conv1d
+    xp = jnp.pad(xs, ((0, 0), (dc - 1, 0), (0, 0)))
+    xc = sum(
+        xp[:, i : i + S, :] * p["conv"][i][None, None, :] for i in range(dc)
+    ) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+
+    dt, A, Bm, Cm = _ssm_params(p, cfg, xc)
+
+    c = min(chunk, S)
+    assert S % c == 0, (S, c)
+    n_ch = S // c
+    rs = lambda t: t.reshape(B, n_ch, c, *t.shape[2:]).swapaxes(0, 1)
+
+    def combine(a, b):
+        a1, b1 = a
+        a2, b2 = b
+        return a1 * a2, a2 * b1 + b2
+
+    def body(h0, xs_c):
+        dt_c, xc_c, B_c, C_c = xs_c
+        # scan state in f32: the exp-discretised gates are f32 and
+        # associative_scan requires homogeneous dtypes (bf16 inputs)
+        dA = jnp.exp(dt_c[..., None].astype(jnp.float32) * A[None, None])
+        dBx = ((dt_c * xc_c)[..., None] * B_c[:, :, None, :]).astype(jnp.float32)
+        gates, hs = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+        hs = gates * h0[:, None] + hs                     # inject carry
+        y = jnp.einsum("bsdn,bsn->bsd", hs, C_c.astype(jnp.float32))
+        return hs[:, -1], y.astype(xc_c.dtype)
+
+    h0 = jnp.zeros((B, di, cfg.mamba_d_state), jnp.float32)
+    h_last, ys = jax.lax.scan(body, h0, (rs(dt), rs(xc), rs(Bm), rs(Cm)))
+    y = ys.swapaxes(0, 1).reshape(B, S, di) + xc * p["D"]
+    y = y * jax.nn.silu(z)
+    out = y @ p["w_out"]
+    if return_state:
+        state = {"h": h_last, "conv_buf": xs[:, S - (dc - 1):, :]}
+        return out, state
+    return out
+
+
+def init_mamba_state(cfg, batch: int, dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    return {
+        # SSM state is kept f32 (exp-gated recurrence); conv window follows
+        # the compute dtype
+        "h": jnp.zeros((batch, di, cfg.mamba_d_state), jnp.float32),
+        "conv_buf": jnp.zeros((batch, cfg.mamba_d_conv - 1, di), dtype),
+    }
+
+
+def mamba_decode(
+    p: Params, cfg, x: jnp.ndarray, state: Dict[str, jnp.ndarray]
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: [B, 1, d]; O(1) recurrent update."""
+    B = x.shape[0]
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    dc = cfg.mamba_d_conv
+
+    xg = x[:, 0] @ p["w_in"]
+    xs, z = xg[..., :di], xg[..., di:]
+    window = jnp.concatenate([state["conv_buf"], xs[:, None, :]], axis=1)  # [B,dc,di]
+    xc = jnp.einsum("bcd,cd->bd", window, p["conv"]) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+
+    dt, A, Bm, Cm = _ssm_params(p, cfg, xc[:, None, :])
+    dt, Bm, Cm = dt[:, 0], Bm[:, 0], Cm[:, 0]
+    dA = jnp.exp(dt[..., None].astype(jnp.float32) * A[None])     # [B,di,ds]
+    h = state["h"] * dA + ((dt * xc)[..., None] * Bm[:, None, :]).astype(
+        jnp.float32
+    )
+    y = jnp.einsum("bdn,bn->bd", h, Cm.astype(jnp.float32)).astype(xc.dtype)
+    y = y + xc * p["D"]
+    y = y * jax.nn.silu(z)
+    out = (y @ p["w_out"])[:, None, :]
+    return out, {"h": h, "conv_buf": window[:, 1:dc, :]}

@@ -1,0 +1,557 @@
+"""Unified LM framework covering all 10 assigned architectures.
+
+Key design decisions (1000+-node posture):
+
+* **Layer plan + scan-over-groups**: a config declares a repeating mixer
+  pattern (e.g. jamba: 7 mamba + 1 attn; gemma3: 5 local + 1 global) and an
+  FFN pattern (mlp/moe/none).  Layers are grouped into ``n_layers // period``
+  identical groups whose parameters are *stacked* and consumed by
+  ``jax.lax.scan`` — one compiled block per group kind regardless of depth
+  (94-layer qwen3-moe compiles the same block once).  A non-divisible
+  remainder becomes a second, shorter scan segment.
+* **Chunked everything**: attention is flash-style (no [S,S] tensor), the
+  vocabulary loss is computed in sequence chunks (no [B,S,V] tensor) — both
+  mandatory at 32k/512k sequence lengths and 262k vocab.
+* **Decode path**: ``decode_step`` consumes/produces per-layer state stacks
+  (ring-buffer KV caches storing absolute positions — windowed layers
+  allocate only ``window`` slots; mamba/xlstm carry O(1) states).
+* **Compute dtype**: params are stored fp32 (optimizer-sharded), cast to
+  ``compute_dtype`` (bf16 on TPU) group-by-group inside the scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .attention import attention_decode, attention_train, init_attention
+from .layers import apply_swiglu, init_swiglu, make_dense, rms_norm
+from .mamba import init_mamba, init_mamba_state, mamba_decode, mamba_train
+from .moe import apply_moe, init_moe
+from .xlstm import (
+    init_mlstm,
+    init_mlstm_state,
+    init_slstm,
+    init_slstm_state,
+    mlstm_decode,
+    mlstm_train,
+    slstm_decode,
+    slstm_train,
+)
+
+Params = Dict[str, Any]
+
+# Optional activation-sharding constraint (set by the launcher/dry-run):
+# pins the residual stream [B, S, d] so GSPMD gathers FSDP weights instead of
+# resharding activations every scanned step.
+_ACT_SHARDING = None
+
+
+def set_activation_sharding(ns) -> None:
+    global _ACT_SHARDING
+    _ACT_SHARDING = ns
+
+
+def _constrain(x):
+    if _ACT_SHARDING is not None:
+        return jax.lax.with_sharding_constraint(x, _ACT_SHARDING)
+    return x
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0                       # 0 -> d_model // n_heads
+    pattern: Tuple[str, ...] = ("attn",)    # attn | swa | mamba | mlstm | slstm
+    ff_pattern: Tuple[str, ...] = ("mlp",)  # mlp | moe | none
+    window: Optional[int] = None            # for "swa" mixers
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    n_experts: int = 0
+    top_k: int = 0
+    n_prefix_embeds: int = 0                # VLM stub: patch-embedding slots
+    mamba_d_state: int = 16
+    mamba_d_conv: int = 4
+    mamba_expand: int = 2
+    moe_capacity_factor: float = 1.25
+    moe_group_size: int = 2048
+    attn_chunk: int = 1024
+    norm_eps: float = 1e-6
+    compute_dtype: Any = jnp.float32
+    param_dtype: Any = jnp.float32
+    remat: bool = True
+    subquadratic: bool = False              # eligible for long_500k
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    @property
+    def period(self) -> int:
+        return int(np.lcm(len(self.pattern), len(self.ff_pattern)))
+
+    def layer_kinds(self, i: int) -> Tuple[str, str]:
+        return (
+            self.pattern[i % len(self.pattern)],
+            self.ff_pattern[i % len(self.ff_pattern)],
+        )
+
+    @property
+    def segments(self) -> List[Tuple[int, int]]:
+        """[(period_len, n_repeats)] — full groups + optional remainder."""
+        p = self.period
+        out = []
+        if self.n_layers // p:
+            out.append((p, self.n_layers // p))
+        if self.n_layers % p:
+            out.append((self.n_layers % p, 1))
+        return out
+
+    def param_count(self) -> int:
+        """Analytic parameter count (roofline's 6·N·D)."""
+        d, f = self.d_model, self.d_ff
+        hq, hkv, dh = self.n_heads, self.n_kv_heads, self.head_dim
+        total = 2 * self.vocab * d  # embed + head
+        for i in range(self.n_layers):
+            mixer, ff = self.layer_kinds(i)
+            if mixer in ("attn", "swa"):
+                total += d * dh * (hq + 2 * hkv) + hq * dh * d
+            elif mixer == "mamba":
+                di = self.mamba_expand * d
+                total += d * 2 * di + di * (2 * self.mamba_d_state + d // 16) + (
+                    d // 16
+                ) * di + 2 * di * d // self.mamba_expand  # approx in/out
+            elif mixer == "mlstm":
+                total += 5 * d * d
+            elif mixer == "slstm":
+                total += 4 * d * d + 2 * d * int(4 * d / 3)
+            if ff == "mlp":
+                total += 3 * d * f
+            elif ff == "moe":
+                total += d * self.n_experts + 3 * self.n_experts * d * f
+        return total
+
+    def active_param_count(self) -> int:
+        """Per-token activated params (MoE counts top_k experts)."""
+        d, f = self.d_model, self.d_ff
+        total = self.param_count()
+        for i in range(self.n_layers):
+            _, ff = self.layer_kinds(i)
+            if ff == "moe":
+                total -= 3 * (self.n_experts - self.top_k) * d * f
+        # embeddings are lookups, not matmuls; keep head only
+        total -= self.vocab * d
+        return total
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, cfg: ArchConfig, mixer: str, ff: str) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dt = cfg.param_dtype
+    p: Params = {"norm1": jnp.zeros((cfg.d_model,), dt)}
+    if mixer in ("attn", "swa"):
+        p["mix"] = init_attention(k1, cfg, dt)
+    elif mixer == "mamba":
+        p["mix"] = init_mamba(k1, cfg, dt)
+    elif mixer == "mlstm":
+        p["mix"] = init_mlstm(k1, cfg, dt)
+    elif mixer == "slstm":
+        p["mix"] = init_slstm(k1, cfg, dt)
+    else:
+        raise ValueError(mixer)
+    if ff == "mlp":
+        p["norm2"] = jnp.zeros((cfg.d_model,), dt)
+        p["ff"] = init_swiglu(k2, cfg.d_model, cfg.d_ff, dt)
+    elif ff == "moe":
+        p["norm2"] = jnp.zeros((cfg.d_model,), dt)
+        p["ff"] = init_moe(k2, cfg, dt)
+    elif ff != "none":
+        raise ValueError(ff)
+    return p
+
+
+def init_params(key: jax.Array, cfg: ArchConfig) -> Params:
+    dt = cfg.param_dtype
+    keys = jax.random.split(key, 4 + cfg.n_layers)
+    params: Params = {
+        "embed": jax.random.normal(keys[0], (cfg.vocab, cfg.d_model), dt) * 0.02,
+        "head": make_dense(keys[1], cfg.d_model, cfg.vocab, dt),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+    layer = 0
+    for si, (plen, reps) in enumerate(cfg.segments):
+        seg: List[Params] = []
+        for pos in range(plen):
+            mixer, ff = cfg.layer_kinds(layer + pos)
+            stack = [
+                _init_block(keys[4 + layer + pos + r * plen], cfg, mixer, ff)
+                for r in range(reps)
+            ]
+            seg.append(jax.tree.map(lambda *xs: jnp.stack(xs), *stack))
+        params[f"seg{si}"] = seg
+        layer += plen * reps
+    return params
+
+
+# ---------------------------------------------------------------------------
+# train forward
+# ---------------------------------------------------------------------------
+
+def _cast_seg(seg, dtype):
+    """Cast a stacked param group to compute dtype once, outside the scan."""
+    return [
+        jax.tree.map(
+            lambda a: a.astype(dtype)
+            if jnp.issubdtype(a.dtype, jnp.floating)
+            else a,
+            blk,
+        )
+        for blk in seg
+    ]
+
+
+
+def _apply_block(
+    p: Params, cfg: ArchConfig, mixer: str, ff: str, x, positions, segments
+):
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if mixer == "attn":
+        y = attention_train(p["mix"], cfg, h, positions, segments, None)
+    elif mixer == "swa":
+        y = attention_train(p["mix"], cfg, h, positions, segments, cfg.window)
+    elif mixer == "mamba":
+        y = mamba_train(p["mix"], cfg, h)
+    elif mixer == "mlstm":
+        y = mlstm_train(p["mix"], cfg, h)
+    elif mixer == "slstm":
+        y = slstm_train(p["mix"], cfg, h)
+    x = x + y
+    aux = jnp.zeros((), x.dtype)
+    if ff != "none":
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if ff == "moe":
+            y, aux = apply_moe(
+                p["ff"], cfg, h,
+                capacity_factor=cfg.moe_capacity_factor,
+                group_size=cfg.moe_group_size,
+            )
+        else:
+            y = apply_swiglu(p["ff"], h)
+        x = x + y
+    return x, aux
+
+
+def _run_segments(cfg: ArchConfig, params: Params, x, positions, segments, train: bool):
+    """Apply all layers via scan-over-groups.  Returns (x, aux_total)."""
+    aux_total = jnp.zeros((), x.dtype)
+    layer = 0
+    for si, (plen, reps) in enumerate(cfg.segments):
+        seg = _cast_seg(params[f"seg{si}"], cfg.compute_dtype)
+        kinds = [cfg.layer_kinds(layer + pos) for pos in range(plen)]
+
+        def group(x, p_group, kinds=kinds):
+            x = _constrain(x)
+            aux = jnp.zeros((), x.dtype)
+            for pos, (mixer, ff) in enumerate(kinds):
+                p = p_group[pos]
+                x, a = _apply_block(p, cfg, mixer, ff, x, positions, segments)
+                aux = aux + a
+            return x, aux
+
+        body = group
+        if cfg.remat and train:
+            body = jax.checkpoint(group)
+
+        def scan_body(carry, p_group):
+            x, aux = carry
+            x, a = body(x, p_group)
+            return (x, aux + a), None
+
+        (x, aux_total), _ = jax.lax.scan(
+            scan_body, (x, aux_total), tuple(seg)
+        )
+        layer += plen * reps
+    return x, aux_total
+
+
+def _embed(cfg: ArchConfig, params: Params, tokens, prefix_embeds):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    if cfg.n_prefix_embeds and prefix_embeds is not None:
+        x = jnp.concatenate(
+            [prefix_embeds.astype(cfg.compute_dtype), x[:, prefix_embeds.shape[1] :]],
+            axis=1,
+        )
+    return x
+
+
+def forward_train(
+    params: Params,
+    cfg: ArchConfig,
+    batch: Dict[str, jnp.ndarray],
+    *,
+    loss_chunk: int = 512,
+    aux_weight: float = 0.01,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """batch: tokens [B,S], labels [B,S] (-1 = pad), positions [B,S],
+    optional segments [B,S], optional prefix_embeds [B,P,d]."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    segments = batch.get("segments")
+    x = _embed(cfg, params, tokens, batch.get("prefix_embeds"))
+    x, aux = _run_segments(cfg, params, x, positions, segments, train=True)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+    labels = batch["labels"]
+    head = params["head"].astype(cfg.compute_dtype)
+
+    # chunked cross-entropy: never materialise [B, S, V]
+    n_chunks = -(-S // loss_chunk)
+    pad = n_chunks * loss_chunk - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    xc = x.reshape(B, n_chunks, loss_chunk, cfg.d_model).swapaxes(0, 1)
+    lc = labels.reshape(B, n_chunks, loss_chunk).swapaxes(0, 1)
+
+    def chunk_loss(carry, xs):
+        xh, lab = xs
+        logits = (xh @ head).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        # one-hot contraction instead of take_along_axis: keeps the vocab
+        # axis sharded through fwd AND bwd (no full-V logit-grad all-reduce)
+        onehot = jax.nn.one_hot(
+            jnp.maximum(lab, 0), logits.shape[-1], dtype=logits.dtype
+        )
+        gold = jnp.einsum("btv,btv->bt", logits, onehot)
+        valid = (lab >= 0).astype(jnp.float32)
+        nll = (logz - gold) * valid
+        return (carry[0] + nll.sum(), carry[1] + valid.sum()), None
+
+    # recompute per-chunk logits in the bwd pass (saving them costs
+    # n_chunks x [B, chunk, V] fp32 — tens of GB/device at 150k vocab)
+    (nll_sum, n_valid), _ = jax.lax.scan(
+        jax.checkpoint(chunk_loss),
+        (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xc, lc),
+    )
+    loss = nll_sum / jnp.maximum(n_valid, 1.0) + aux_weight * aux.astype(jnp.float32)
+    return loss, {"loss": loss, "nll": nll_sum / jnp.maximum(n_valid, 1.0),
+                  "aux": aux.astype(jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# prefill (forward that also emits decode-ready state)
+# ---------------------------------------------------------------------------
+
+
+def _apply_block_collect(
+    p: Params, cfg: ArchConfig, mixer: str, ff: str, x, positions, segments
+):
+    """Like _apply_block but returns the mixer's decode-ready state."""
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if mixer == "attn":
+        y, st = attention_train(p["mix"], cfg, h, positions, segments, None, True)
+    elif mixer == "swa":
+        y, st = attention_train(
+            p["mix"], cfg, h, positions, segments, cfg.window, True
+        )
+    elif mixer == "mamba":
+        y, st = mamba_train(p["mix"], cfg, h, return_state=True)
+    elif mixer == "mlstm":
+        y, st = mlstm_train(p["mix"], cfg, h, return_state=True)
+    elif mixer == "slstm":
+        y, st = slstm_train(p["mix"], cfg, h, return_state=True)
+    x = x + y
+    if ff != "none":
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if ff == "moe":
+            y, _ = apply_moe(
+                p["ff"], cfg, h,
+                capacity_factor=cfg.moe_capacity_factor,
+                group_size=cfg.moe_group_size,
+            )
+        else:
+            y = apply_swiglu(p["ff"], h)
+        x = x + y
+    return x, st
+
+
+def forward_prefill(
+    params: Params,
+    cfg: ArchConfig,
+    tokens: jnp.ndarray,                       # [B, S]
+    prefix_embeds: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Process a full prompt; returns (last-token logits [B, V], decode state
+    matching init_decode_state's layout with max_seq = S)."""
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = _embed(cfg, params, tokens, prefix_embeds)
+
+    state: Dict[str, Any] = {}
+    layer = 0
+    for si, (plen, reps) in enumerate(cfg.segments):
+        seg = _cast_seg(params[f"seg{si}"], cfg.compute_dtype)
+        kinds = [cfg.layer_kinds(layer + pos) for pos in range(plen)]
+
+        def scan_body(x, p_group, kinds=kinds):
+            x = _constrain(x)
+            sts = []
+            for pos, (mixer, ff) in enumerate(kinds):
+                p = p_group[pos]
+                x, st = _apply_block_collect(
+                    p, cfg, mixer, ff, x, positions, None
+                )
+                sts.append(st)
+            return x, tuple(sts)
+
+        x, seg_state = jax.lax.scan(scan_body, x, tuple(seg))
+        state[f"seg{si}"] = list(seg_state)
+        layer += plen * reps
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, -1] @ params["head"].astype(cfg.compute_dtype)).astype(jnp.float32)
+    return logits, state
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(
+    cfg: ArchConfig, batch: int, max_seq: int, dtype=None
+) -> Dict[str, Any]:
+    """Per-segment stacked decode states.  Windowed attention allocates only
+    ``window`` KV slots (ring buffer); recurrent mixers carry O(1) states."""
+    dt = dtype or cfg.compute_dtype
+    state: Dict[str, Any] = {}
+    layer = 0
+    for si, (plen, reps) in enumerate(cfg.segments):
+        seg = []
+        for pos in range(plen):
+            mixer, _ = cfg.layer_kinds(layer + pos)
+            if mixer in ("attn", "swa"):
+                slots = max_seq if mixer == "attn" or cfg.window is None else min(
+                    max_seq, cfg.window
+                )
+                one = {
+                    "k": jnp.zeros((batch, slots, cfg.n_kv_heads, cfg.head_dim), dt),
+                    "v": jnp.zeros((batch, slots, cfg.n_kv_heads, cfg.head_dim), dt),
+                    "pos": jnp.full((batch, slots), -1, jnp.int32),
+                }
+            elif mixer == "mamba":
+                one = init_mamba_state(cfg, batch, dt)
+            elif mixer == "mlstm":
+                one = init_mlstm_state(cfg, batch)
+            elif mixer == "slstm":
+                one = init_slstm_state(cfg, batch, dt)
+            seg.append(jax.tree.map(lambda a: jnp.stack([a] * reps), one))
+        state[f"seg{si}"] = seg
+        layer += plen * reps
+    return state
+
+
+def decode_step(
+    params: Params,
+    state: Dict[str, Any],
+    cfg: ArchConfig,
+    tokens: jnp.ndarray,    # [B, 1]
+    pos: jnp.ndarray,       # scalar int32 — current absolute position
+) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """One token for the whole batch.  Returns (logits [B, V], new_state)."""
+    B = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+
+    new_state: Dict[str, Any] = {}
+    layer = 0
+    for si, (plen, reps) in enumerate(cfg.segments):
+        seg_p = _cast_seg(params[f"seg{si}"], cfg.compute_dtype)
+        seg_s = state[f"seg{si}"]
+        kinds = [cfg.layer_kinds(layer + pos_i) for pos_i in range(plen)]
+
+        def scan_body(x, xs, kinds=kinds):
+            x = _constrain(x)
+            p_group, s_group = xs
+            s_out = []
+            for pos_i, (mixer, ff) in enumerate(kinds):
+                p = p_group[pos_i]
+                s = s_group[pos_i]
+                h = rms_norm(x, p["norm1"], cfg.norm_eps)
+                if mixer in ("attn", "swa"):
+                    window = cfg.window if mixer == "swa" else None
+                    slots = s["k"].shape[1]
+                    slot = jnp.mod(pos, slots)
+                    y, s = _attn_decode_ring(p["mix"], cfg, h, pos, slot, s, window)
+                elif mixer == "mamba":
+                    y, s = mamba_decode(p["mix"], cfg, h, s)
+                elif mixer == "mlstm":
+                    y, s = mlstm_decode(p["mix"], cfg, h, s)
+                elif mixer == "slstm":
+                    y, s = slstm_decode(p["mix"], cfg, h, s)
+                x = x + y.astype(x.dtype)
+                if ff != "none":
+                    h = rms_norm(x, p["norm2"], cfg.norm_eps)
+                    if ff == "moe":
+                        y, _ = apply_moe(
+                            p["ff"], cfg, h,
+                            capacity_factor=cfg.moe_capacity_factor,
+                            group_size=cfg.moe_group_size,
+                        )
+                    else:
+                        y = apply_swiglu(p["ff"], h)
+                    x = x + y
+                s_out.append(s)
+            return x, tuple(s_out)
+
+        x, seg_out = jax.lax.scan(scan_body, x, (tuple(seg_p), tuple(seg_s)))
+        new_state[f"seg{si}"] = list(seg_out)
+        layer += plen * reps
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, 0] @ params["head"].astype(cfg.compute_dtype)).astype(jnp.float32)
+    return logits, new_state
+
+
+def _attn_decode_ring(p, cfg, x, pos, slot, cache, window):
+    """Ring-buffer KV decode: write (k, v, pos) at ``slot``, mask by stored
+    absolute positions (handles both full and windowed caches)."""
+    from .attention import _project_qkv
+    from .layers import chunked_attention
+
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    cp = jax.lax.dynamic_update_slice(
+        cache["pos"], jnp.full((B, 1), pos, jnp.int32), (0, slot)
+    )
+    kv_valid = cp >= 0
+    out = chunked_attention(
+        q, ck, cv,
+        q_positions=positions, kv_positions=cp, kv_valid=kv_valid,
+        window=window, chunk=cfg.attn_chunk,
+    )
+    out = out.reshape(B, 1, cfg.n_heads * cfg.head_dim) @ p["wo"]
+    return out, {"k": ck, "v": cv, "pos": cp}

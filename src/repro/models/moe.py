@@ -1,0 +1,162 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity-bounded scatter/gather
+dispatch, token-group streaming.
+
+Two scale-critical design choices (vs. the textbook GShard formulation):
+
+* **scatter/gather dispatch, not one-hot einsums**: the [T, E, C] dispatch
+  tensor (and its T*E*C*d matmul FLOPs) is replaced by an integer
+  slot-assignment scatter (``token_for_slot [E, C]``) plus row gathers —
+  dispatch cost drops from O(T*E*C*d) to O(T*k*d), and the compiled FLOPs
+  reflect *activated* experts only (honest roofline).
+* **token groups**: tokens are processed in groups of ``group_size`` via
+  lax.scan so the peak dispatch working set is bounded regardless of the
+  global batch (256 x 4k tokens at 128 experts would otherwise explode).
+
+Sharding: expert-stacked weights [E, d, f] ride the 'model' axis (EP); the
+gathers across the token(dp) <-> expert(model) boundary lower to the
+all-to-all-class collectives the roofline's collective term measures.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import make_dense
+
+Params = Dict[str, Any]
+
+# Optional expert-parallel sharding constraint on the dispatched/expert-side
+# tensors (set by the launcher): pins xe/ye to P('model', ...) so the
+# token(dp) <-> expert(model) boundary lowers to one all-to-all-class
+# reshard instead of repeated gathers (EXPERIMENTS.md §Perf, qwen3-moe).
+_EP_SHARDING = None
+_MOE_WEIGHT_SHARDING = None
+
+
+def set_ep_sharding(ns, weight_ns=None) -> None:
+    global _EP_SHARDING, _MOE_WEIGHT_SHARDING
+    _EP_SHARDING = ns
+    _MOE_WEIGHT_SHARDING = weight_ns
+
+
+def _ep_constrain(t):
+    if _EP_SHARDING is not None:
+        return jax.lax.with_sharding_constraint(t, _EP_SHARDING)
+    return t
+
+
+def _weight_constrain(w):
+    """Pin the per-layer expert weights to ('model'-on-E, replicated-else):
+    forces GSPMD to all-gather the FSDP ('data'-sharded) dim ONCE per layer
+    (hoisted out of the token-chunk scan) instead of psum-ing partial expert
+    activations per chunk — measured 14.6 TB/dev -> GB-scale on qwen3-moe
+    train (EXPERIMENTS.md §Perf iteration 3)."""
+    if _MOE_WEIGHT_SHARDING is not None:
+        return jax.lax.with_sharding_constraint(w, _MOE_WEIGHT_SHARDING)
+    return w
+
+
+def init_moe(key, cfg, dtype=jnp.float32) -> Params:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    s = 1.0 / np.sqrt(d)
+    return {
+        "router": make_dense(ks[0], d, E, dtype),
+        "wi": jax.random.normal(ks[1], (E, d, f), dtype) * s,
+        "wg": jax.random.normal(ks[2], (E, d, f), dtype) * s,
+        "wo": jax.random.normal(ks[3], (E, f, d), dtype) * (1.0 / np.sqrt(f)),
+    }
+
+
+def _moe_group(p: Params, cfg, xt: jnp.ndarray, capacity_factor: float):
+    """One token group.  xt: [Tg, d] -> (y [Tg, d], aux scalar)."""
+    Tg, d = xt.shape
+    E, k = cfg.n_experts, cfg.top_k
+
+    logits = (xt @ p["router"]).astype(jnp.float32)            # [Tg, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)              # [Tg, k]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    C = int(np.ceil(capacity_factor * k * Tg / E))
+    C = max(4, -(-C // 4) * 4)
+
+    # position of each (token, choice) in its expert queue
+    sel = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)          # [Tg, k, E]
+    pos = (jnp.cumsum(sel.reshape(Tg * k, E), axis=0).reshape(Tg, k, E) - sel)
+    pos = (pos * sel).sum(-1)                                   # [Tg, k]
+    fits = pos < C
+    gate_vals = gate_vals * fits
+
+    # slot assignment: token_for_slot[e, c] = source token (Tg = empty)
+    flat_e = gate_idx.reshape(-1)
+    flat_c = jnp.where(fits, pos, C).reshape(-1)                # overflow -> dropped
+    flat_t = jnp.broadcast_to(jnp.arange(Tg)[:, None], (Tg, k)).reshape(-1)
+    token_for_slot = jnp.full((E, C + 1), Tg, jnp.int32)
+    token_for_slot = token_for_slot.at[flat_e, flat_c].set(flat_t, mode="drop")
+    token_for_slot = token_for_slot[:, :C]                      # [E, C]
+
+    # dispatch: gather token rows (padded row Tg = zeros); under EP the
+    # constraint turns this reshard into the canonical all-to-all
+    xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
+    xe = _ep_constrain(xt_pad[token_for_slot])                  # [E, C, d]
+
+    wg = _weight_constrain(p["wg"])
+    wi = _weight_constrain(p["wi"])
+    wo = _weight_constrain(p["wo"])
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, wg)) * jnp.einsum(
+        "ecd,edf->ecf", xe, wi
+    )
+    ye = _ep_constrain(jnp.einsum("ecf,efd->ecd", h, wo))      # [E, C, d]
+
+    # combine: each token gathers its k slots back
+    slot_ok = fits
+    ye_flat = ye.reshape(E * C, d)
+    gather_idx = jnp.where(slot_ok, gate_idx * C + jnp.minimum(pos, C - 1), 0)
+    yk = ye_flat[gather_idx]                                    # [Tg, k, d]
+    y = jnp.einsum("tkd,tk->td", yk, gate_vals.astype(xt.dtype) * slot_ok)
+
+    # Switch-style load-balance aux
+    me = probs.mean(0)
+    ce = sel.astype(jnp.float32).sum(1).mean(0)
+    aux = E * jnp.sum(me * ce)
+    return y, aux.astype(xt.dtype)
+
+
+def apply_moe(
+    p: Params, cfg, x: jnp.ndarray, *,
+    capacity_factor: float = 1.25, group_size: int = 2048,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, S, d] -> (y, aux).  Streams token groups through _moe_group.
+
+    Group layout is *sharding-aligned*: groups are sequence chunks
+    [n_chunks, B x chunk_s, d] so the scanned leading axis is UNSHARDED and
+    every trip slices whole (dp-sharded) batch rows — a flat-token grouping
+    would slice across the dp sharding and force per-trip all-gathers of the
+    token stream (measured: the difference between 1204s and ~tens of s of
+    collective time on qwen3-moe train, EXPERIMENTS.md §Perf)."""
+    B, S, d = x.shape
+    T = B * S
+    if T <= group_size or S == 1:
+        y, aux = _moe_group(p, cfg, x.reshape(T, d), capacity_factor)
+        return y.reshape(B, S, d), aux
+
+    chunk_s = max(1, group_size // B)
+    while S % chunk_s != 0:  # S is a power-of-two multiple in all our shapes
+        chunk_s -= 1
+    n_chunks = S // chunk_s
+    g = B * chunk_s
+    # [B, S, d] -> [n_chunks, B*chunk_s, d] with B-major inner layout
+    xs = x.reshape(B, n_chunks, chunk_s, d).swapaxes(0, 1).reshape(n_chunks, g, d)
+
+    def body(carry, xg):
+        yg, aux = _moe_group(p, cfg, xg, capacity_factor)
+        return carry + aux, yg
+
+    aux, ys = jax.lax.scan(body, jnp.zeros((), x.dtype), xs)
+    aux = aux / n_chunks
+    y = ys.reshape(n_chunks, B, chunk_s, d).swapaxes(0, 1).reshape(B, S, d)
+    return y, aux

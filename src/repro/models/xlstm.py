@@ -1,0 +1,246 @@
+"""xLSTM mixers (Beck et al., 2024): mLSTM (matrix memory, chunked-parallel
+training form, O(1)-state decode) and sLSTM (scalar memory with exponential
+gating + stabiliser, inherently sequential).
+
+The 125M config alternates [mLSTM, sLSTM] blocks with no external FFN
+(d_ff = 0): each block carries its own projections per the paper.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import make_dense, rms_norm
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 8)
+    return {
+        "wq": make_dense(ks[0], d, d, dtype),
+        "wk": make_dense(ks[1], d, d, dtype),
+        "wv": make_dense(ks[2], d, d, dtype),
+        "wi": make_dense(ks[3], d, H, dtype, scale=0.01),
+        "bi": jnp.zeros((H,), dtype),
+        "wf": make_dense(ks[4], d, H, dtype, scale=0.01),
+        "bf": jnp.asarray(np.linspace(3.0, 6.0, H), dtype),  # long-memory init
+        "wo_gate": make_dense(ks[5], d, d, dtype),
+        "w_out": make_dense(ks[6], d, d, dtype),
+        "out_norm": jnp.zeros((dh,), dtype),
+    }
+
+
+def _mlstm_qkvgates(p: Params, cfg, x):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    q = (x @ p["wq"]).reshape(B, S, H, dh) / np.sqrt(dh)
+    k = (x @ p["wk"]).reshape(B, S, H, dh)
+    v = (x @ p["wv"]).reshape(B, S, H, dh)
+    li = (x @ p["wi"] + p["bi"]).astype(jnp.float32)            # [B,S,H]
+    lf = jax.nn.log_sigmoid((x @ p["wf"] + p["bf"]).astype(jnp.float32))
+    return q, k, v, li, lf
+
+
+def mlstm_train(p: Params, cfg, x: jnp.ndarray, chunk: int = 256, return_state: bool = False):
+    """Chunked-parallel stabilised mLSTM.  x: [B, S, d]."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    q, k, v, li, lf = _mlstm_qkvgates(p, cfg, x)
+
+    c = min(chunk, S)
+    assert S % c == 0, (S, c)
+    n_ch = S // c
+    rs = lambda t: t.reshape(B, n_ch, c, *t.shape[2:]).swapaxes(0, 1)
+    q_c, k_c, v_c = rs(q), rs(k), rs(v)
+    li_c, lf_c = rs(li), rs(lf)
+
+    def body(carry, xs):
+        C_p, n_p, m_p = carry         # [B,H,dh,dh], [B,H,dh], [B,H]
+        qc, kc, vc, lic, lfc = xs     # [B,c,H,*]
+        b = jnp.cumsum(lfc, axis=1)                          # [B,c,H]
+        a = lic                                              # [B,c,H]
+        # intra-chunk log-decay matrix  [B,H,c,c]
+        g = b.transpose(0, 2, 1)                             # [B,H,c]
+        log_D = g[:, :, :, None] - g[:, :, None, :] + a.transpose(0, 2, 1)[:, :, None, :]
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        log_D = jnp.where(tri[None, None], log_D, -jnp.inf)
+        m_intra = log_D.max(-1)                              # [B,H,c]
+        m_inter = g + m_p[:, :, None]
+        m_new = jnp.maximum(m_intra, m_inter)                # [B,H,c]
+        D = jnp.exp(log_D - m_new[..., None])                # [B,H,c,c]
+        inter = jnp.exp(m_inter - m_new)                     # [B,H,c]
+
+        qh = qc.transpose(0, 2, 1, 3)                        # [B,H,c,dh]
+        kh = kc.transpose(0, 2, 1, 3)
+        vh = vc.transpose(0, 2, 1, 3)
+        scores = jnp.einsum("bhtd,bhsd->bhts", qh, kh) * D   # [B,H,c,c]
+        num = jnp.einsum("bhts,bhsd->bhtd", scores, vh) + inter[..., None] * jnp.einsum(
+            "bhtd,bhde->bhte", qh, C_p
+        )
+        den = scores.sum(-1) + inter * jnp.einsum("bhtd,bhd->bht", qh, n_p)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+
+        # carry update (recurrent form evaluated at chunk end)
+        m_c = m_new[:, :, -1]                                # [B,H]
+        b_end = g[:, :, -1]                                  # [B,H]
+        w_state = jnp.exp(b_end[:, :, None] - g + a.transpose(0, 2, 1) - m_c[:, :, None])
+        C_n = jnp.exp(b_end + m_p - m_c)[..., None, None] * C_p + jnp.einsum(
+            "bhs,bhsd,bhse->bhde", w_state, kh, vh
+        )
+        n_n = jnp.exp(b_end + m_p - m_c)[..., None] * n_p + jnp.einsum(
+            "bhs,bhsd->bhd", w_state, kh
+        )
+        return (C_n, n_n, m_c), h.transpose(0, 2, 1, 3)      # [B,c,H,dh]
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    (C_f, n_f, m_f), hs = jax.lax.scan(body, (C0, n0, m0), (q_c, k_c, v_c, li_c, lf_c))
+    h = hs.swapaxes(0, 1).reshape(B, S, H, dh).astype(x.dtype)
+    h = rms_norm(h, p["out_norm"])
+    h = h.reshape(B, S, d) * jax.nn.sigmoid(x @ p["wo_gate"])
+    out = h @ p["w_out"]
+    if return_state:
+        return out, {"C": C_f, "n": n_f, "m": m_f}
+    return out
+
+
+def init_mlstm_state(cfg, batch: int) -> Dict[str, jnp.ndarray]:
+    d, H = cfg.d_model, cfg.n_heads
+    dh = d // H
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode(p: Params, cfg, x, state) -> Tuple[jnp.ndarray, Dict]:
+    B, _, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    q, k, v, li, lf = _mlstm_qkvgates(p, cfg, x)
+    q, k, v = q[:, 0].transpose(0, 1, 2), k[:, 0], v[:, 0]   # [B,H,dh]
+    li, lf = li[:, 0], lf[:, 0]                              # [B,H]
+    m_new = jnp.maximum(lf + state["m"], li)
+    decay = jnp.exp(lf + state["m"] - m_new)
+    inject = jnp.exp(li - m_new)
+    C = decay[..., None, None] * state["C"] + inject[..., None, None] * (
+        k[..., :, None] * v[..., None, :]
+    )
+    n = decay[..., None] * state["n"] + inject[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.einsum("bhd,bhd->bh", q, n)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    h = rms_norm(h.astype(x.dtype), p["out_norm"])
+    h = h.reshape(B, 1, d) * jax.nn.sigmoid(x @ p["wo_gate"])
+    return h @ p["w_out"], {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 7)
+    ff = int(4 * d / 3 / 64 + 1) * 64
+    return {
+        "wx": make_dense(ks[0], d, 4 * d, dtype),            # z, i, f, o pre-acts
+        "r": jax.random.normal(ks[1], (4, H, dh, dh), dtype) / np.sqrt(dh),
+        "b": jnp.concatenate(
+            [jnp.zeros((2 * d,)), jnp.full((d,), 3.0), jnp.zeros((d,))]
+        ).astype(dtype),
+        "out_norm": jnp.zeros((dh,), dtype),
+        "up": make_dense(ks[2], d, 2 * ff, dtype),
+        "down": make_dense(ks[3], ff, d, dtype),
+    }
+
+
+def _slstm_step(p: Params, cfg, xw, state):
+    """xw: [B, 4d] input pre-activations; state: (h, c, n, m) each [B,H,dh]
+    (m: [B,H,dh] per-unit stabiliser)."""
+    B = xw.shape[0]
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    h_p, c_p, n_p, m_p = state
+    rec = jnp.einsum("bhd,ghde->gbhe", h_p, p["r"])          # [4,B,H,dh]
+    pre = xw.reshape(B, 4, H, dh).transpose(1, 0, 2, 3) + rec
+    z = jnp.tanh(pre[0])
+    i_t = pre[1].astype(jnp.float32)
+    f_t = pre[2].astype(jnp.float32)
+    o = jax.nn.sigmoid(pre[3])
+    m_new = jnp.maximum(f_t + m_p, i_t)
+    ig = jnp.exp(i_t - m_new)
+    fg = jnp.exp(f_t + m_p - m_new)
+    c = fg * c_p + ig * z.astype(jnp.float32)
+    n = fg * n_p + ig
+    h = (o.astype(jnp.float32) * c / jnp.maximum(n, 1e-6)).astype(xw.dtype)
+    return h, (h, c, n, m_new)
+
+
+def slstm_train(p: Params, cfg, x: jnp.ndarray, return_state: bool = False):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    xw = (x @ p["wx"] + p["b"]).swapaxes(0, 1)               # [S, B, 4d]
+
+    def body(state, xw_t):
+        h, state = _slstm_step(p, cfg, xw_t, state)
+        return state, h
+
+    z0 = jnp.zeros((B, H, dh), jnp.float32)
+    state0 = (jnp.zeros((B, H, dh), x.dtype), z0, z0, jnp.full((B, H, dh), -1e30))
+    (h_f, c_f, n_f, m_f), hs = jax.lax.scan(body, state0, xw)
+    h = hs.swapaxes(0, 1)                                    # [B,S,H,dh]
+    h = rms_norm(h, p["out_norm"]).reshape(B, S, d)
+    up = h @ p["up"]
+    ff = up.shape[-1] // 2
+    y = jax.nn.gelu(up[..., :ff]) * up[..., ff:]
+    out = y @ p["down"]
+    if return_state:
+        return out, {"h": h_f, "c": c_f, "n": n_f, "m": m_f}
+    return out
+
+
+def init_slstm_state(cfg, batch: int, dtype=jnp.float32):
+    d, H = cfg.d_model, cfg.n_heads
+    dh = d // H
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return {
+        "h": jnp.zeros((batch, H, dh), dtype),
+        "c": z, "n": z, "m": jnp.full((batch, H, dh), -1e30, jnp.float32),
+    }
+
+
+def slstm_decode(p: Params, cfg, x, state) -> Tuple[jnp.ndarray, Dict]:
+    B, _, d = x.shape
+    xw = x[:, 0] @ p["wx"] + p["b"]
+    h, (hn, c, n, m) = _slstm_step(
+        p, cfg, xw, (state["h"], state["c"], state["n"], state["m"])
+    )
+    H = cfg.n_heads
+    dh = d // H
+    hr = rms_norm(h, p["out_norm"]).reshape(B, 1, d)
+    up = hr @ p["up"]
+    ff = up.shape[-1] // 2
+    y = jax.nn.gelu(up[..., :ff]) * up[..., ff:]
+    return y @ p["down"], {"h": hn, "c": c, "n": n, "m": m}

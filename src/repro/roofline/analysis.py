@@ -1,0 +1,65 @@
+"""Three-term roofline assembly (TPU v5e targets).
+
+    compute_s    = FLOPs / (chips x peak)         peak: 197 TF/s bf16
+    memory_s     = HBM bytes / (chips x 819 GB/s)
+    collective_s = per-device collective bytes / 50 GB/s-link
+
+FLOPs / HBM bytes come from the analytic model (exact for matmuls; compiled
+cost_analysis is trip-count-blind for scanned programs — see analytic.py);
+collective bytes come from the optimized-HLO parser (per-device, while-body
+trips multiplied).  The dominant term is the bottleneck; roofline fraction =
+max_term / sum-ish lower bound (we report terms and the fraction
+``compute_s / max(terms)`` = how close the cell is to compute-bound peak).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops_bf16: float = 197e12      # per chip
+    peak_flops_fp32: float = 98.5e12     # documented assumption (half rate)
+    hbm_bw: float = 819e9                # per chip
+    ici_bw: float = 50e9                 # per link, per direction
+
+
+def roofline_terms(
+    *,
+    flops: float,
+    hbm_bytes: float,
+    collective_bytes_per_device: float,
+    chips: int,
+    dtype: str = "bf16",
+    hw: HW = HW(),
+) -> Dict[str, float]:
+    peak = hw.peak_flops_bf16 if dtype == "bf16" else hw.peak_flops_fp32
+    compute_s = flops / (chips * peak)
+    memory_s = hbm_bytes / (chips * hw.hbm_bw)
+    collective_s = collective_bytes_per_device / hw.ici_bw
+    terms = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+    }
+    dom = max(terms, key=terms.get)
+    step = max(terms.values())
+    return {
+        **terms,
+        "dominant": dom,
+        "step_time_lb_s": step,
+        "roofline_fraction": compute_s / step if step > 0 else 0.0,
+        "chips": chips,
+    }
+
+
+RECOMMENDATION = {
+    "compute_s": "compute-bound: good — push MFU via larger per-chip tiles "
+                 "or reduced remat recompute",
+    "memory_s": "HBM-bound: raise arithmetic intensity (bigger microbatch "
+                "per chip, fuse param casts, cut optimizer traffic)",
+    "collective_s": "collective-bound: reshard to cut cross-chip bytes "
+                    "(more DP/less TP, expert-parallel alignment, overlap "
+                    "collectives with compute)",
+}

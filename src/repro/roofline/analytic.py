@@ -1,0 +1,206 @@
+"""Analytic FLOP / HBM-byte models per (arch x shape) cell.
+
+Why analytic: ``compiled.cost_analysis()`` counts while-loop bodies once
+(trip-count-blind), and every model here is scanned over layer groups /
+sequence chunks, so the compiled numbers under-report by up to the layer
+count.  We control every matmul in the model code, so the analytic count is
+exact for dense compute (elementwise terms are included with documented
+constants).  ``tests/test_roofline.py`` cross-validates the analytic count
+against cost_analysis on a fully-unrolled reduced config.
+
+Conventions:
+* matmul FLOPs = 2*M*N*K; training factor 4x fwd with remat (fwd + recompute
+  + 2x bwd), 3x without; prefill/decode are fwd-only.
+* attention uses exact causal/window average KV lengths.
+* HBM bytes: params are streamed once per fwd pass (bf16 compute copies),
+  optimizer update touches fp32 params+m+v (read+write), activations are
+  residual-stream traffic with a documented constant, KV caches are
+  read-once-write-slot per decode step.  The memory term assumes fused
+  (flash) attention: no S^2 traffic.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+from repro.models.model import ArchConfig
+
+
+def _avg_causal_kv(S: int, window) -> float:
+    """mean over query positions t of min(t+1, window)."""
+    if window is None or window >= S:
+        return (S + 1) / 2.0
+    W = window
+    # positions 0..W-1 see t+1; the rest see W
+    return (W * (W + 1) / 2.0 + (S - W) * W) / S
+
+
+def lm_cell_cost(cfg: ArchConfig, shape: Dict[str, Any]) -> Dict[str, float]:
+    kind = shape["kind"]
+    B, S = shape["batch"], shape["seq"]
+    d, dh = cfg.d_model, cfg.head_dim
+    Hq, Hkv = cfg.n_heads, cfg.n_kv_heads
+    cbytes = 2  # bf16 compute
+    p_total = cfg.param_count()
+    p_active = cfg.active_param_count()
+
+    T = B * S if kind in ("train", "prefill") else B
+    mat_fwd = 2.0 * T * p_active
+
+    # mixer extras per layer
+    attn_fwd = mamba_fwd = mlstm_fwd = slstm_fwd = 0.0
+    kv_bytes = 0.0
+    n_attn = 0
+    for i in range(cfg.n_layers):
+        mixer, _ = cfg.layer_kinds(i)
+        window = cfg.window if mixer == "swa" else None
+        if mixer in ("attn", "swa"):
+            n_attn += 1
+            if kind == "decode":
+                kv = min(S, window) if window else S
+                attn_fwd += 4.0 * B * Hq * dh * kv
+                kv_bytes += 2.0 * B * kv * Hkv * dh * cbytes  # read k+v
+            else:
+                kv_avg = _avg_causal_kv(S, window)
+                attn_fwd += 4.0 * B * S * Hq * dh * kv_avg
+                kv_bytes += 2.0 * B * S * Hkv * dh * cbytes   # write k+v
+        elif mixer == "mamba":
+            di = cfg.mamba_expand * d
+            ds = cfg.mamba_d_state
+            steps = S if kind != "decode" else 1
+            mamba_fwd += B * steps * di * ds * 10.0 + 2.0 * B * steps * di * ds
+        elif mixer == "mlstm":
+            H = cfg.n_heads
+            dhx = d // H
+            c = min(256, S)
+            steps = S if kind != "decode" else 1
+            mlstm_fwd += B * H * steps * (4.0 * c * dhx + 4.0 * dhx * dhx)
+        elif mixer == "slstm":
+            H = cfg.n_heads
+            dhx = d // H
+            steps = S if kind != "decode" else 1
+            slstm_fwd += B * steps * (8.0 * H * dhx * dhx + 20.0 * d)
+
+    fwd = mat_fwd + attn_fwd + mamba_fwd + mlstm_fwd + slstm_fwd
+    if kind == "train":
+        factor = 4.0 if cfg.remat else 3.0
+        flops = fwd * factor
+    else:
+        flops = fwd
+
+    # HBM bytes
+    if kind == "train":
+        # fwd stream + bwd stream of bf16 param copies, fp32 opt update
+        # (read p,m,v + write p,m,v), fp32 grads write+read
+        param_traffic = p_total * (2 * cbytes + 6 * 4 + 2 * 4)
+        act_traffic = 12.0 * T * d * cfg.n_layers * cbytes
+        hbm = param_traffic + act_traffic + kv_bytes * 3
+    elif kind == "prefill":
+        hbm = p_total * cbytes + 8.0 * T * d * cfg.n_layers * cbytes + kv_bytes
+    else:  # decode
+        cache_read = kv_bytes  # full cache read per token
+        hbm = p_total * cbytes + cache_read + 8.0 * B * d * cfg.n_layers * cbytes
+
+    return {
+        "flops": float(flops),
+        "hbm_bytes": float(hbm),
+        "model_flops": float(6.0 * T * p_active) if kind == "train" else float(2.0 * T * p_active),
+        "tokens": float(T),
+        "params_total": float(p_total),
+        "params_active": float(p_active),
+        "n_attn_layers": float(n_attn),
+    }
+
+
+# --------------------------- MACE ------------------------------------------
+
+
+def mace_cell_cost(
+    mace_cfg, n_bins: int, capacity: int, edge_factor: int,
+    *, fused: bool = True, bf16: bool = False,
+) -> Dict[str, float]:
+    """Per-step cost for MACE training on ``n_bins`` bins (DP units).
+
+    ``fused=False`` models the stock e3nn-style baseline (paper Observation
+    3): dense CG/U einsums (no sparsity exploited) and every per-path /
+    per-(L,nu) intermediate round-tripping HBM.  ``fused=True`` models the
+    sparse-table Pallas pipeline: compile-time nonzeros only, intermediates
+    VMEM-resident (inputs read once, outputs written once).  ``bf16`` halves
+    compute-byte traffic and runs the MXU at full bf16 rate (beyond-paper).
+    """
+    from repro.core.cg import u_tensor
+    from repro.core.channelwise_tp import TPSpec, build_tp_tables
+    from repro.core.irreps import dim_l
+    from repro.core.symmetric_contraction import symcon_flops
+
+    k = mace_cfg.channels
+    N = n_bins * capacity
+    E = n_bins * capacity * edge_factor
+    cb = 2.0 if bf16 else 4.0   # compute bytes/elt
+
+    fwd = 0.0
+    traffic = 0.0
+    for t in range(mace_cfg.n_interactions):
+        tp = mace_cfg.tp_spec_at(t)
+        tables = build_tp_tables(tp)
+        if fused:
+            fwd += E * k * len(tables.val) * 4.0       # sparse nnz
+            fwd += E * k * tp.out_spec.dim * 2.0       # scatter(one-hot mm)
+            # inputs read once, A written once (VMEM-resident intermediates)
+            traffic += (E * (tp.y_spec.dim + k * tp.h_spec.dim + k * tp.n_paths)
+                        + N * k * tp.out_spec.dim) * cb
+        else:
+            # dense per-path einsum chain: C[d1,d2,d3] contracted densely,
+            # each path's [E,k,d3] block round-trips HBM
+            for (l1, l2, l3) in tp.paths:
+                d1, d2, d3 = dim_l(l1), dim_l(l2), dim_l(l3)
+                fwd += 2.0 * E * k * d1 * d2 * d3
+                traffic += (E * k * (d2 + 2 * d3) + E * d1) * cb
+            traffic += N * k * tp.out_spec.dim * cb    # scatter output
+        # radial MLP (same either way)
+        dims = (mace_cfg.num_bessel, *mace_cfg.radial_mlp, tp.n_paths * k)
+        for a, b in zip(dims[:-1], dims[1:]):
+            fwd += 2.0 * E * a * b
+        traffic += E * dims[-1] * cb
+        # per-l linears (up, A, msg)
+        h_dim = mace_cfg.h_spec_at(t).dim
+        fwd += 2.0 * N * k * k * (
+            h_dim + mace_cfg.a_spec.dim + mace_cfg.hidden_spec.dim
+        )
+        traffic += 2.0 * N * k * (
+            h_dim + mace_cfg.a_spec.dim + mace_cfg.hidden_spec.dim
+        ) * cb
+        # symmetric contraction
+        sc = mace_cfg.symcon_spec()
+        if fused:
+            fwd += symcon_flops(sc, N, k)
+            traffic += N * k * (sc.in_spec.dim + sc.out_spec.dim) * cb
+        else:
+            for (L, nu) in sc.terms():
+                U = u_tensor(tuple(sc.in_spec.ls), L, nu)
+                fwd += 2.0 * N * k * U.size            # dense U contract
+                # each (L, nu) term's intermediates round-trip
+                traffic += N * k * (
+                    nu * sc.in_spec.dim + 2 * (2 * L + 1)
+                ) * cb
+        fwd += 2.0 * N * k * k  # skip connection
+        traffic += N * k * 2 * cb
+    fwd += 2.0 * N * k  # readouts (approx)
+
+    # forces = grad wrt positions inside the loss -> roughly 7x fwd for a
+    # full training step (fwd + force-grad graph + bwd through it)
+    flops = fwd * 7.0
+    traffic = traffic * 7.0
+
+    params = 4.0 * (  # rough fp32 param bytes
+        mace_cfg.n_species * k
+        + mace_cfg.n_interactions * (3 * k * k * 4 + 64 * 64 * 3 + 2000 * k)
+    )
+    return {
+        "flops": float(flops),
+        "hbm_bytes": float(params * 9 + traffic),
+        "model_flops": float(fwd * 7.0),
+        "tokens": float(N),
+        "params_total": float(params / 4.0),
+        "params_active": float(params / 4.0),
+        "n_attn_layers": 0.0,
+    }

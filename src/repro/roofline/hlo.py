@@ -1,0 +1,182 @@
+"""Optimized-HLO collective-traffic parser.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified
+empirically — an 8-trip scan reports 1-trip FLOPs), and collective ops are
+likewise inside the scan bodies.  This parser therefore walks the HLO
+computation graph, multiplies while-body contributions by the loop trip
+count (recovered from the loop condition's integer literal), and converts
+each collective's *per-device result shape* (post-SPMD shapes are already
+per-device) into transferred bytes with ring-algorithm factors:
+
+    all-reduce          2 (g-1)/g x result
+    all-gather            (g-1)/g x result
+    reduce-scatter        (g-1)   x result   (operand = g x result)
+    all-to-all            (g-1)/g x result
+    collective-permute          1 x result
+
+where g is the replica-group size parsed from ``replica_groups``.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e4m3b11fnuz": 1,
+}
+
+_COLL_KINDS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_BRACES_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_BRACES_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return 2  # conservative default
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    depth = 0
+    header = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?.*\{")
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            m = header.match(stripped)
+            if m and stripped.endswith("{"):
+                cur = m.group(1)
+                comps[cur] = []
+                depth = 1
+            continue
+        depth += stripped.count("{") - stripped.count("}")
+        if depth <= 0:
+            cur = None
+            continue
+        comps[cur].append(stripped)
+    return comps
+
+
+def _entry_name(hlo: str) -> Optional[str]:
+    m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo, re.MULTILINE)
+    return m.group(1) if m else None
+
+
+_CALL_RE = re.compile(
+    r"(?:body|condition|to_apply|true_computation|false_computation)=%?([\w\.\-]+)"
+)
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"[su]\d+\[\]\s+constant\((\d+)\)")
+_COLL_RE = re.compile(
+    # NOTE: the result type may contain tuple-index comments (/*index=5*/)
+    # which include '=' — match lazily up to the op keyword.
+    r"%?[\w\.\-]+\s*=\s*(.+?)\s+(" + "|".join(_COLL_KINDS) + r")(-start)?\("
+)
+
+
+def collective_bytes_from_hlo(hlo: str) -> Dict[str, float]:
+    """Returns per-device transferred bytes by collective kind (+ 'total',
+    and 'unknown_trip_count' flag count)."""
+    comps = _split_computations(hlo)
+    entry = _entry_name(hlo)
+    unknown_flags = [0]
+
+    def trip_count(cond_name: str) -> int:
+        lines = comps.get(cond_name, [])
+        consts = [int(c) for l in lines for c in _CONST_RE.findall(l)]
+        if consts:
+            return max(consts)
+        unknown_flags[0] += 1
+        return 1
+
+    memo: Dict[str, Dict[str, float]] = {}
+
+    def walk(name: str, seen=()) -> Dict[str, float]:
+        if name in memo:
+            return memo[name]
+        if name in seen or name not in comps:
+            return {}
+        out: Dict[str, float] = {k: 0.0 for k in _COLL_KINDS}
+        for line in comps[name]:
+            m = _COLL_RE.search(line)
+            if m and not line.lstrip().startswith("//"):
+                if "-done" in line.split("=", 1)[1][:120] and not m.group(3):
+                    pass
+                type_str, kind = m.group(1), m.group(2)
+                g = _group_size(line)
+                b = _shape_bytes(type_str)
+                if kind == "all-reduce":
+                    f = 2.0 * (g - 1) / g
+                elif kind == "all-gather":
+                    f = (g - 1) / g
+                elif kind == "reduce-scatter":
+                    f = float(g - 1)
+                elif kind == "all-to-all":
+                    f = (g - 1) / g
+                else:  # collective-permute
+                    f = 1.0
+                out[kind] += b * f
+            # recurse into whiles / calls / conditionals
+            if " while(" in line:
+                body = cond = None
+                for cname in _CALL_RE.findall(line):
+                    # body= comes with condition= on the same line
+                    pass
+                mb = re.search(r"body=%?([\w\.\-]+)", line)
+                mc = re.search(r"condition=%?([\w\.\-]+)", line)
+                if mb:
+                    body = mb.group(1)
+                if mc:
+                    cond = mc.group(1)
+                trips = trip_count(cond) if cond else 1
+                child = walk(body, seen + (name,)) if body else {}
+                for k, v in child.items():
+                    out[k] = out.get(k, 0.0) + v * trips
+            elif "to_apply=" in line or "true_computation=" in line or "branch_computations=" in line:
+                for cname in _CALL_RE.findall(line):
+                    child = walk(cname, seen + (name,))
+                    for k, v in child.items():
+                        out[k] = out.get(k, 0.0) + v
+                mbr = _BRANCHES_RE.search(line)
+                if mbr:
+                    for cname in re.findall(r"%?([\w\.\-]+)", mbr.group(1)):
+                        child = walk(cname, seen + (name,))
+                        for k, v in child.items():
+                            out[k] = out.get(k, 0.0) + v
+        memo[name] = out
+        return out
+
+    if entry is None:
+        return {"total": 0.0, "unknown_trip_count": 0}
+    res = walk(entry)
+    res = {k: v for k, v in res.items() if v}
+    res["total"] = sum(v for k, v in res.items() if k in _COLL_KINDS)
+    res["unknown_trip_count"] = unknown_flags[0]
+    return res

@@ -1,0 +1,11 @@
+from .optimizer import (  # noqa: F401
+    adamw,
+    clip_by_global_norm,
+    chain,
+    constant_lr,
+    ema,
+    exponential_decay_lr,
+    warmup_cosine_lr,
+)
+from .checkpoint import save_checkpoint, restore_checkpoint, latest_step  # noqa: F401
+from .compression import int8_compress_decompress, make_error_feedback  # noqa: F401

@@ -1,0 +1,63 @@
+"""Gradient compression for the DP all-reduce: int8 + error feedback.
+
+At 1000+ nodes the data-parallel all-reduce of MACE's (small) gradients is
+latency-bound and of the LMs' (huge) gradients bandwidth-bound; int8
+quantisation cuts the payload 4x vs fp32.  Error feedback (Karimireddy et
+al., 2019) accumulates the quantisation residual locally so the *sequence*
+of updates is unbiased — SGD/Adam convergence is preserved.
+
+``compressed_psum`` is the shard_map-ready collective: quantise → integer
+psum → dequantise.  The scale is itself psum-maxed so all ranks dequantise
+identically (required for synchronous replicas).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def int8_compress_decompress(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantise to int8 and back. Returns (g_hat, residual)."""
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    g_hat = q.astype(g.dtype) * scale
+    return g_hat, g - g_hat
+
+
+def make_error_feedback():
+    """Error-feedback transform over a gradient pytree."""
+
+    def init(params: PyTree) -> PyTree:
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def compress(grads: PyTree, residuals: PyTree) -> Tuple[PyTree, PyTree]:
+        def one(g, r):
+            g_hat, new_r = int8_compress_decompress(g.astype(jnp.float32) + r)
+            return g_hat.astype(g.dtype), new_r
+
+        pairs = jax.tree.map(one, grads, residuals)
+        g_hat = jax.tree.map(lambda x: x[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+        new_r = jax.tree.map(lambda x: x[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+        return g_hat, new_r
+
+    return init, compress
+
+
+def compressed_psum(g: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """Quantised-payload all-reduce for use inside shard_map.
+
+    Values are quantised to int8 and *summed in int16* — safe for group
+    sizes up to 258 (127 x g <= 32767) and exactly 2 bytes on the wire vs 4
+    for fp32 (a ring all-reduce transmits partial sums, so the accumulator
+    dtype is the wire dtype).  The shared pmax scale makes dequantisation
+    identical on all ranks (synchronous replicas stay bit-identical)."""
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    scale = jax.lax.pmax(scale, axis_name)  # shared scale: identical dequant
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int16)
+    total = jax.lax.psum(q, axis_name)
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    return (total.astype(jnp.float32) * scale / n).astype(g.dtype)

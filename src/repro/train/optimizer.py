@@ -1,0 +1,145 @@
+"""Self-contained optax-lite: AdamW, EMA, grad clipping, LR schedules.
+
+The paper trains with Adam + an exponential-moving-average scheduler and
+lr = 5e-3 (§5.2); those are the defaults wired into the MACE example.
+Transforms follow the (init, update) protocol so they compose with `chain`
+and shard transparently under pjit (states mirror param shardings).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+class Transform(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree, jnp.ndarray], Tuple[PyTree, PyTree]]
+    # update(grads, state, params, step) -> (updates, new_state)
+
+
+# ----------------------------- schedules ----------------------------------
+
+
+def constant_lr(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def exponential_decay_lr(lr: float, decay: float, steps: int) -> Schedule:
+    return lambda step: lr * decay ** (step / steps)
+
+
+def warmup_cosine_lr(lr: float, warmup: int, total: int, floor: float = 0.0) -> Schedule:
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (lr - floor) * 0.5 * (1 + jnp.cos(math.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+
+    return f
+
+
+# ----------------------------- transforms ---------------------------------
+
+
+def clip_by_global_norm(max_norm: float) -> Transform:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, step):
+        leaves = jax.tree.leaves(grads)
+        gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+        scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+        return jax.tree.map(lambda g: g * scale, grads), state
+
+    return Transform(init, update)
+
+
+def adamw(
+    lr: Schedule | float,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Transform:
+    sched = lr if callable(lr) else constant_lr(lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+        }
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        m = jax.tree.map(
+            lambda mm, g: b1 * mm + (1 - b1) * g.astype(jnp.float32), state["m"], grads
+        )
+        v = jax.tree.map(
+            lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"],
+            grads,
+        )
+        mh = jax.tree.map(lambda mm: mm / (1 - b1**t), m)
+        vh = jax.tree.map(lambda vv: vv / (1 - b2**t), v)
+        lr_t = sched(step)
+        upd = jax.tree.map(
+            lambda mm, vv, p: (
+                -lr_t * (mm / (jnp.sqrt(vv) + eps) + weight_decay * p.astype(jnp.float32))
+            ).astype(p.dtype),
+            mh,
+            vh,
+            params,
+        )
+        return upd, {"m": m, "v": v}
+
+    return Transform(init, update)
+
+
+def chain(*transforms: Transform) -> Transform:
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(grads, state, params, step):
+        new_state = []
+        for t, s in zip(transforms, state):
+            grads, ns = t.update(grads, s, params, step)
+            new_state.append(ns)
+        return grads, tuple(new_state)
+
+    return Transform(init, update)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: p + u, params, updates)
+
+
+# ----------------------------- EMA -----------------------------------------
+
+
+@dataclasses.dataclass
+class EMA:
+    decay: float = 0.99
+
+    def init(self, params):
+        return jax.tree.map(lambda p: p.astype(jnp.float32), params)
+
+    def update(self, ema_params, params, step: Optional[jnp.ndarray] = None):
+        d = self.decay
+        if step is not None:  # debias early steps like the paper's scheduler
+            d = jnp.minimum(d, (1.0 + step) / (10.0 + step))
+        return jax.tree.map(
+            lambda e, p: d * e + (1 - d) * p.astype(jnp.float32), ema_params, params
+        )
+
+
+def ema(decay: float = 0.99) -> EMA:
+    return EMA(decay)

@@ -1,0 +1,173 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward/train step + one decode step on CPU; output shapes + no NaNs.
+Also: full-config metadata sanity (published param counts within tolerance).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.models.model import (
+    decode_step,
+    forward_train,
+    init_decode_state,
+    init_params,
+)
+
+
+def _batch(cfg, B=2, S=32, seed=0):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    tokens = jax.random.randint(k1, (B, S), 0, cfg.vocab)
+    labels = jnp.where(
+        jax.random.bernoulli(k2, 0.9, (B, S)),
+        jnp.roll(tokens, -1, axis=1),
+        -1,
+    )
+    batch = {"tokens": tokens, "labels": labels}
+    if cfg.n_prefix_embeds:
+        batch["prefix_embeds"] = jax.random.normal(
+            k2, (B, cfg.n_prefix_embeds, cfg.d_model), jnp.float32
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_train_smoke(arch):
+    cfg = get_reduced(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg)
+    loss, metrics = jax.jit(lambda p, b: forward_train(p, cfg, b, loss_chunk=16))(
+        params, batch
+    )
+    assert np.isfinite(float(loss)), arch
+    assert float(loss) > 0
+    # untrained model ~ uniform: nll near log(vocab)
+    assert float(metrics["nll"]) < np.log(cfg.vocab) + 2.0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_grads_finite(arch):
+    cfg = get_reduced(arch)
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    batch = _batch(cfg, seed=1)
+
+    def loss_fn(p):
+        return forward_train(p, cfg, batch, loss_chunk=16)[0]
+
+    loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+    assert np.isfinite(float(loss)), arch
+    leaves = jax.tree.leaves(grads)
+    assert all(np.isfinite(np.asarray(g)).all() for g in leaves), arch
+    assert any(float(jnp.abs(g).max()) > 0 for g in leaves), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step_smoke(arch):
+    cfg = get_reduced(arch)
+    params = init_params(jax.random.PRNGKey(2), cfg)
+    B, S_max = 2, 64
+    state = init_decode_state(cfg, B, S_max)
+    tokens = jnp.asarray([[3], [5]], jnp.int32)
+    step = jax.jit(lambda p, s, t, pos: decode_step(p, s, cfg, t, pos))
+    logits, state = step(params, state, tokens, jnp.asarray(0, jnp.int32))
+    assert logits.shape == (B, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all(), arch
+    logits2, state = step(params, state, tokens, jnp.asarray(1, jnp.int32))
+    assert np.isfinite(np.asarray(logits2)).all(), arch
+    # with different history the logits must differ
+    assert not np.allclose(np.asarray(logits), np.asarray(logits2))
+
+
+@pytest.mark.parametrize(
+    "arch,expected_b,tol",
+    [
+        ("internvl2_26b", 20e9, 0.35),      # backbone (InternLM2-20B) only
+        ("musicgen_large", 3.3e9, 0.3),
+        ("qwen3_14b", 14e9, 0.25),
+        ("qwen2_5_3b", 3e9, 0.35),
+        ("granite_3_2b", 2.5e9, 0.35),
+        ("gemma3_4b", 4e9, 0.45),
+        ("xlstm_125m", 125e6, 0.5),
+        ("mixtral_8x22b", 141e9, 0.25),
+        ("qwen3_moe_235b_a22b", 235e9, 0.2),
+        ("jamba_v0_1_52b", 52e9, 0.35),
+    ],
+)
+def test_full_config_param_counts(arch, expected_b, tol):
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    assert abs(n - expected_b) / expected_b < tol, (arch, n / 1e9)
+
+
+def test_prefill_then_decode_consistency():
+    """Teacher-forced decode reproduces the training forward's next-token
+    distribution (cache correctness end-to-end)."""
+    cfg = get_reduced("qwen3_14b")
+    params = init_params(jax.random.PRNGKey(3), cfg)
+    B, S = 1, 12
+    tokens = jax.random.randint(jax.random.PRNGKey(4), (B, S), 0, cfg.vocab)
+
+    # train-path logits at final position via loss machinery surrogate:
+    from repro.models.model import _embed, _run_segments
+    from repro.models.layers import rms_norm
+
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = _embed(cfg, params, tokens, None)
+    x, _ = _run_segments(cfg, params, x, positions, None, train=False)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    want = np.asarray((x[:, -1] @ params["head"]).astype(jnp.float32))
+
+    state = init_decode_state(cfg, B, S + 4)
+    got = None
+    for t in range(S):
+        got, state = decode_step(
+            params, state, cfg, tokens[:, t : t + 1], jnp.asarray(t, jnp.int32)
+        )
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-3, atol=2e-3)
+
+
+def test_windowed_decode_matches_train():
+    """Sliding-window arch: ring-buffer decode == train forward."""
+    cfg = get_reduced("gemma3_4b")
+    params = init_params(jax.random.PRNGKey(5), cfg)
+    B, S = 1, 48  # > window=32: ring buffer wraps
+    tokens = jax.random.randint(jax.random.PRNGKey(6), (B, S), 0, cfg.vocab)
+
+    from repro.models.model import _embed, _run_segments
+    from repro.models.layers import rms_norm
+
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = _embed(cfg, params, tokens, None)
+    x, _ = _run_segments(cfg, params, x, positions, None, train=False)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    want = np.asarray((x[:, -1] @ params["head"]).astype(jnp.float32))
+
+    state = init_decode_state(cfg, B, S)
+    got = None
+    for t in range(S):
+        got, state = decode_step(
+            params, state, cfg, tokens[:, t : t + 1], jnp.asarray(t, jnp.int32)
+        )
+    np.testing.assert_allclose(np.asarray(got), want, rtol=5e-3, atol=5e-3)
+
+
+def test_packed_segments_isolate_documents():
+    """Packed-sequence attention: doc B's logits must not see doc A."""
+    cfg = get_reduced("granite_3_2b")
+    params = init_params(jax.random.PRNGKey(7), cfg)
+    B, S = 1, 24
+    t1 = jax.random.randint(jax.random.PRNGKey(8), (B, S), 0, cfg.vocab)
+    t2 = t1.at[:, :8].set((t1[:, :8] + 17) % cfg.vocab)  # change doc A only
+    seg = jnp.asarray([[1] * 8 + [2] * 16], jnp.int32)
+    pos = jnp.asarray([list(range(8)) + list(range(16))], jnp.int32)
+
+    from repro.models.model import _embed, _run_segments
+
+    def last_hidden(tok):
+        x = _embed(cfg, params, tok, None)
+        x, _ = _run_segments(cfg, params, x, pos, seg, train=False)
+        return np.asarray(x[:, 8:])  # doc B hidden states
+
+    np.testing.assert_allclose(last_hidden(t1), last_hidden(t2), rtol=1e-4, atol=1e-5)

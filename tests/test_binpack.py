@@ -1,0 +1,129 @@
+"""Property-based + behavioural tests for Algorithm 1 (Create-Balanced-Batches)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.binpack import (
+    assignment_vector,
+    balance_metrics,
+    best_fit_decreasing,
+    create_balanced_batches,
+    first_fit_decreasing,
+    fixed_count_batches,
+)
+
+
+sizes_strategy = st.lists(st.integers(min_value=1, max_value=768), min_size=1, max_size=400)
+
+
+@given(sizes=sizes_strategy, n_ranks=st.integers(1, 8))
+@settings(max_examples=120, deadline=None)
+def test_every_item_assigned_exactly_once(sizes, n_ranks):
+    b = create_balanced_batches(sizes, capacity=1024, n_ranks=n_ranks)
+    a = assignment_vector(b, len(sizes))
+    assert (a >= 0).all()
+    counts = np.zeros(len(sizes))
+    for items in b.bins:
+        for i in items:
+            counts[i] += 1
+    assert (counts == 1).all()
+
+
+@given(sizes=sizes_strategy, n_ranks=st.integers(1, 8), cap=st.integers(768, 4096))
+@settings(max_examples=120, deadline=None)
+def test_capacity_respected_and_multiple_of_ranks(sizes, n_ranks, cap):
+    b = create_balanced_batches(sizes, capacity=cap, n_ranks=n_ranks)
+    assert b.n_bins % n_ranks == 0
+    assert (b.loads() <= cap).all()
+
+
+@given(sizes=sizes_strategy)
+@settings(max_examples=60, deadline=None)
+def test_bin_count_not_worse_than_first_fit_by_much(sizes):
+    """Algorithm 1 trades a few bins for balance; it must stay within the
+    rank-padding of first-fit-decreasing's bin count + a small slack."""
+    cap = 2048
+    ours = create_balanced_batches(sizes, cap, n_ranks=1)
+    ffd = first_fit_decreasing(sizes, cap, n_ranks=1)
+    lower = int(np.ceil(np.sum(sizes) / cap))
+    assert ours.n_bins >= lower
+    assert ours.n_bins <= max(ffd.n_bins, lower) + max(2, ffd.n_bins // 2)
+
+
+def test_oversize_graph_rejected():
+    with pytest.raises(ValueError):
+        create_balanced_batches([10, 5000], capacity=4096, n_ranks=2)
+
+
+def test_empty_input():
+    b = create_balanced_batches([], capacity=1024, n_ranks=4)
+    assert b.n_bins == 0
+
+
+def _table3_like_sizes(n=4000, seed=0):
+    """Mixture mimicking the paper's Table 3 (1-768 atoms, heavy diversity)."""
+    rng = np.random.default_rng(seed)
+    parts = [
+        rng.integers(1, 444, size=int(n * 0.60)),      # MPtrj
+        rng.integers(9, 75, size=int(n * 0.17)),       # water clusters
+        rng.integers(16, 96, size=int(n * 0.08)),      # TMD
+        np.full(int(n * 0.07), 768),                   # liquid water
+        rng.integers(203, 408, size=int(n * 0.04)),    # zeolite
+        rng.integers(492, 500, size=int(n * 0.03)),    # CuNi
+        rng.integers(36, 48, size=int(n * 0.01)),      # HEA
+        np.full(max(1, int(n * 0.001)), 281),          # Al-HCl(aq)
+    ]
+    sizes = np.concatenate(parts)
+    rng.shuffle(sizes)
+    return sizes
+
+
+def test_balances_better_than_fixed_count_on_table3_mixture():
+    """The paper's central claim (Fig. 12 / Observation 1): token-balanced
+    bins beat fixed-graph-count batches on per-rank balance AND padding."""
+    sizes = _table3_like_sizes()
+    n_ranks = 8
+    ours = balance_metrics(
+        create_balanced_batches(sizes, capacity=3072, n_ranks=n_ranks), n_ranks
+    )
+    base = balance_metrics(
+        fixed_count_batches(sizes, graphs_per_batch=8, n_ranks=n_ranks, shuffle=True),
+        n_ranks,
+    )
+    assert ours.straggler_ratio < base.straggler_ratio
+    assert ours.load_cv < base.load_cv
+    # balanced bins should be nearly full on this mixture
+    assert ours.padding_fraction < 0.15
+    # and the straggler ratio should be close to 1
+    assert ours.straggler_ratio < 1.1
+
+
+def test_balances_better_than_best_fit_on_balance_objective():
+    """§3.2: best-fit minimises waste per bin; Algorithm 1 optimises balance
+    across bins — verify the balance objective (Eq. 5) is better."""
+    sizes = _table3_like_sizes(seed=3)
+    n_ranks = 8
+    cap = 3072
+    ours = balance_metrics(create_balanced_batches(sizes, cap, n_ranks), n_ranks)
+    bfd = balance_metrics(best_fit_decreasing(sizes, cap, n_ranks), n_ranks)
+    # compare on straggler ratio (per-step max/mean work across ranks)
+    assert ours.straggler_ratio <= bfd.straggler_ratio + 1e-9
+
+
+def test_deterministic():
+    sizes = _table3_like_sizes(seed=5)
+    b1 = create_balanced_batches(sizes, 3072, 4)
+    b2 = create_balanced_batches(sizes, 3072, 4)
+    assert b1.bins == b2.bins
+
+
+def test_binpack_speed_smoke():
+    """§3.2.2: ~1M graphs in about a second. Scaled-down smoke: 100k < 3 s."""
+    import time
+
+    sizes = _table3_like_sizes(n=100_000, seed=7)
+    t0 = time.perf_counter()
+    b = create_balanced_batches(sizes, 3072, 64)
+    dt = time.perf_counter() - t0
+    assert (assignment_vector(b, len(sizes)) >= 0).all()
+    assert dt < 3.0, f"binpack too slow: {dt:.2f}s for 100k graphs"

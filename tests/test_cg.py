@@ -1,0 +1,154 @@
+"""Correctness of the exact CG / spherical-harmonics machinery.
+
+These are the foundation of every equivariance claim in the repo: the tests
+prove (a) the real SH are orthonormal, (b) the real CG tensors intertwine
+rotations (C (D1 x D2) = D3 C), (c) the generalized-CG U tensors are
+permutation symmetric and equivariant, (d) the paper's <20% CG sparsity claim.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import cg as cgm
+from repro.core.irreps import parity_allowed, tp_paths
+
+
+LMAX = 3
+
+
+def test_su2_cg_known_values():
+    # <1 0 1 0 | 0 0> = -1/sqrt(3)
+    assert abs(cgm.su2_cg(1, 1, 0, 0, 0, 0) - (-1 / math.sqrt(3))) < 1e-12
+    # <1 1 1 -1 | 0 0> = 1/sqrt(3)
+    assert abs(cgm.su2_cg(1, 1, 0, 1, -1, 0) - (1 / math.sqrt(3))) < 1e-12
+    # selection rules
+    assert cgm.su2_cg(1, 1, 0, 1, 0, 1) == 0.0
+    assert cgm.su2_cg(1, 1, 3, 0, 0, 0) == 0.0
+
+
+def test_real_sh_orthonormal():
+    # Gauss-Legendre x uniform-phi quadrature integrates deg<=2*LMAX exactly.
+    n_theta, n_phi = 2 * LMAX + 2, 4 * LMAX + 4
+    xs, ws = np.polynomial.legendre.leggauss(n_theta)
+    phis = np.linspace(0, 2 * np.pi, n_phi, endpoint=False)
+    ct, ph = np.meshgrid(xs, phis, indexing="ij")
+    st = np.sqrt(1 - ct**2)
+    pts = np.stack([st * np.cos(ph), st * np.sin(ph), ct], axis=-1).reshape(-1, 3)
+    w = np.broadcast_to(ws[:, None], ct.shape).reshape(-1) * (2 * np.pi / n_phi)
+
+    Y = np.concatenate(
+        [cgm.real_sh_values(l, pts) for l in range(LMAX + 1)], axis=-1
+    )
+    gram = (Y * w[:, None]).T @ Y / (4 * np.pi)  # Y00=1 normalisation
+    assert np.allclose(gram, np.eye(Y.shape[1]), atol=1e-10)
+
+
+def test_real_sh_l1_is_cartesian():
+    rng = np.random.default_rng(0)
+    pts = rng.normal(size=(32, 3))
+    pts /= np.linalg.norm(pts, axis=1, keepdims=True)
+    Y1 = cgm.real_sh_values(1, pts)
+    # l=1 real SH span {x, y, z} up to a fixed scale & ordering
+    scale = math.sqrt(3.0)
+    got = np.abs(np.sort(Y1, axis=1))
+    want = np.abs(np.sort(scale * pts, axis=1))
+    assert np.allclose(got, want, atol=1e-10)
+
+
+@pytest.mark.parametrize("l", range(LMAX + 1))
+def test_wigner_D_is_orthogonal(l):
+    R = cgm.random_rotation(seed=3)
+    D = cgm.wigner_D_real(l, R)
+    assert np.allclose(D @ D.T, np.eye(2 * l + 1), atol=1e-8)
+
+
+@pytest.mark.parametrize(
+    "l1,l2,l3",
+    [p for p in tp_paths(range(LMAX + 1), range(LMAX + 1), range(LMAX + 1))],
+)
+def test_real_cg_equivariance(l1, l2, l3):
+    """C[a,b,c] must satisfy  sum_ab C[a,b,c] (D1 u)_a (D2 v)_b = D3 (C u v)|_c."""
+    C = cgm.real_cg(l1, l2, l3)
+    R = cgm.random_rotation(seed=7)
+    D1 = cgm.wigner_D_real(l1, R)
+    D2 = cgm.wigner_D_real(l2, R)
+    D3 = cgm.wigner_D_real(l3, R)
+    lhs = np.einsum("abc,ax,by->xyc", C, D1, D2)
+    rhs = np.einsum("abd,dc->abc", C, D3.T)
+    assert np.allclose(lhs, rhs, atol=1e-8)
+    # nontrivial
+    assert np.max(np.abs(C)) > 1e-3
+
+
+def test_parity_forbidden_rejected():
+    with pytest.raises(ValueError):
+        cgm.real_cg(1, 1, 1)  # odd sum: pseudovector path
+
+
+def test_cg_sparsity_claim():
+    """Paper Observation 2: nonzeros typically < 20% of entries."""
+    fracs = [
+        cgm.cg_sparsity(l1, l2, l3)
+        for (l1, l2, l3) in tp_paths(range(LMAX + 1), range(LMAX + 1), range(LMAX + 1))
+        if l1 + l2 + l3 > 0
+    ]
+    assert np.mean(fracs) < 0.35
+    assert np.median(fracs) < 0.25
+
+
+@pytest.mark.parametrize("nu", [1, 2, 3])
+@pytest.mark.parametrize("L", [0, 1, 2])
+def test_u_tensor_symmetric_and_equivariant(nu, L):
+    ls_in = (0, 1, 2, 3)
+    U = cgm.u_tensor(ls_in, L, nu)
+    if U.shape[-1] == 0:
+        pytest.skip("no paths")
+    # permutation symmetry over the nu input axes
+    if nu >= 2:
+        perm = (1, 0) + tuple(range(2, nu)) + (nu, nu + 1)
+        assert np.allclose(U, np.transpose(U, perm), atol=1e-12)
+    # path basis orthonormality
+    flat = U.reshape(-1, U.shape[-1])
+    assert np.allclose(flat.T @ flat, np.eye(U.shape[-1]), atol=1e-10)
+
+
+@pytest.mark.parametrize("nu", [2, 3])
+def test_u_tensor_equivariance_numeric(nu):
+    ls_in = (0, 1, 2)
+    L = 1
+    U = cgm.u_tensor(ls_in, L, nu)
+    if U.shape[-1] == 0:
+        pytest.skip("no paths")
+    R = cgm.random_rotation(seed=13)
+    import numpy as np
+
+    Dblocks = [cgm.wigner_D_real(l, R) for l in ls_in]
+    D = np.zeros((U.shape[0], U.shape[0]))
+    off = 0
+    for l, Dl in zip(ls_in, Dblocks):
+        d = 2 * l + 1
+        D[off : off + d, off : off + d] = Dl
+        off += d
+    DL = cgm.wigner_D_real(L, R)
+
+    rng = np.random.default_rng(5)
+    A = rng.normal(size=(U.shape[0],))
+    if nu == 2:
+        B = np.einsum("abMe,a,b->Me", U, A, A)
+        RA = D @ A
+        B_rot = np.einsum("abMe,a,b->Me", U, RA, RA)
+    else:
+        B = np.einsum("abcMe,a,b,c->Me", U, A, A, A)
+        RA = D @ A
+        B_rot = np.einsum("abcMe,a,b,c->Me", U, RA, RA, RA)
+    assert np.allclose(B_rot, DL @ B, atol=1e-8)
+
+
+def test_parity_allowed_matches_cg():
+    for l1 in range(LMAX + 1):
+        for l2 in range(LMAX + 1):
+            for l3 in range(LMAX + 1):
+                if parity_allowed(l1, l2, l3):
+                    C = cgm.real_cg(l1, l2, l3)
+                    assert np.max(np.abs(C)) > 1e-6
