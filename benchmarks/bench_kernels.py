@@ -14,15 +14,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_row, timeit
-from repro.core.channelwise_tp import TPSpec, build_tp_tables, tp_fused, tp_ref
-from repro.core.irreps import LSpec, lspec, sh_spec
-from repro.core.symmetric_contraction import (
-    SymConSpec,
-    build_symcon_tables,
-    init_symcon_weights,
-    symcon_fused,
-    symcon_ref,
-)
+from repro.core.irreps import lspec, sh_spec
+from repro.core.symmetric_contraction import SymConSpec, init_symcon_weights
+from repro.core.channelwise_tp import TPSpec
+from repro.kernels.registry import resolve
 
 
 def bench_symcon(N=512, k=32, nu=2):
@@ -31,10 +26,9 @@ def bench_symcon(N=512, k=32, nu=2):
     A = jax.random.normal(key, (N, k, spec.in_spec.dim))
     species = jax.random.randint(key, (N,), 0, 4)
     W = init_symcon_weights(key, spec, 4, k)
-    tables = build_symcon_tables(spec)
 
-    ref = jax.jit(lambda a, s, w: symcon_ref(a, s, w, spec))
-    fused = jax.jit(lambda a, s, w: symcon_fused(a, s, w, spec, tables))
+    ref = jax.jit(resolve("symcon", "ref", spec))
+    fused = jax.jit(resolve("symcon", "fused", spec))
     np.testing.assert_allclose(
         np.asarray(ref(A, species, W)), np.asarray(fused(A, species, W)),
         rtol=1e-4, atol=1e-4,
@@ -50,10 +44,9 @@ def bench_tp(E=2048, k=32):
     Y = jax.random.normal(key, (E, spec.y_spec.dim))
     h = jax.random.normal(key, (E, k, spec.h_spec.dim))
     R = jax.random.normal(key, (E, spec.n_paths, k))
-    tables = build_tp_tables(spec)
 
-    ref = jax.jit(lambda y, hh, r: tp_ref(y, hh, r, spec))
-    fused = jax.jit(lambda y, hh, r: tp_fused(y, hh, r, spec, tables))
+    ref = jax.jit(resolve("channelwise_tp", "ref", spec))
+    fused = jax.jit(resolve("channelwise_tp", "fused", spec))
     np.testing.assert_allclose(
         np.asarray(ref(Y, h, R)), np.asarray(fused(Y, h, R)), rtol=1e-4, atol=1e-4
     )

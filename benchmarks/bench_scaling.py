@@ -4,34 +4,102 @@ Strong scaling: 2.6M-sample dataset, 16 -> 740 GPUs; per-epoch time from the
 calibrated straggler model for all four configurations (baseline, +LB, +KO,
 +both).  Strong-scaling efficiency uses the paper's formula
 T1/(P x T_P) x 100% referenced to 16 GPUs.
+
+Calibration now comes from the *execution engine* (repro.train.engine): with
+``--measure-steps K`` this benchmark trains K real steps through the chosen
+backend (``--engine sequential|shard_map``, ``--devices N`` forcing N host
+devices for shard_map on CPU), reads the per-rank step-time/load telemetry,
+and feeds it back as (a) the measured c_token of ``epoch_time_model`` and
+(b) a *measured* straggler ratio via
+``binpack.balance_metrics(measured_work=...)`` — replacing the token-count
+proxy with on-device numbers.
+
+    PYTHONPATH=src python -m benchmarks.bench_scaling \
+        --measure-steps 8 --engine shard_map --devices 2
 """
 from __future__ import annotations
+
+import argparse
+import os
 
 import numpy as np
 
 from benchmarks.bench_ablation import TPU_ROOFLINE_STEP_SPEEDUP
 from benchmarks.common import epoch_time_model
-from repro.core.binpack import create_balanced_batches, fixed_count_batches
+from repro.core.binpack import (
+    Bins,
+    balance_metrics,
+    create_balanced_batches,
+    fixed_count_batches,
+)
 from repro.data.molecules import SyntheticCFMDataset
 
 GPU_COUNTS = [16, 32, 64, 128, 256, 512, 740]
 
 
-def main(n: int = 260_000):
+def calibrate_with_engine(
+    engine: str = "sequential",
+    n_ranks: int = 2,
+    steps: int = 8,
+    n_graphs: int = 96,
+    capacity: int = 128,
+):
+    """Train ``steps`` measured steps (+1 jit-warmup step that is discarded)
+    through the execution engine and return (c_token, rows) — the calibrated
+    per-atom cost plus CSV rows with the measured straggler ratio."""
+    import jax  # deferred: --devices must set XLA_FLAGS first
+
+    from repro.core.mace import MaceConfig
+    from repro.train.train_loop import Trainer, TrainerConfig
+
+    if engine == "shard_map" and len(jax.devices()) < n_ranks:
+        return None, [
+            f"fig7_calibration,skipped=need_{n_ranks}_devices_have_{len(jax.devices())}"
+        ]
+
+    mcfg = MaceConfig(
+        n_species=10, channels=8, hidden_ls=(0, 1), sh_lmax=2, a_ls=(0, 1, 2),
+        correlation=2, n_interactions=2, avg_num_neighbors=8.0, impl="fused",
+    )
+    ds = SyntheticCFMDataset(n_graphs, seed=11, max_atoms=min(96, capacity))
+    tcfg = TrainerConfig(
+        capacity=capacity, edge_factor=48, max_graphs=16, n_ranks=n_ranks,
+        engine=engine, ckpt_dir=None,
+    )
+    tr = Trainer(mcfg, tcfg, ds, seed=0)
+    tr.train(n_epochs=1_000_000, max_steps=steps + 1)  # step 0 pays the jit
+    tel = tr.engine.telemetry
+    c_tok = tel.c_token(skip=1)
+
+    bins = tr.sampler.bins_for_epoch(0)
+    packed = Bins([list(b) for b in bins], ds.sizes, capacity)
+    proxy = balance_metrics(packed, n_ranks)
+    measured = balance_metrics(
+        packed, n_ranks, measured_work=tel.straggler_matrix(skip=1)
+    )
+    rows = [
+        f"fig7_calibration,engine={engine},ranks={n_ranks},steps={tel.n_steps - 1},"
+        f"c_token_s={c_tok:.3e},straggler_proxy={proxy.straggler_ratio:.3f},"
+        f"straggler_measured={measured.straggler_ratio:.3f}"
+    ]
+    return c_tok, rows
+
+
+def main(n: int = 260_000, c_token: float = 1.0, extra_rows=None):
     # kernel factor: the TPU roofline model's whole-step fused/unfused ratio
     # (see bench_ablation docstring for why CPU-measured kappa doesn't apply)
     kappa = TPU_ROOFLINE_STEP_SPEEDUP
     ds = SyntheticCFMDataset(n, seed=2)
-    rows = []
+    rows = list(extra_rows or [])
     t16 = {}
     for P in GPU_COUNTS:
         base = fixed_count_batches(ds.sizes, 6, P, shuffle=True)
         bal = create_balanced_batches(ds.sizes, 3072, P)
         times = {
-            "baseline": epoch_time_model(base, P),
-            "lb": epoch_time_model(bal, P),
-            "kernel": epoch_time_model(base, P, kappa=kappa),
-            "lb+kernel": epoch_time_model(bal, P, kappa=kappa),
+            "baseline": epoch_time_model(base, P, c_token=c_token),
+            "lb": epoch_time_model(bal, P, c_token=c_token),
+            "kernel": epoch_time_model(base, P, c_token=c_token, kappa=kappa),
+            "lb+kernel": epoch_time_model(bal, P, c_token=c_token, kappa=kappa),
         }
         if P == 16:
             t16 = dict(times)
@@ -53,9 +121,10 @@ def main(n: int = 260_000):
         base = fixed_count_batches(ds_w.sizes, 6, P, shuffle=True)
         bal = create_balanced_batches(ds_w.sizes, 3072, P)
         rows.append(
-            f"fig10_weak,P={P},n={n_w},t_baseline={epoch_time_model(base, P):.3e},"
-            f"t_lb={epoch_time_model(bal, P):.3e},"
-            f"t_lb_kernel={epoch_time_model(bal, P, kappa=kappa):.3e}"
+            f"fig10_weak,P={P},n={n_w},"
+            f"t_baseline={epoch_time_model(base, P, c_token=c_token):.3e},"
+            f"t_lb={epoch_time_model(bal, P, c_token=c_token):.3e},"
+            f"t_lb_kernel={epoch_time_model(bal, P, c_token=c_token, kappa=kappa):.3e}"
         )
     for r in rows:
         print(r)
@@ -63,4 +132,29 @@ def main(n: int = 260_000):
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=260_000)
+    ap.add_argument("--engine", choices=["sequential", "shard_map"],
+                    default="sequential")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N CPU host devices (for --engine shard_map)")
+    ap.add_argument("--ranks", type=int, default=2)
+    ap.add_argument("--measure-steps", type=int, default=0,
+                    help="calibrate c_token/straggler by training N real "
+                         "steps through the execution engine")
+    args = ap.parse_args()
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.devices}"
+        ).strip()
+
+    c_token, extra = 1.0, None
+    if args.measure_steps:
+        c_tok, extra = calibrate_with_engine(
+            engine=args.engine, n_ranks=args.ranks, steps=args.measure_steps
+        )
+        if c_tok is not None:
+            c_token = c_tok
+    main(n=args.n, c_token=c_token, extra_rows=extra)

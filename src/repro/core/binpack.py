@@ -253,6 +253,9 @@ class BalanceMetrics:
     max_pairwise_gap: int       # Eq. 5 (linear-cost version)
     padding_fraction: float     # Eq. 4: unused capacity / total capacity
     straggler_ratio: float      # max rank work / mean rank work (per-step max, averaged)
+    measured: bool = False      # straggler_ratio from engine telemetry (per-rank
+                                # wall times, or observed per-rank loads for
+                                # lock-step engines) instead of the packing model
 
     def row(self) -> str:
         return (
@@ -263,16 +266,38 @@ class BalanceMetrics:
         )
 
 
-def balance_metrics(b: Bins, n_ranks: int) -> BalanceMetrics:
+def balance_metrics(
+    b: Bins, n_ranks: int, *, measured_work: Optional[np.ndarray] = None
+) -> BalanceMetrics:
+    """Balance/padding metrics for a packing.
+
+    ``measured_work`` — an optional ``[steps, n_ranks]`` matrix of *measured*
+    per-rank work (wall seconds from ``train.engine.RankTelemetry
+    .work_matrix()``).  When given, the straggler ratio is computed from the
+    measurements instead of the token-count proxy, closing the loop between
+    the engine's telemetry and the scaling model.
+    """
     loads = b.loads()
     nonempty = loads[loads > 0] if (loads > 0).any() else loads
     cap = max(b.capacity, 1)
     pad = float((cap - nonempty).clip(min=0).sum()) / (len(nonempty) * cap)
 
-    # Straggler model: bins are consumed round-robin across ranks; each step
-    # takes the max rank work; ratio vs. perfectly balanced.
-    steps = len(loads) // n_ranks
-    work = loads[: steps * n_ranks].reshape(steps, n_ranks) if steps else loads.reshape(0, n_ranks)
+    if measured_work is not None:
+        work = np.asarray(measured_work, dtype=np.float64)
+        if work.ndim != 2 or work.shape[1] != n_ranks:
+            raise ValueError(
+                f"measured_work must be [steps, {n_ranks}], got {work.shape}"
+            )
+        steps = work.shape[0]
+    else:
+        # Straggler model: bins are consumed round-robin across ranks; each
+        # step takes the max rank work; ratio vs. perfectly balanced.
+        steps = len(loads) // n_ranks
+        work = (
+            loads[: steps * n_ranks].reshape(steps, n_ranks)
+            if steps
+            else loads.reshape(0, n_ranks)
+        )
     per_step_max = work.max(axis=1) if steps else np.array([0.0])
     per_step_mean = np.maximum(work.mean(axis=1), 1e-9) if steps else np.array([1.0])
     straggler = float(np.mean(per_step_max / per_step_mean)) if steps else 1.0
@@ -286,6 +311,7 @@ def balance_metrics(b: Bins, n_ranks: int) -> BalanceMetrics:
         max_pairwise_gap=int(loads.max() - loads.min()) if len(loads) else 0,
         padding_fraction=pad,
         straggler_ratio=straggler,
+        measured=measured_work is not None,
     )
 
 

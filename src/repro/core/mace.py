@@ -31,24 +31,19 @@ Batch layout (static shapes; padding masked):
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .channelwise_tp import TPSpec, build_tp_tables, tp_fused, tp_ref
+from repro.kernels.registry import resolve
+
+from .channelwise_tp import TPSpec
 from .irreps import LSpec, lspec, sh_spec
 from .radial import apply_mlp, init_mlp, radial_embedding
 from .spherical import spherical_harmonics
-from .symmetric_contraction import (
-    SymConSpec,
-    build_symcon_tables,
-    init_symcon_weights,
-    symcon_fused,
-    symcon_ref,
-)
+from .symmetric_contraction import SymConSpec, init_symcon_weights
 
 Params = Dict[str, Any]
 
@@ -67,7 +62,7 @@ class MaceConfig:
     radial_mlp: Tuple[int, ...] = (64, 64, 64)
     readout_mlp: int = 16
     avg_num_neighbors: float = 12.0
-    impl: str = "fused"                   # "ref" | "fused" | "pallas"
+    impl: str = "fused"                   # any name in kernels.registry ("ref" | "fused" | "pallas" | registered)
     dtype: Any = jnp.float32
 
     @property
@@ -160,30 +155,6 @@ def init_mace(key: jax.Array, cfg: MaceConfig) -> Params:
 # ---------------------------------------------------------------------------
 
 
-def _tp_dispatch(cfg: MaceConfig, layer_idx: int):
-    spec = cfg.tp_spec_at(layer_idx)
-    if cfg.impl == "ref":
-        return spec, partial(tp_ref, spec=spec)
-    tables = build_tp_tables(spec)
-    if cfg.impl == "pallas":
-        from repro.kernels.channelwise_tp.ops import tp_pallas
-
-        return spec, partial(tp_pallas, spec=spec, tables=tables)
-    return spec, partial(tp_fused, spec=spec, tables=tables)
-
-
-def _symcon_dispatch(cfg: MaceConfig):
-    spec = cfg.symcon_spec()
-    if cfg.impl == "ref":
-        return spec, partial(symcon_ref, spec=spec)
-    tables = build_symcon_tables(spec)
-    if cfg.impl == "pallas":
-        from repro.kernels.symmetric_contraction.ops import symcon_pallas
-
-        return spec, partial(symcon_pallas, spec=spec, tables=tables)
-    return spec, partial(symcon_fused, spec=spec, tables=tables)
-
-
 def mace_energy(
     params: Params,
     cfg: MaceConfig,
@@ -217,8 +188,9 @@ def mace_energy(
     for t in range(cfg.n_interactions):
         layer = params[f"layer_{t}"]
         h_spec = cfg.h_spec_at(t)
-        tp_spec, tp_fn = _tp_dispatch(cfg, t)
-        sc_spec, sc_fn = _symcon_dispatch(cfg)
+        tp_spec = cfg.tp_spec_at(t)
+        tp_fn = resolve("channelwise_tp", cfg.impl, tp_spec)
+        sc_fn = resolve("symcon", cfg.impl, cfg.symcon_spec())
 
         h_up = _apply_linear_per_l(layer["lin_up"], h, h_spec)
         R = apply_mlp(layer["radial"], radial).reshape(-1, tp_spec.n_paths, k)

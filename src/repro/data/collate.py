@@ -79,7 +79,7 @@ def collate_bin(
         e_off += e
 
     # padded nodes join a dedicated spare graph slot (zero weight in loss)
-    graph_id[n_off:] = G - 1 if len(mols) < G else G - 1
+    graph_id[n_off:] = G - 1
     return {
         "species": species,
         "positions": positions,
@@ -91,3 +91,23 @@ def collate_bin(
         "energy": energy,
         "forces": forces,
     }
+
+
+def collate_stacked(
+    mols_per_rank: Sequence[Sequence[Molecule]],
+    shape: BinShape,
+    *,
+    strict: bool = False,
+) -> Dict[str, np.ndarray]:
+    """Collate R per-rank bins and stack them on a leading ``[R, ...]`` axis.
+
+    This is the device layout the ``ShardMapEngine`` consumes: axis 0 is the
+    data-parallel mesh axis, so sharding the result with ``P("data", ...)``
+    puts exactly one collated bin on each rank.  Every rank shares the same
+    static ``BinShape`` — a requirement for SPMD (one compiled program) that
+    Algorithm 1's capacity bound guarantees.
+    """
+    if not mols_per_rank:
+        raise ValueError("need at least one rank's bin")
+    cols = [collate_bin(m, shape, strict=strict) for m in mols_per_rank]
+    return {k: np.stack([c[k] for c in cols]) for k in cols[0]}

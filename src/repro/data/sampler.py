@@ -96,6 +96,14 @@ class BalancedBatchSampler:
         for step in range(state.cursor, n_steps):
             yield bins[step * self.n_ranks + rank]
 
+    def step_iter(self, state: SamplerState) -> Iterator[List[List[int]]]:
+        """Yield one bin *per rank* per step (the execution-engine view):
+        ``[bin_rank0, ..., bin_rankR-1]`` starting at the resume cursor."""
+        bins = self.bins_for_epoch(state.epoch)
+        n_steps = len(bins) // self.n_ranks
+        for step in range(state.cursor, n_steps):
+            yield bins[step * self.n_ranks : (step + 1) * self.n_ranks]
+
 
 class FixedCountSampler:
     """PyG-style baseline: fixed number of graphs per minibatch."""
@@ -126,3 +134,10 @@ class FixedCountSampler:
         n_steps = len(bins) // self.n_ranks
         for step in range(state.cursor, n_steps):
             yield bins[step * self.n_ranks + rank]
+
+    def step_iter(self, state: SamplerState) -> Iterator[List[List[int]]]:
+        """One bin per rank per step (see BalancedBatchSampler.step_iter)."""
+        bins = self.bins_for_epoch(state.epoch)
+        n_steps = len(bins) // self.n_ranks
+        for step in range(state.cursor, n_steps):
+            yield bins[step * self.n_ranks : (step + 1) * self.n_ranks]

@@ -1,3 +1,16 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Optimized kernels + the dispatch registry.
+
+``registry`` is the single name->implementation table for the paper's two
+custom contractions (channelwise TP, symmetric contraction).  Sub-packages
+hold the Pallas TPU kernels; additional backends (.cu, Triton, ...) should
+register themselves via ``registry.register``.
+"""
+from .registry import (  # noqa: F401
+    KernelImpl,
+    available,
+    canonical_kind,
+    get_impl,
+    register,
+    resolve,
+    unregister,
+)

@@ -1,0 +1,215 @@
+"""Kernel dispatch registry: one name -> implementation table for every
+compute hot-spot the paper optimizes (§4).
+
+The MACE forward pass has two custom contractions — the channelwise tensor
+product (Algorithm 2) and the symmetric contraction (Algorithm 3) — and each
+ships in three implementations:
+
+  ``ref``     chained per-path dense-CG einsums (e3nn-style; the oracle)
+  ``fused``   sparse-table single-einsum formulation (XLA-fused; default)
+  ``pallas``  hand-written Pallas TPU kernel (VMEM-resident tiles)
+
+Before this registry existed, ``core/mace.py`` hard-coded the name->callable
+mapping in two private ``_*_dispatch`` functions and every benchmark/test
+re-derived it.  Now there is exactly one table:
+
+    from repro.kernels.registry import resolve
+    tp_fn = resolve("channelwise_tp", "fused", spec)   # (Y, h, R) -> msgs
+    sc_fn = resolve("symcon", "fused", spec)           # (A, species, W) -> B
+
+``resolve`` binds the implementation to a spec, building (and memoising) any
+sparse lookup tables the impl needs, so tracing a jitted model N times does
+not rebuild them N times.
+
+Third-party / follow-on backends (CUDA, Triton, a second Pallas variant...)
+plug in with the ``register`` hook and become selectable by name everywhere
+at once — ``MaceConfig(impl=...)``, benchmarks, and tests all go through
+this module:
+
+    @register("symcon", "mykernel", platforms=("gpu",))
+    def _build(spec):
+        return lambda A, species, W: ...
+
+Capability metadata (``platforms``, ``needs_tables``) lets callers filter:
+``available("symcon", platform="cpu")`` returns impl names expected to run
+on the current backend (``pallas`` runs on CPU only in interpret mode and is
+tagged accordingly).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+# Kernel kinds understood by the registry.  ``KIND_ALIASES`` maps shorthand
+# used by configs/CLI to the canonical kind name.
+KIND_TP = "channelwise_tp"
+KIND_SYMCON = "symcon"
+KINDS = (KIND_TP, KIND_SYMCON)
+KIND_ALIASES = {"tp": KIND_TP, "symmetric_contraction": KIND_SYMCON}
+
+Builder = Callable[[Any], Callable]  # spec -> bound kernel callable
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelImpl:
+    """One registered implementation of a kernel kind."""
+
+    kind: str
+    name: str
+    builder: Builder
+    needs_tables: bool = False          # builds sparse lookup tables at bind time
+    platforms: Tuple[str, ...] = ("cpu", "gpu", "tpu")
+    interpret_only_on: Tuple[str, ...] = ()   # platforms where it runs emulated
+    description: str = ""
+
+    def supports(self, platform: str) -> bool:
+        return platform in self.platforms or platform in self.interpret_only_on
+
+
+_REGISTRY: Dict[Tuple[str, str], KernelImpl] = {}
+# (kind, name, spec) -> bound callable; specs are frozen dataclasses of
+# tuples, hence hashable.  Bounded implicitly: one entry per distinct model
+# layer spec per impl.
+_BIND_CACHE: Dict[Tuple[str, str, Any], Callable] = {}
+
+
+def canonical_kind(kind: str) -> str:
+    kind = KIND_ALIASES.get(kind, kind)
+    if kind not in KINDS:
+        raise KeyError(f"unknown kernel kind {kind!r}; known: {KINDS}")
+    return kind
+
+
+def register(
+    kind: str,
+    name: str,
+    *,
+    needs_tables: bool = False,
+    platforms: Tuple[str, ...] = ("cpu", "gpu", "tpu"),
+    interpret_only_on: Tuple[str, ...] = (),
+    description: str = "",
+    overwrite: bool = False,
+) -> Callable[[Builder], Builder]:
+    """Decorator registering ``builder(spec) -> callable`` under a name."""
+    kind = canonical_kind(kind)
+
+    def deco(builder: Builder) -> Builder:
+        key = (kind, name)
+        if key in _REGISTRY and not overwrite:
+            raise ValueError(f"kernel {kind}/{name} already registered")
+        _REGISTRY[key] = KernelImpl(
+            kind=kind, name=name, builder=builder, needs_tables=needs_tables,
+            platforms=platforms, interpret_only_on=interpret_only_on,
+            description=description,
+        )
+        # a re-registration invalidates stale bindings
+        for k in [k for k in _BIND_CACHE if k[0] == kind and k[1] == name]:
+            del _BIND_CACHE[k]
+        return builder
+
+    return deco
+
+
+def unregister(kind: str, name: str) -> None:
+    kind = canonical_kind(kind)
+    _REGISTRY.pop((kind, name), None)
+    for k in [k for k in _BIND_CACHE if k[0] == kind and k[1] == name]:
+        del _BIND_CACHE[k]
+
+
+def get_impl(kind: str, name: str) -> KernelImpl:
+    kind = canonical_kind(kind)
+    try:
+        return _REGISTRY[(kind, name)]
+    except KeyError:
+        avail = available(kind)
+        raise KeyError(
+            f"no kernel impl {name!r} for kind {kind!r}; available: {avail}"
+        ) from None
+
+
+def available(kind: str, platform: Optional[str] = None) -> List[str]:
+    kind = canonical_kind(kind)
+    out = []
+    for (k, n), impl in sorted(_REGISTRY.items()):
+        if k == kind and (platform is None or impl.supports(platform)):
+            out.append(n)
+    return out
+
+
+def resolve(kind: str, name: str, spec: Any) -> Callable:
+    """Bind impl ``name`` to ``spec``; memoised per (kind, name, spec)."""
+    kind = canonical_kind(kind)
+    key = (kind, name, spec)
+    fn = _BIND_CACHE.get(key)
+    if fn is None:
+        fn = get_impl(kind, name).builder(spec)
+        _BIND_CACHE[key] = fn
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# built-in implementations
+# ---------------------------------------------------------------------------
+
+
+@register(KIND_TP, "ref", description="per-path dense-CG einsum chain (oracle)")
+def _tp_ref_builder(spec):
+    from functools import partial
+
+    from repro.core.channelwise_tp import tp_ref
+
+    return partial(tp_ref, spec=spec)
+
+
+@register(KIND_TP, "fused", needs_tables=True,
+          description="sparse-table fused einsum (XLA)")
+def _tp_fused_builder(spec):
+    from functools import partial
+
+    from repro.core.channelwise_tp import build_tp_tables, tp_fused
+
+    return partial(tp_fused, spec=spec, tables=build_tp_tables(spec))
+
+
+@register(KIND_TP, "pallas", needs_tables=True, platforms=("tpu",),
+          interpret_only_on=("cpu",),
+          description="Pallas TPU kernel (interpret mode off-TPU)")
+def _tp_pallas_builder(spec):
+    from functools import partial
+
+    from repro.core.channelwise_tp import build_tp_tables
+    from repro.kernels.channelwise_tp.ops import tp_pallas
+
+    return partial(tp_pallas, spec=spec, tables=build_tp_tables(spec))
+
+
+@register(KIND_SYMCON, "ref", description="nu-fold dense-CG chain (oracle)")
+def _symcon_ref_builder(spec):
+    from functools import partial
+
+    from repro.core.symmetric_contraction import symcon_ref
+
+    return partial(symcon_ref, spec=spec)
+
+
+@register(KIND_SYMCON, "fused", needs_tables=True,
+          description="sparse-path-table fused contraction (XLA)")
+def _symcon_fused_builder(spec):
+    from functools import partial
+
+    from repro.core.symmetric_contraction import build_symcon_tables, symcon_fused
+
+    return partial(symcon_fused, spec=spec, tables=build_symcon_tables(spec))
+
+
+@register(KIND_SYMCON, "pallas", needs_tables=True, platforms=("tpu",),
+          interpret_only_on=("cpu",),
+          description="Pallas TPU kernel (interpret mode off-TPU)")
+def _symcon_pallas_builder(spec):
+    from functools import partial
+
+    from repro.core.symmetric_contraction import build_symcon_tables
+    from repro.kernels.symmetric_contraction.ops import symcon_pallas
+
+    return partial(symcon_pallas, spec=spec, tables=build_symcon_tables(spec))

@@ -51,7 +51,7 @@ from repro.launch.sharding import (
 from repro.models.model import decode_step, forward_prefill, set_activation_sharding
 from repro.roofline.analytic import lm_cell_cost, mace_cell_cost
 from repro.roofline.analysis import RECOMMENDATION, roofline_terms
-from repro.roofline.hlo import collective_bytes_from_hlo
+from repro.roofline.hlo import collective_bytes_from_hlo, compiled_cost_analysis
 
 RESULTS_PATH = os.path.join(
     os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun_results.json"
@@ -253,7 +253,7 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, overrides=None) -> Dict
                     - ma.alias_size_in_bytes
                 ) / 1e9,
             }
-            ca = compiled.cost_analysis() or {}
+            ca = compiled_cost_analysis(compiled)
             rec["cost_analysis"] = {
                 "flops": float(ca.get("flops", -1.0)),
                 "bytes_accessed": float(ca.get("bytes accessed", -1.0)),

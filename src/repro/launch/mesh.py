@@ -24,3 +24,17 @@ def dp_axes(mesh) -> tuple:
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for CPU tests (requires >= prod(shape) host devices)."""
     return jax.make_mesh(shape, axes)
+
+
+def make_dp_mesh(n_ranks: int):
+    """Pure data-parallel mesh for the MACE execution engine: one ``data``
+    axis, one collated bin per device.  Requires >= n_ranks visible devices
+    (on CPU force them with --xla_force_host_platform_device_count=N)."""
+    n_dev = len(jax.devices())
+    if n_dev < n_ranks:
+        raise ValueError(
+            f"need {n_ranks} devices for a {n_ranks}-rank dp mesh, have {n_dev}; "
+            "on CPU set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{n_ranks} before importing jax"
+        )
+    return jax.make_mesh((n_ranks,), ("data",))

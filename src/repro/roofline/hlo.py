@@ -39,6 +39,21 @@ _GROUPS_BRACES_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 
 
+def compiled_cost_analysis(compiled) -> Dict[str, float]:
+    """Version-portable ``compiled.cost_analysis()``.
+
+    jaxlib has returned, across versions: a dict, a list with one dict per
+    device/partition, or None.  Normalise to a single flat dict (first
+    partition — SPMD partitions are identical programs).
+    """
+    ca = compiled.cost_analysis()
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        return dict(ca[0]) if ca else {}
+    return dict(ca)
+
+
 def _shape_bytes(type_str: str) -> int:
     total = 0
     for dtype, dims in _SHAPE_RE.findall(type_str):

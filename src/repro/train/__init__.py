@@ -9,3 +9,10 @@ from .optimizer import (  # noqa: F401
 )
 from .checkpoint import save_checkpoint, restore_checkpoint, latest_step  # noqa: F401
 from .compression import int8_compress_decompress, make_error_feedback  # noqa: F401
+from .engine import (  # noqa: F401
+    ENGINES,
+    RankTelemetry,
+    SequentialEngine,
+    ShardMapEngine,
+    make_engine,
+)

@@ -47,6 +47,29 @@ def make_error_feedback():
     return init, compress
 
 
+def compressed_psum_ef(
+    g: jnp.ndarray, e: jnp.ndarray, axis_name: str
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """``compressed_psum`` with rank-local error feedback.
+
+    The residual ``e`` (what quantisation dropped on *this* rank last step)
+    is added to the gradient before quantising, and the new residual is
+    returned — the accumulated update sequence stays unbiased while the
+    wire payload stays int8/int16.  Like ``compressed_psum``, the int16
+    wire sum is exact only for group sizes up to 258 (127 x g <= 32767);
+    larger data-parallel groups need a hierarchical reduction before this
+    collective.  Returns ``(g_hat_mean, new_e)``; the residual is
+    rank-local state and is never reduced."""
+    c = g.astype(jnp.float32) + e
+    scale = jnp.max(jnp.abs(c)) / 127.0 + 1e-12
+    scale = jax.lax.pmax(scale, axis_name)
+    q = jnp.clip(jnp.round(c / scale), -127, 127).astype(jnp.int16)
+    total = jax.lax.psum(q, axis_name)
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    g_hat = (total.astype(jnp.float32) * scale / n).astype(g.dtype)
+    return g_hat, c - q.astype(jnp.float32) * scale
+
+
 def compressed_psum(g: jnp.ndarray, axis_name: str) -> jnp.ndarray:
     """Quantised-payload all-reduce for use inside shard_map.
 

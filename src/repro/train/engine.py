@@ -1,0 +1,388 @@
+"""Execution engines: one step API, two data-parallel backends.
+
+Architecture
+------------
+The paper's headline result is *distributed* training (Algorithm 1 bins ->
+one bin per GPU per step -> gradient all-reduce).  Everything above the
+optimizer update is therefore factored into an *engine* with one contract:
+
+    engine.collate(mols_per_rank, bin_shape) -> backend batch layout
+    engine.init_ef(params)                   -> error-feedback residuals
+    engine.step(params, opt_state, ef, batch, i)
+                                    -> (params, opt_state, ef, metrics)
+
+and two interchangeable backends:
+
+``SequentialEngine``
+    The oracle.  Runs the jitted per-bin value-and-grad once per logical
+    rank in a host loop, combines gradients exactly the way the distributed
+    all-reduce would (mean, or — when ``compress_grads`` is set — the
+    shared-scale int8 quantised sum with rank-local error feedback that
+    mirrors ``compression.compressed_psum_ef``), then applies one optimizer
+    update.  Because each rank's grad is computed in its own device
+    dispatch, it also measures genuine *per-rank step times* — the
+    telemetry that calibrates the straggler model.
+
+``ShardMapEngine``
+    The real SPMD backend.  ``data/collate.collate_stacked`` stacks the R
+    collated bins on a leading ``[R, ...]`` axis; the whole train step
+    (value_and_grad -> ``lax.pmean`` / ``compressed_psum_ef`` -> optimizer)
+    runs under ``jax.shard_map`` on a ``("data",)`` mesh from
+    ``launch.mesh.make_dp_mesh``, so one jitted program executes on all
+    devices with the gradient all-reduce compiled in.  Params/opt state are
+    replicated (``P()``); the batch and the error-feedback residuals are
+    sharded on axis 0 (``P("data")``).
+
+Both backends are numerically interchangeable (tests/test_engine.py proves
+allclose over multi-step training on a forced multi-device CPU mesh), so the
+sequential loop remains the reference semantics while shard_map provides the
+scaling path every later feature (async host prefetch, elastic rescale,
+multi-backend kernels via ``kernels.registry``) plugs into.
+
+Telemetry
+---------
+Each engine records a ``RankTelemetry``: per-step per-rank wall seconds
+(sequential; shard_map reports the lock-step wall time) and per-rank loads
+(real atoms per bin).  ``RankTelemetry.straggler_matrix()`` feeds
+``core.binpack.balance_metrics(..., measured_work=...)`` so the straggler
+ratio in the scaling benchmarks comes from *measured* numbers, not just the
+token-count proxy; pass ``skip=1`` to drop the jit-compiling first step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Callable, Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:  # jax >= 0.6 re-exports it at top level
+    from jax import shard_map  # type: ignore[attr-defined]
+except ImportError:
+    from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core.mace import MaceConfig, weighted_loss
+from repro.data.collate import BinShape, collate_bin, collate_stacked
+from repro.launch.mesh import make_dp_mesh
+from .compression import compressed_psum_ef
+from .optimizer import Transform, apply_updates
+
+Params = Any
+Batch = Dict[str, jnp.ndarray]
+DP_AXIS = "data"
+
+
+# ---------------------------------------------------------------------------
+# telemetry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RankTelemetry:
+    """Per-step, per-rank measurements accumulated over a run.
+
+    ``lockstep`` marks engines (shard_map) whose ranks execute one SPMD
+    program: per-rank wall time is not separable there, so the recorded
+    times are the lock-step step wall and ``straggler_matrix`` falls back
+    to the per-rank *loads* (which are genuinely measured per rank).
+
+    All summary methods take ``skip`` — pass ``skip=1`` when the run
+    includes the first (jit-compiling) step, otherwise compilation time
+    pollutes the calibration.
+    """
+
+    n_ranks: int
+    lockstep: bool = False
+    times: List[List[float]] = dataclasses.field(default_factory=list)
+    loads: List[List[float]] = dataclasses.field(default_factory=list)
+
+    def record(self, times: Sequence[float], loads: Sequence[float]) -> None:
+        assert len(times) == self.n_ranks and len(loads) == self.n_ranks
+        self.times.append([float(t) for t in times])
+        self.loads.append([float(l) for l in loads])
+
+    @property
+    def n_steps(self) -> int:
+        return len(self.times)
+
+    def work_matrix(self, skip: int = 0) -> np.ndarray:
+        """[steps, ranks] wall seconds."""
+        return np.asarray(
+            self.times[skip:], dtype=np.float64
+        ).reshape(-1, self.n_ranks)
+
+    def load_matrix(self, skip: int = 0) -> np.ndarray:
+        """[steps, ranks] real atoms per bin."""
+        return np.asarray(
+            self.loads[skip:], dtype=np.float64
+        ).reshape(-1, self.n_ranks)
+
+    def straggler_matrix(self, skip: int = 0) -> np.ndarray:
+        """[steps, ranks] per-rank work for the straggler model — measured
+        times where ranks are timed individually (sequential), measured
+        loads where they run in lock-step (shard_map).  Feed to
+        ``binpack.balance_metrics(measured_work=...)``."""
+        return self.load_matrix(skip) if self.lockstep else self.work_matrix(skip)
+
+    def c_token(self, skip: int = 0) -> float:
+        """Calibrated per-token step cost (seconds/atom) for the epoch-time
+        model in benchmarks/common.py.
+
+        Lock-step engines take max-rank-load wall time per step (the whole
+        step waits on the straggler), so dividing the step wall by the
+        *max* rank load — not the mean — keeps the estimate unbiased."""
+        t = self.work_matrix(skip)
+        l = self.load_matrix(skip)
+        if t.size == 0:
+            return 0.0
+        if self.lockstep:
+            # one wall time per step (identical across the rank axis)
+            return float(t[:, 0].sum()) / max(float(l.max(axis=1).sum()), 1.0)
+        return float(t.sum()) / max(float(l.sum()), 1.0)
+
+    def measured_straggler(self, skip: int = 0) -> float:
+        """mean over steps of (max rank work / mean rank work)."""
+        w = self.straggler_matrix(skip)
+        if w.size == 0:
+            return 1.0
+        return float(np.mean(w.max(axis=1) / np.maximum(w.mean(axis=1), 1e-12)))
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+
+
+def make_loss_fn(mace_cfg: MaceConfig, tcfg, n_graphs: int) -> Callable:
+    def loss_fn(params, batch):
+        return weighted_loss(
+            params, mace_cfg, batch, n_graphs,
+            tcfg.energy_weight, tcfg.forces_weight,
+        )
+
+    if tcfg.remat:
+        loss_fn = jax.checkpoint(loss_fn)
+    return loss_fn
+
+
+def _emulated_compressed_mean_ef(stacked_g, stacked_e):
+    """Host-loop twin of ``compression.compressed_psum_ef`` on grads and
+    error-feedback residuals stacked [R, ...]: per-rank residual added,
+    shared pmax scale, int8-quantised per-rank payloads, integer sum,
+    dequantise / R, new residuals kept rank-local.  Bit-matches the
+    shard_map collective (the int16 wire sum is exact in f32 for R <= 258).
+    Returns ``(g_hat_mean, new_stacked_e)``."""
+    R = stacked_g.shape[0]
+    c = stacked_g.astype(jnp.float32) + stacked_e
+    scale = jnp.max(jnp.abs(c)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(c / scale), -127, 127)
+    total = jnp.sum(q, axis=0)
+    g_hat = (total * scale / R).astype(stacked_g.dtype)
+    return g_hat, c - q * scale
+
+
+def _init_stacked_ef(params, n_ranks: int, compress: bool):
+    """Per-rank error-feedback residuals, stacked [R, ...] (empty when the
+    compressed all-reduce is off)."""
+    if not compress:
+        return ()
+    return jax.tree.map(
+        lambda p: jnp.zeros((n_ranks,) + p.shape, jnp.float32), params
+    )
+
+
+def _rank_load(batch: Batch) -> jnp.ndarray:
+    return jnp.sum(batch["node_mask"].astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# backends
+# ---------------------------------------------------------------------------
+
+
+class SequentialEngine:
+    """Per-bin host loop over logical ranks — the oracle backend.
+
+    Gradients are combined exactly as the distributed all-reduce would be,
+    so a run with R logical ranks here equals a ShardMapEngine run with R
+    devices (allclose; see tests/test_engine.py).
+    """
+
+    name = "sequential"
+
+    def __init__(
+        self, mace_cfg: MaceConfig, tcfg, optimizer: Transform, n_graphs: int
+    ):
+        self.n_ranks = tcfg.n_ranks
+        self.compress = tcfg.compress_grads
+        self.telemetry = RankTelemetry(self.n_ranks)
+        loss_fn = make_loss_fn(mace_cfg, tcfg, n_graphs)
+        self._grad_fn = jax.jit(jax.value_and_grad(loss_fn, has_aux=True))
+        compress = self.compress
+
+        @jax.jit
+        def finalize(params, opt_state, ef, stacked_grads, stacked_metrics, step_idx):
+            if compress:
+                pairs = jax.tree.map(_emulated_compressed_mean_ef, stacked_grads, ef)
+                is_pair = lambda x: isinstance(x, tuple)
+                grads = jax.tree.map(lambda x: x[0], pairs, is_leaf=is_pair)
+                ef = jax.tree.map(lambda x: x[1], pairs, is_leaf=is_pair)
+            else:
+                grads = jax.tree.map(partial(jnp.mean, axis=0), stacked_grads)
+            metrics = jax.tree.map(partial(jnp.mean, axis=0), stacked_metrics)
+            updates, opt_state = optimizer.update(grads, opt_state, params, step_idx)
+            return apply_updates(params, updates), opt_state, ef, metrics
+
+        self._finalize = finalize
+
+    def init_ef(self, params):
+        return _init_stacked_ef(params, self.n_ranks, self.compress)
+
+    def collate(
+        self, mols_per_rank: Sequence[Sequence[Any]], shape: BinShape
+    ) -> List[Batch]:
+        return [
+            {k: jnp.asarray(v) for k, v in collate_bin(m, shape).items()}
+            for m in mols_per_rank
+        ]
+
+    def step(self, params, opt_state, ef_state, batches: List[Batch], step_idx):
+        grads_l, metrics_l, times, loads = [], [], [], []
+        for b in batches:
+            t0 = time.perf_counter()
+            (_, metrics), grads = self._grad_fn(params, b)
+            jax.block_until_ready(grads)
+            times.append(time.perf_counter() - t0)
+            loads.append(float(_rank_load(b)))
+            grads_l.append(grads)
+            metrics_l.append(metrics)
+        stacked_g = jax.tree.map(lambda *g: jnp.stack(g), *grads_l)
+        stacked_m = jax.tree.map(lambda *m: jnp.stack(m), *metrics_l)
+        params, opt_state, ef_state, metrics = self._finalize(
+            params, opt_state, ef_state, stacked_g, stacked_m, step_idx
+        )
+        self.telemetry.record(times, loads)
+        return params, opt_state, ef_state, metrics
+
+
+class ShardMapEngine:
+    """Real SPMD data parallelism: one device per rank under ``shard_map``.
+
+    The jitted step shards the stacked ``[R, ...]`` batch over the mesh's
+    ``data`` axis, runs value-and-grad per device, all-reduces gradients
+    (``lax.pmean``, or ``compressed_psum`` when ``compress_grads``), and
+    applies the optimizer update on replicated params — exactly one compiled
+    program per BinShape, collective included.
+    """
+
+    name = "shard_map"
+
+    def __init__(
+        self,
+        mace_cfg: MaceConfig,
+        tcfg,
+        optimizer: Transform,
+        n_graphs: int,
+        *,
+        mesh=None,
+    ):
+        self.n_ranks = tcfg.n_ranks
+        self.mesh = mesh if mesh is not None else make_dp_mesh(self.n_ranks)
+        mesh_dp = int(np.prod(self.mesh.devices.shape))
+        if mesh_dp != self.n_ranks:
+            raise ValueError(
+                f"mesh has {mesh_dp} devices but engine needs n_ranks={self.n_ranks}"
+            )
+        self.compress = tcfg.compress_grads
+        self.telemetry = RankTelemetry(self.n_ranks, lockstep=True)
+        loss_fn = make_loss_fn(mace_cfg, tcfg, n_graphs)
+        compress = self.compress
+
+        def rank_step(params, opt_state, ef, batch, step_idx):
+            batch = jax.tree.map(lambda x: x[0], batch)  # [1, ...] block -> [...]
+            (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+            if compress:
+                pairs = jax.tree.map(
+                    lambda g, e: compressed_psum_ef(g, e[0], DP_AXIS), grads, ef
+                )
+                is_pair = lambda x: isinstance(x, tuple)
+                grads = jax.tree.map(lambda x: x[0], pairs, is_leaf=is_pair)
+                ef = jax.tree.map(lambda x: x[1][None], pairs, is_leaf=is_pair)
+            else:
+                grads = jax.lax.pmean(grads, DP_AXIS)
+            metrics = jax.lax.pmean(metrics, DP_AXIS)
+            load = _rank_load(batch)[None]               # [1] -> gathers to [R]
+            updates, opt_state = optimizer.update(grads, opt_state, params, step_idx)
+            return apply_updates(params, updates), opt_state, ef, metrics, load
+
+        self._step_fn = jax.jit(
+            shard_map(
+                rank_step,
+                mesh=self.mesh,
+                in_specs=(P(), P(), P(DP_AXIS), P(DP_AXIS), P()),
+                out_specs=(P(), P(), P(DP_AXIS), P(), P(DP_AXIS)),
+            )
+        )
+
+    def init_ef(self, params):
+        return _init_stacked_ef(params, self.n_ranks, self.compress)
+
+    def collate(
+        self, mols_per_rank: Sequence[Sequence[Any]], shape: BinShape
+    ) -> Batch:
+        if len(mols_per_rank) != self.n_ranks:
+            raise ValueError(
+                f"got {len(mols_per_rank)} bins for {self.n_ranks} ranks"
+            )
+        return {
+            k: jnp.asarray(v)
+            for k, v in collate_stacked(mols_per_rank, shape).items()
+        }
+
+    def step(self, params, opt_state, ef_state, batch: Batch, step_idx):
+        t0 = time.perf_counter()
+        params, opt_state, ef_state, metrics, loads = self._step_fn(
+            params, opt_state, ef_state, batch, step_idx
+        )
+        jax.block_until_ready(params)
+        wall = time.perf_counter() - t0
+        # lock-step SPMD: per-rank wall time is indistinguishable on one
+        # host, so each rank is charged the step wall; loads stay per-rank
+        # (telemetry is marked lockstep so straggler_matrix uses loads).
+        self.telemetry.record(
+            [wall] * self.n_ranks, [float(x) for x in np.asarray(loads)]
+        )
+        return params, opt_state, ef_state, metrics
+
+
+ENGINES = {
+    SequentialEngine.name: SequentialEngine,
+    ShardMapEngine.name: ShardMapEngine,
+}
+
+
+def make_engine(
+    name: str,
+    mace_cfg: MaceConfig,
+    tcfg,
+    optimizer: Transform,
+    n_graphs: int,
+    *,
+    mesh=None,
+):
+    """Engine factory: ``name`` in {"sequential", "shard_map"}."""
+    try:
+        cls = ENGINES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown engine {name!r}; available: {sorted(ENGINES)}"
+        ) from None
+    if cls is ShardMapEngine:
+        return cls(mace_cfg, tcfg, optimizer, n_graphs, mesh=mesh)
+    return cls(mace_cfg, tcfg, optimizer, n_graphs)

@@ -1,30 +1,31 @@
-"""Trainer: step factory + fault-tolerant epoch loop for the MACE CFM.
+"""Trainer: fault-tolerant epoch loop over a pluggable execution engine.
 
 The loop composes every substrate in the repo: balanced sampler (Algorithm 1
-per epoch), static-shape collation, jitted value_and_grad step with optional
-remat / grad accumulation / int8-compressed data-parallel all-reduce, EMA,
-periodic atomic checkpoints, and resume (params, opt state, EMA, sampler
-cursor all restored).  ``simulate_failure_at`` lets tests kill the loop
-mid-epoch and prove restart equivalence.
+per epoch), static-shape collation, an execution engine (``train.engine``:
+``sequential`` per-bin oracle or real ``shard_map`` SPMD over a device mesh)
+running the jitted value_and_grad step with optional remat / int8-compressed
+data-parallel all-reduce, EMA, periodic atomic checkpoints, and resume
+(params, opt state, EMA, sampler cursor all restored).
+``simulate_failure_at`` lets tests kill the loop mid-epoch and prove restart
+equivalence.  Per-rank step-time/load telemetry is exposed via
+``Trainer.engine.telemetry`` for the straggler model.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from functools import partial
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.mace import MaceConfig, init_mace, weighted_loss
-from repro.data.collate import BinShape, collate_bin
+from repro.core.mace import MaceConfig, init_mace
+from repro.data.collate import BinShape
 from repro.data.molecules import SyntheticCFMDataset
 from repro.data.sampler import BalancedBatchSampler, FixedCountSampler, SamplerState
 from .checkpoint import latest_step, restore_checkpoint, save_checkpoint
-from .optimizer import EMA, Transform, adamw, apply_updates, chain, clip_by_global_norm
-from .compression import make_error_feedback
+from .engine import make_engine
+from .optimizer import EMA, adamw, chain, clip_by_global_norm
 
 
 @dataclasses.dataclass
@@ -41,37 +42,11 @@ class TrainerConfig:
     forces_weight: float = 100.0
     remat: bool = False
     compress_grads: bool = False
+    engine: str = "sequential"       # "sequential" | "shard_map" (train.engine)
     fixed_graphs_per_batch: int = 8   # baseline sampler's PyG-style count
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 50
     log_every: int = 10
-
-
-def make_train_step(
-    mace_cfg: MaceConfig, tcfg: TrainerConfig, optimizer: Transform, n_graphs: int
-) -> Callable:
-    def loss_fn(params, batch):
-        return weighted_loss(
-            params, mace_cfg, batch, n_graphs,
-            tcfg.energy_weight, tcfg.forces_weight,
-        )
-
-    if tcfg.remat:
-        loss_fn = jax.checkpoint(loss_fn)
-
-    @jax.jit
-    def step(params, opt_state, ef_state, batch, step_idx):
-        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-            params, batch
-        )
-        if tcfg.compress_grads:
-            _, compress = make_error_feedback()
-            grads, ef_state = compress(grads, ef_state)
-        updates, opt_state = optimizer.update(grads, opt_state, params, step_idx)
-        params = apply_updates(params, updates)
-        return params, opt_state, ef_state, metrics
-
-    return step
 
 
 class Trainer:
@@ -83,6 +58,7 @@ class Trainer:
         *,
         sampler: str = "balanced",
         seed: int = 0,
+        mesh=None,
     ):
         self.mace_cfg = mace_cfg
         self.tcfg = tcfg
@@ -110,13 +86,15 @@ class Trainer:
         self.params = init_mace(key, mace_cfg)
         self.opt_state = self.optimizer.init(self.params)
         self.ema_params = self.ema.init(self.params)
-        ef_init, _ = make_error_feedback()
-        self.ef_state = ef_init(self.params) if tcfg.compress_grads else ()
         self.global_step = 0
         self.sampler_state = SamplerState(epoch=0, cursor=0)
-        self._step_fn = make_train_step(
-            mace_cfg, tcfg, self.optimizer, tcfg.max_graphs
+        self.engine = make_engine(
+            tcfg.engine, mace_cfg, tcfg, self.optimizer, tcfg.max_graphs,
+            mesh=mesh,
         )
+        # per-rank error-feedback residuals for the compressed all-reduce
+        # (empty when compress_grads is off); checkpointed with the run.
+        self.ef_state = self.engine.init_ef(self.params)
 
     # -------------------------- fault tolerance ---------------------------
 
@@ -153,27 +131,26 @@ class Trainer:
 
     # ------------------------------ loop ----------------------------------
 
-    def _collate(self, bin_items) -> Dict[str, jnp.ndarray]:
-        mols = [self.dataset.get(i) for i in bin_items]
-        b = collate_bin(mols, self.bin_shape)
-        return {k: jnp.asarray(v) for k, v in b.items()}
-
     def train(
         self,
         n_epochs: int = 1,
         *,
         max_steps: Optional[int] = None,
         simulate_failure_at: Optional[int] = None,
-        rank: int = 0,
     ) -> Dict[str, Any]:
         history = []
         t_start = time.perf_counter()
         while self.sampler_state.epoch < n_epochs:
-            for bin_items in self.sampler.epoch_iter(rank, self.sampler_state):
-                batch = self._collate(bin_items)
-                self.params, self.opt_state, self.ef_state, metrics = self._step_fn(
-                    self.params, self.opt_state, self.ef_state, batch,
-                    jnp.asarray(self.global_step),
+            for rank_bins in self.sampler.step_iter(self.sampler_state):
+                mols_per_rank = [
+                    [self.dataset.get(i) for i in b] for b in rank_bins
+                ]
+                batch = self.engine.collate(mols_per_rank, self.bin_shape)
+                self.params, self.opt_state, self.ef_state, metrics = (
+                    self.engine.step(
+                        self.params, self.opt_state, self.ef_state, batch,
+                        jnp.asarray(self.global_step),
+                    )
                 )
                 self.ema_params = self.ema.update(
                     self.ema_params, self.params, jnp.asarray(self.global_step)

@@ -1,7 +1,34 @@
-"""Property-based + behavioural tests for Algorithm 1 (Create-Balanced-Batches)."""
+"""Property-based + behavioural tests for Algorithm 1 (Create-Balanced-Batches).
+
+``hypothesis`` is optional: without it the property-based tests are skipped
+(collected as no-arg skip stubs) and the deterministic tests still run.
+"""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - depends on environment
+    class _StrategyStub:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
+
+    def settings(**kwargs):
+        return lambda f: f
+
+    def given(**kwargs):
+        def deco(f):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def stub():
+                pass
+
+            stub.__name__ = f.__name__
+            stub.__doc__ = f.__doc__
+            return stub
+
+        return deco
 
 from repro.core.binpack import (
     assignment_vector,

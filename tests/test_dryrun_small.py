@@ -28,7 +28,7 @@ from repro.launch.sharding import (
 )
 from repro.launch.shapes import lm_param_specs, sds
 from repro.models.model import decode_step, init_decode_state
-from repro.roofline.hlo import collective_bytes_from_hlo
+from repro.roofline.hlo import collective_bytes_from_hlo, compiled_cost_analysis
 
 mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
 out = {}
@@ -54,7 +54,7 @@ out["train"] = {
     "temp_bytes": ma.temp_size_in_bytes,
     "collective_total": coll["total"],
     "has_allreduce": coll.get("all-reduce", 0) > 0,
-    "flops": float(comp.cost_analysis().get("flops", -1)),
+    "flops": float(compiled_cost_analysis(comp).get("flops", -1)),
 }
 
 # --- decode cell (TP-resident weights, sharded cache) ---

@@ -80,7 +80,9 @@ def test_analytic_matches_cost_analysis_on_unrolled_model():
     }
     fwd = jax.jit(lambda p, b: forward_train(p, cfg, b, loss_chunk=S)[0])
     comp = fwd.lower(params, batch).compile()
-    xla_flops = float(comp.cost_analysis().get("flops", 0.0))
+    from repro.roofline.hlo import compiled_cost_analysis
+
+    xla_flops = float(compiled_cost_analysis(comp).get("flops", 0.0))
 
     cost = lm_cell_cost(cfg, {"kind": "prefill", "batch": B, "seq": S})
     # prefill kind = fwd-only matmuls + attention (loss head included in

@@ -131,18 +131,20 @@ def test_trainer_runs_and_checkpoints(tmp_path):
 
 @pytest.mark.slow
 def test_single_batch_overfit():
-    """Train repeatedly on ONE batch: loss must drop hard (step mechanics +
-    optimizer + grads all correct end-to-end)."""
+    """Train repeatedly on ONE batch through the engine API: loss must drop
+    hard (step mechanics + optimizer + grads all correct end-to-end)."""
     import jax.numpy as jnp
 
     ds = SyntheticCFMDataset(8, seed=0, max_atoms=48)
     tcfg = TrainerConfig(capacity=128, edge_factor=48, max_graphs=16, lr=5e-3)
     tr = Trainer(TINY, tcfg, ds, seed=0)
     bin_items = tr.sampler.bins_for_epoch(0)[0]
-    batch = tr._collate(bin_items)
+    batch = tr.engine.collate(
+        [[ds.get(i) for i in bin_items]], tr.bin_shape
+    )
     losses = []
     for i in range(40):
-        tr.params, tr.opt_state, tr.ef_state, m = tr._step_fn(
+        tr.params, tr.opt_state, tr.ef_state, m = tr.engine.step(
             tr.params, tr.opt_state, tr.ef_state, batch, jnp.asarray(i)
         )
         losses.append(float(m["loss"]))
