@@ -12,10 +12,14 @@ devices for shard_map on CPU), reads the per-rank step-time/load telemetry,
 and feeds it back as (a) the measured c_token of ``epoch_time_model`` and
 (b) a *measured* straggler ratio via
 ``binpack.balance_metrics(measured_work=...)`` — replacing the token-count
-proxy with on-device numbers.
+proxy with on-device numbers.  The measured run goes through the async
+prefetch pipeline (``--prefetch N``, default 1): the calibration row also
+reports total host collate seconds, the seconds hidden behind device
+compute (``host_overlap_s``), and the hidden fraction — the quantity the
+paper's device-never-waits epoch model assumes is ~100% at scale.
 
     PYTHONPATH=src python -m benchmarks.bench_scaling \
-        --measure-steps 8 --engine shard_map --devices 2
+        --measure-steps 8 --engine shard_map --devices 2 --prefetch 2
 """
 from __future__ import annotations
 
@@ -43,6 +47,7 @@ def calibrate_with_engine(
     steps: int = 8,
     n_graphs: int = 96,
     capacity: int = 128,
+    prefetch: int = 1,
 ):
     """Train ``steps`` measured steps (+1 jit-warmup step that is discarded)
     through the execution engine and return (c_token, rows) — the calibrated
@@ -64,7 +69,7 @@ def calibrate_with_engine(
     ds = SyntheticCFMDataset(n_graphs, seed=11, max_atoms=min(96, capacity))
     tcfg = TrainerConfig(
         capacity=capacity, edge_factor=48, max_graphs=16, n_ranks=n_ranks,
-        engine=engine, ckpt_dir=None,
+        engine=engine, prefetch=prefetch, ckpt_dir=None,
     )
     tr = Trainer(mcfg, tcfg, ds, seed=0)
     tr.train(n_epochs=1_000_000, max_steps=steps + 1)  # step 0 pays the jit
@@ -77,10 +82,14 @@ def calibrate_with_engine(
     measured = balance_metrics(
         packed, n_ranks, measured_work=tel.straggler_matrix(skip=1)
     )
+    host = tel.host_matrix(skip=1)
     rows = [
         f"fig7_calibration,engine={engine},ranks={n_ranks},steps={tel.n_steps - 1},"
         f"c_token_s={c_tok:.3e},straggler_proxy={proxy.straggler_ratio:.3f},"
-        f"straggler_measured={measured.straggler_ratio:.3f}"
+        f"straggler_measured={measured.straggler_ratio:.3f},"
+        f"prefetch={prefetch},host_collate_s={float(host[:, 0].sum()):.3e},"
+        f"host_overlap_s={tel.overlap_seconds(skip=1):.3e},"
+        f"overlap_frac={tel.overlap_fraction(skip=1):.3f}"
     ]
     return c_tok, rows
 
@@ -142,6 +151,9 @@ if __name__ == "__main__":
     ap.add_argument("--measure-steps", type=int, default=0,
                     help="calibrate c_token/straggler by training N real "
                          "steps through the execution engine")
+    ap.add_argument("--prefetch", type=int, default=1,
+                    help="async collate lookahead depth for the measured "
+                         "run (0 = inline)")
     args = ap.parse_args()
 
     if args.devices:
@@ -153,7 +165,8 @@ if __name__ == "__main__":
     c_token, extra = 1.0, None
     if args.measure_steps:
         c_tok, extra = calibrate_with_engine(
-            engine=args.engine, n_ranks=args.ranks, steps=args.measure_steps
+            engine=args.engine, n_ranks=args.ranks, steps=args.measure_steps,
+            prefetch=args.prefetch,
         )
         if c_tok is not None:
             c_token = c_tok

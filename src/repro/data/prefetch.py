@@ -1,0 +1,223 @@
+"""Async host prefetch: overlap Algorithm-1 collation with device compute.
+
+The paper's per-epoch speedup assumes the device never waits on the host:
+bin collation (``engine.collate`` — pure numpy work) for step t+1 must run
+*while* the device executes ``engine.step`` for step t.  ``PrefetchPipeline``
+is that overlap as a first-class subsystem:
+
+* **Bounded double buffering** — a single producer thread pulls sampler
+  items (pure index lists, so lookahead never touches device state), runs
+  the fetch/collate callable, and parks finished batches in a
+  ``queue.Queue(maxsize=depth)``.  ``depth=1`` is classic double buffering
+  (one batch being consumed, one being built); larger depths absorb
+  collate-time jitter.  ``depth=0`` degenerates to the synchronous inline
+  loop — same code path, no thread — so "prefetch off" is not a separate
+  implementation that could drift.
+* **Determinism** — items are fetched strictly in sampler order by one
+  thread, so the batch stream is bitwise identical to the inline loop
+  (tests/test_prefetch.py proves it array-for-array).
+* **Clean shutdown** — ``close()`` (or leaving the ``with`` block) stops the
+  producer even when the queue is full: the producer's blocking ``put`` is a
+  poll-with-timeout loop that re-checks the stop flag, so early exit from a
+  training loop (max_steps, checkpoint-triggered abort, exceptions) can
+  never deadlock or leak the thread.
+* **Exception propagation** — a producer-side error (bad molecule, collate
+  overflow, ...) is captured and re-raised in the *consumer* at the step
+  where it would have surfaced in the inline loop.
+* **Telemetry** — every yielded :class:`PrefetchItem` carries ``collate_s``
+  (host wall seconds spent building the batch) and ``wait_s`` (seconds the
+  consumer blocked waiting for it).  ``overlap_s = max(collate_s - wait_s,
+  0)`` is the collate work actually hidden behind device compute; the
+  trainer folds these into ``RankTelemetry`` (``record_host``) so benchmarks
+  report measured host/device overlap next to the straggler model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+import weakref
+from typing import Any, Callable, Iterable, Iterator, Optional
+
+__all__ = ["PrefetchItem", "PrefetchPipeline"]
+
+# producer poll period for stop-flag re-checks while the queue is full
+_PUT_POLL_S = 0.05
+
+
+@dataclasses.dataclass
+class PrefetchItem:
+    """One prefetched step: the sampler item, its batch, and host timings."""
+
+    index: int          # step ordinal within this pipeline's stream
+    item: Any           # the sampler item (e.g. one list of indices per rank)
+    batch: Any          # fetch(item) result (collated device batch)
+    collate_s: float    # host wall seconds spent inside fetch()
+    wait_s: float       # seconds the consumer blocked before receiving it
+
+    @property
+    def overlap_s(self) -> float:
+        """Collate seconds hidden behind device compute for this step."""
+        return max(self.collate_s - self.wait_s, 0.0)
+
+
+class _EndOfStream:
+    pass
+
+
+_END = _EndOfStream()
+
+
+def _produce(items: Iterator[Any], fetch: Callable[[Any], Any],
+             q: "queue.Queue", stop: threading.Event) -> None:
+    """Producer loop.  A module-level function on purpose: the thread must
+    hold no reference to the ``PrefetchPipeline`` itself, so an abandoned
+    pipeline (no ``close()``) stays garbage-collectable and its
+    ``weakref.finalize`` can stop this loop."""
+
+    def put(payload: Any) -> bool:
+        # blocking put that aborts (False) once the stop flag is raised
+        while not stop.is_set():
+            try:
+                q.put(payload, timeout=_PUT_POLL_S)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    try:
+        for i, item in enumerate(items):
+            if stop.is_set():
+                return
+            t0 = time.perf_counter()
+            batch = fetch(item)
+            dt = time.perf_counter() - t0
+            if not put(PrefetchItem(i, item, batch, dt, 0.0)):
+                return
+    except BaseException as exc:  # propagate into the consumer
+        put(exc)
+    else:
+        put(_END)
+
+
+class PrefetchPipeline:
+    """Iterate ``fetch(item)`` over ``items`` with bounded async lookahead.
+
+    Parameters
+    ----------
+    items:
+        Iterable of cheap, picklable-in-spirit work descriptors (the
+        sampler's per-step index bins).  Consumed eagerly-in-order by the
+        producer thread; it must therefore be safe to iterate off-thread —
+        ``BalancedBatchSampler.step_iter`` snapshots its state up front for
+        exactly this reason.
+    fetch:
+        ``fetch(item) -> batch`` — the expensive host work (dataset.get +
+        ``engine.collate``).  Runs on the producer thread when ``depth>=1``.
+    depth:
+        Number of finished batches allowed in flight ahead of the consumer.
+        ``0`` = synchronous inline fetch (no thread).
+
+    Use as a context manager (or call :meth:`close`); iterating yields
+    :class:`PrefetchItem` per step.
+    """
+
+    def __init__(
+        self,
+        items: Iterable[Any],
+        fetch: Callable[[Any], Any],
+        depth: int = 1,
+    ):
+        if depth < 0:
+            raise ValueError(f"prefetch depth must be >= 0, got {depth}")
+        self.depth = depth
+        self._fetch = fetch
+        self._items: Iterator[Any] = iter(items)
+        self._index = 0
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._queue: Optional["queue.Queue"] = None
+        if depth >= 1:
+            self._queue = queue.Queue(maxsize=depth)
+            self._thread = threading.Thread(
+                target=_produce,
+                args=(self._items, fetch, self._queue, self._stop),
+                name="prefetch-collate",
+                daemon=True,
+            )
+            self._thread.start()
+            # safety net for pipelines abandoned without close(): the
+            # producer holds no reference to self (see _produce), so GC of
+            # the pipeline raises the stop flag and the thread exits
+            self._finalizer = weakref.finalize(self, self._stop.set)
+
+    # ----------------------------- consumer -------------------------------
+
+    def __iter__(self) -> "PrefetchPipeline":
+        return self
+
+    def __next__(self) -> PrefetchItem:
+        if self._stop.is_set():
+            raise StopIteration
+        if self._queue is None:  # depth 0: inline, nothing hidden
+            try:
+                item = next(self._items)
+            except StopIteration:
+                self.close()
+                raise
+            t0 = time.perf_counter()
+            try:
+                batch = self._fetch(item)
+            except StopIteration as exc:
+                # PEP-479 style: never let a leaked StopIteration masquerade
+                # as a normal end of the epoch stream
+                self.close()
+                raise RuntimeError("prefetch fetch raised StopIteration") from exc
+            dt = time.perf_counter() - t0
+            out = PrefetchItem(self._index, item, batch, dt, dt)
+            self._index += 1
+            return out
+        t0 = time.perf_counter()
+        payload = self._queue.get()
+        wait = time.perf_counter() - t0
+        if payload is _END:
+            self.close()
+            raise StopIteration
+        if isinstance(payload, BaseException):
+            self.close()
+            if isinstance(payload, StopIteration):
+                # a StopIteration leaked out of fetch on the producer side;
+                # re-raising it verbatim from __next__ would silently end
+                # the stream (PEP 479) instead of surfacing the error
+                raise RuntimeError(
+                    "prefetch fetch raised StopIteration"
+                ) from payload
+            raise payload
+        payload.wait_s = wait
+        return payload
+
+    # ----------------------------- lifecycle ------------------------------
+
+    def close(self) -> None:
+        """Stop the producer and join it.  Idempotent; never deadlocks —
+        the producer's put loop re-checks the stop flag, and the queue is
+        drained here so a blocked put always unblocks."""
+        self._stop.set()
+        if self._thread is None:
+            return
+        while self._thread.is_alive():
+            if self._queue is not None:
+                try:
+                    while True:
+                        self._queue.get_nowait()
+                except queue.Empty:
+                    pass
+            self._thread.join(timeout=_PUT_POLL_S)
+        self._thread = None
+
+    def __enter__(self) -> "PrefetchPipeline":
+        return self
+
+    def __exit__(self, *exc_info) -> None:
+        self.close()

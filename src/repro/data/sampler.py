@@ -11,6 +11,10 @@ Beyond-paper additions:
   notes it sacrifices (§7 limitation) without disturbing per-step balance —
   bins are permuted, and rank assignment rotates per step;
 * resumable state (epoch, cursor) for checkpoint/restart;
+* prefetch-friendly iteration: ``step_iter`` snapshots ``(epoch, cursor)``
+  eagerly and returns a pure-index stream, safe to consume from the
+  ``data.prefetch.PrefetchPipeline`` producer thread while the live
+  ``SamplerState`` advances;
 * elastic rescale: ``with_ranks`` re-packs for a new device count (the bins
   are independent, so scaling up/down is a pure host-side operation).
 """
@@ -97,12 +101,27 @@ class BalancedBatchSampler:
             yield bins[step * self.n_ranks + rank]
 
     def step_iter(self, state: SamplerState) -> Iterator[List[List[int]]]:
-        """Yield one bin *per rank* per step (the execution-engine view):
-        ``[bin_rank0, ..., bin_rankR-1]`` starting at the resume cursor."""
-        bins = self.bins_for_epoch(state.epoch)
-        n_steps = len(bins) // self.n_ranks
-        for step in range(state.cursor, n_steps):
-            yield bins[step * self.n_ranks : (step + 1) * self.n_ranks]
+        """One bin *per rank* per step (the execution-engine view):
+        ``[bin_rank0, ..., bin_rankR-1]`` starting at the resume cursor.
+
+        Prefetch-safe: ``(epoch, cursor)`` is snapshotted *eagerly* and the
+        returned iterator walks a precomputed pure-index list, so a producer
+        thread can run arbitrarily far ahead while the training loop mutates
+        the live ``SamplerState`` — the stream is fixed at call time and two
+        iterators from equal states are identical (tests/test_data.py)."""
+        return iter(_step_slices(self.bins_for_epoch(state.epoch),
+                                 self.n_ranks, state.cursor))
+
+
+def _step_slices(
+    bins: List[List[int]], n_ranks: int, cursor: int
+) -> List[List[List[int]]]:
+    """Materialised per-step rank groups starting at the resume cursor."""
+    n_steps = len(bins) // n_ranks
+    return [
+        bins[step * n_ranks : (step + 1) * n_ranks]
+        for step in range(cursor, n_steps)
+    ]
 
 
 class FixedCountSampler:
@@ -136,8 +155,7 @@ class FixedCountSampler:
             yield bins[step * self.n_ranks + rank]
 
     def step_iter(self, state: SamplerState) -> Iterator[List[List[int]]]:
-        """One bin per rank per step (see BalancedBatchSampler.step_iter)."""
-        bins = self.bins_for_epoch(state.epoch)
-        n_steps = len(bins) // self.n_ranks
-        for step in range(state.cursor, n_steps):
-            yield bins[step * self.n_ranks : (step + 1) * self.n_ranks]
+        """One bin per rank per step, snapshotted eagerly for prefetch
+        lookahead (see BalancedBatchSampler.step_iter)."""
+        return iter(_step_slices(self.bins_for_epoch(state.epoch),
+                                 self.n_ranks, state.cursor))

@@ -36,8 +36,21 @@ and two interchangeable backends:
 Both backends are numerically interchangeable (tests/test_engine.py proves
 allclose over multi-step training on a forced multi-device CPU mesh), so the
 sequential loop remains the reference semantics while shard_map provides the
-scaling path every later feature (async host prefetch, elastic rescale,
-multi-backend kernels via ``kernels.registry``) plugs into.
+scaling path every later feature (elastic rescale, multi-backend kernels via
+``kernels.registry``) plugs into.
+
+Async host prefetch
+-------------------
+The ``collate``/``step`` split exists so the two can overlap: ``collate`` is
+pure host (numpy) work and ``step`` releases the GIL while the device runs.
+``data.prefetch.PrefetchPipeline`` exploits that — a bounded producer thread
+runs ``engine.collate`` for step t+1 (up to ``depth`` steps ahead) while
+``engine.step`` for step t executes, with deterministic ordering, clean
+shutdown, and producer-exception propagation into the training loop.
+``Trainer.run_epoch`` drives every epoch through the pipeline (``depth=0``
+is the same code path run inline), and tests/test_engine.py's equivalence
+harness proves prefetched training bit-streams the same batches and reaches
+allclose params vs. the non-prefetched sequential oracle.
 
 Telemetry
 ---------
@@ -47,6 +60,10 @@ Each engine records a ``RankTelemetry``: per-step per-rank wall seconds
 ``core.binpack.balance_metrics(..., measured_work=...)`` so the straggler
 ratio in the scaling benchmarks comes from *measured* numbers, not just the
 token-count proxy; pass ``skip=1`` to drop the jit-compiling first step.
+The trainer additionally folds the prefetch pipeline's per-step host
+timings into the same object (``record_host``): ``overlap_seconds`` /
+``overlap_fraction`` report how much of the Algorithm-1 collation cost was
+hidden behind device compute.
 """
 from __future__ import annotations
 
@@ -99,11 +116,22 @@ class RankTelemetry:
     lockstep: bool = False
     times: List[List[float]] = dataclasses.field(default_factory=list)
     loads: List[List[float]] = dataclasses.field(default_factory=list)
+    # host-side prefetch telemetry (one scalar per step: collation is a
+    # single producer thread, not per-rank work)
+    host_collate: List[float] = dataclasses.field(default_factory=list)
+    host_wait: List[float] = dataclasses.field(default_factory=list)
 
     def record(self, times: Sequence[float], loads: Sequence[float]) -> None:
         assert len(times) == self.n_ranks and len(loads) == self.n_ranks
         self.times.append([float(t) for t in times])
         self.loads.append([float(l) for l in loads])
+
+    def record_host(self, collate_s: float, wait_s: float) -> None:
+        """Per-step host timings from the prefetch pipeline: seconds spent
+        collating the batch and seconds the step loop blocked waiting for
+        it.  ``wait == collate`` for the inline (depth-0) path."""
+        self.host_collate.append(float(collate_s))
+        self.host_wait.append(float(wait_s))
 
     @property
     def n_steps(self) -> int:
@@ -150,6 +178,35 @@ class RankTelemetry:
         if w.size == 0:
             return 1.0
         return float(np.mean(w.max(axis=1) / np.maximum(w.mean(axis=1), 1e-12)))
+
+    # ------------------------- host/device overlap -------------------------
+
+    def host_matrix(self, skip: int = 0) -> np.ndarray:
+        """[steps, 2] host seconds per step: (collate_s, wait_s)."""
+        return np.stack(
+            [
+                np.asarray(self.host_collate[skip:], np.float64),
+                np.asarray(self.host_wait[skip:], np.float64),
+            ],
+            axis=1,
+        ) if self.host_collate[skip:] else np.zeros((0, 2))
+
+    def overlap_seconds(self, skip: int = 0) -> float:
+        """Total collate seconds hidden behind device compute: per step
+        ``max(collate_s - wait_s, 0)`` summed.  Zero for the inline path
+        (the step loop waits for the whole collation every step)."""
+        h = self.host_matrix(skip)
+        if h.size == 0:
+            return 0.0
+        return float(np.maximum(h[:, 0] - h[:, 1], 0.0).sum())
+
+    def overlap_fraction(self, skip: int = 0) -> float:
+        """Fraction of total host collate time that was overlapped."""
+        h = self.host_matrix(skip)
+        if h.size == 0:
+            return 0.0
+        total = float(h[:, 0].sum())
+        return self.overlap_seconds(skip) / total if total > 0 else 0.0
 
 
 # ---------------------------------------------------------------------------

@@ -1,18 +1,22 @@
 """Trainer: fault-tolerant epoch loop over a pluggable execution engine.
 
 The loop composes every substrate in the repo: balanced sampler (Algorithm 1
-per epoch), static-shape collation, an execution engine (``train.engine``:
-``sequential`` per-bin oracle or real ``shard_map`` SPMD over a device mesh)
-running the jitted value_and_grad step with optional remat / int8-compressed
-data-parallel all-reduce, EMA, periodic atomic checkpoints, and resume
-(params, opt state, EMA, sampler cursor all restored).
-``simulate_failure_at`` lets tests kill the loop mid-epoch and prove restart
-equivalence.  Per-rank step-time/load telemetry is exposed via
-``Trainer.engine.telemetry`` for the straggler model.
+per epoch), static-shape collation driven through the async
+``data.prefetch.PrefetchPipeline`` (``TrainerConfig.prefetch`` sets the
+lookahead depth; 0 runs the same path inline), an execution engine
+(``train.engine``: ``sequential`` per-bin oracle or real ``shard_map`` SPMD
+over a device mesh) running the jitted value_and_grad step with optional
+remat / int8-compressed data-parallel all-reduce, EMA, periodic atomic
+checkpoints, and resume (params, opt state, EMA, sampler cursor all
+restored).  ``simulate_failure_at`` lets tests kill the loop mid-epoch and
+prove restart equivalence.  Per-rank step-time/load telemetry plus per-step
+host collate/wait times are exposed via ``Trainer.engine.telemetry`` for the
+straggler model and the host/device overlap report.
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
 from typing import Any, Dict, Optional
 
@@ -22,6 +26,7 @@ import jax.numpy as jnp
 from repro.core.mace import MaceConfig, init_mace
 from repro.data.collate import BinShape
 from repro.data.molecules import SyntheticCFMDataset
+from repro.data.prefetch import PrefetchPipeline
 from repro.data.sampler import BalancedBatchSampler, FixedCountSampler, SamplerState
 from .checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from .engine import make_engine
@@ -43,6 +48,7 @@ class TrainerConfig:
     remat: bool = False
     compress_grads: bool = False
     engine: str = "sequential"       # "sequential" | "shard_map" (train.engine)
+    prefetch: int = 0                # async collate lookahead depth (0 = inline)
     fixed_graphs_per_batch: int = 8   # baseline sampler's PyG-style count
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 50
@@ -131,6 +137,59 @@ class Trainer:
 
     # ------------------------------ loop ----------------------------------
 
+    def _fetch_batch(self, rank_bins):
+        """Host side of one step: materialise molecules and collate to the
+        engine's device layout.  Runs on the prefetch producer thread."""
+        mols_per_rank = [[self.dataset.get(i) for i in b] for b in rank_bins]
+        return self.engine.collate(mols_per_rank, self.bin_shape)
+
+    def run_epoch(
+        self,
+        history,
+        *,
+        max_steps: Optional[int] = None,
+        simulate_failure_at: Optional[int] = None,
+    ) -> bool:
+        """Run the rest of the current epoch (from the sampler cursor)
+        through the prefetch pipeline: collation of step t+1 overlaps the
+        device executing step t when ``tcfg.prefetch >= 1``.  Returns True
+        when ``max_steps`` was reached (the run should stop)."""
+        items = self.sampler.step_iter(self.sampler_state)
+        if max_steps is not None:
+            # bound the producer's lookahead too: no collating (and then
+            # discarding) batches past the stop point
+            remaining = max_steps - self.global_step
+            if remaining <= 0:
+                return True
+            items = itertools.islice(items, remaining)
+        with PrefetchPipeline(
+            items,
+            self._fetch_batch,
+            depth=self.tcfg.prefetch,
+        ) as pipeline:
+            for item in pipeline:
+                self.params, self.opt_state, self.ef_state, metrics = (
+                    self.engine.step(
+                        self.params, self.opt_state, self.ef_state, item.batch,
+                        jnp.asarray(self.global_step),
+                    )
+                )
+                self.ema_params = self.ema.update(
+                    self.ema_params, self.params, jnp.asarray(self.global_step)
+                )
+                self.global_step += 1
+                self.sampler_state.cursor += 1
+                self.engine.telemetry.record_host(item.collate_s, item.wait_s)
+                history.append({k: float(v) for k, v in metrics.items()})
+
+                if simulate_failure_at is not None and self.global_step >= simulate_failure_at:
+                    raise RuntimeError("simulated node failure")
+                if self.tcfg.ckpt_every and self.global_step % self.tcfg.ckpt_every == 0:
+                    self.save()
+                if max_steps and self.global_step >= max_steps:
+                    return True
+        return False
+
     def train(
         self,
         n_epochs: int = 1,
@@ -141,31 +200,12 @@ class Trainer:
         history = []
         t_start = time.perf_counter()
         while self.sampler_state.epoch < n_epochs:
-            for rank_bins in self.sampler.step_iter(self.sampler_state):
-                mols_per_rank = [
-                    [self.dataset.get(i) for i in b] for b in rank_bins
-                ]
-                batch = self.engine.collate(mols_per_rank, self.bin_shape)
-                self.params, self.opt_state, self.ef_state, metrics = (
-                    self.engine.step(
-                        self.params, self.opt_state, self.ef_state, batch,
-                        jnp.asarray(self.global_step),
-                    )
-                )
-                self.ema_params = self.ema.update(
-                    self.ema_params, self.params, jnp.asarray(self.global_step)
-                )
-                self.global_step += 1
-                self.sampler_state.cursor += 1
-                history.append({k: float(v) for k, v in metrics.items()})
-
-                if simulate_failure_at is not None and self.global_step >= simulate_failure_at:
-                    raise RuntimeError("simulated node failure")
-                if self.tcfg.ckpt_every and self.global_step % self.tcfg.ckpt_every == 0:
-                    self.save()
-                if max_steps and self.global_step >= max_steps:
-                    self.save()
-                    return {"history": history, "wall": time.perf_counter() - t_start}
+            if self.run_epoch(
+                history,
+                max_steps=max_steps,
+                simulate_failure_at=simulate_failure_at,
+            ):
+                break
             self.sampler_state = SamplerState(self.sampler_state.epoch + 1, 0)
         self.save()
         return {"history": history, "wall": time.perf_counter() - t_start}

@@ -15,6 +15,17 @@ from repro.models.model import (
     init_params,
 )
 
+# the biggest reduced configs take tens of seconds per jitted step on CPU —
+# they run in the slow sweep; the light archs keep per-family coverage fast
+_HEAVY_ARCHS = {
+    "internvl2_26b", "gemma3_4b", "mixtral_8x22b",
+    "qwen3_moe_235b_a22b", "jamba_v0_1_52b", "xlstm_125m",
+}
+ARCH_PARAMS = [
+    pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY_ARCHS else a
+    for a in ARCH_IDS
+]
+
 
 def _batch(cfg, B=2, S=32, seed=0):
     key = jax.random.PRNGKey(seed)
@@ -33,7 +44,7 @@ def _batch(cfg, B=2, S=32, seed=0):
     return batch
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_forward_train_smoke(arch):
     cfg = get_reduced(arch)
     params = init_params(jax.random.PRNGKey(0), cfg)
@@ -47,7 +58,7 @@ def test_forward_train_smoke(arch):
     assert float(metrics["nll"]) < np.log(cfg.vocab) + 2.0
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_train_step_grads_finite(arch):
     cfg = get_reduced(arch)
     params = init_params(jax.random.PRNGKey(1), cfg)
@@ -63,7 +74,7 @@ def test_train_step_grads_finite(arch):
     assert any(float(jnp.abs(g).max()) > 0 for g in leaves), arch
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_decode_step_smoke(arch):
     cfg = get_reduced(arch)
     params = init_params(jax.random.PRNGKey(2), cfg)
@@ -101,6 +112,7 @@ def test_full_config_param_counts(arch, expected_b, tol):
     assert abs(n - expected_b) / expected_b < tol, (arch, n / 1e9)
 
 
+@pytest.mark.slow
 def test_prefill_then_decode_consistency():
     """Teacher-forced decode reproduces the training forward's next-token
     distribution (cache correctness end-to-end)."""
@@ -128,6 +140,7 @@ def test_prefill_then_decode_consistency():
     np.testing.assert_allclose(np.asarray(got), want, rtol=2e-3, atol=2e-3)
 
 
+@pytest.mark.slow
 def test_windowed_decode_matches_train():
     """Sliding-window arch: ring-buffer decode == train forward."""
     cfg = get_reduced("gemma3_4b")

@@ -1,0 +1,89 @@
+"""Property-based tests for static-shape collation invariants.
+
+``hypothesis`` is optional (same guard as tests/test_binpack.py): without it
+the property tests are collected as skip stubs.
+
+Invariants under test, over arbitrary per-rank bins of synthetic molecules:
+* padding masks are exact — ``node_mask``/``edge_mask`` sum to the real
+  atom/edge counts of the bin, and everything outside the mask is padding
+  (zero species/positions, spare-graph ids);
+* ``collate_stacked`` is nothing but a stack — slicing rank r out of the
+  stacked ``[R, ...]`` batch recovers ``collate_bin`` of rank r's molecules
+  bit-for-bit (the ShardMapEngine's per-device shard equals what the
+  SequentialEngine would have built).
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - depends on environment
+    class _StrategyStub:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
+
+    def settings(**kwargs):
+        return lambda f: f
+
+    def given(**kwargs):
+        def deco(f):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def stub():
+                pass
+
+            stub.__name__ = f.__name__
+            stub.__doc__ = f.__doc__
+            return stub
+
+        return deco
+
+from repro.data.collate import BinShape, collate_bin, collate_stacked
+from repro.data.molecules import SyntheticCFMDataset
+
+# small dense molecules: 12 atoms max -> <= 132 directed edges each, so the
+# shape below can never overflow (no silent graph-dropping in the properties)
+_DS = SyntheticCFMDataset(32, seed=0, max_atoms=12)
+_MOLS = [_DS.get(i) for i in range(len(_DS))]
+_SHAPE = BinShape(max_nodes=48, max_edges=48 * 12, max_graphs=4)
+
+bin_strategy = st.lists(
+    st.integers(min_value=0, max_value=len(_MOLS) - 1), min_size=0, max_size=3
+)
+ranks_strategy = st.lists(bin_strategy, min_size=1, max_size=4)
+
+
+@given(idx=bin_strategy)
+@settings(max_examples=80, deadline=None)
+def test_masks_sum_to_real_counts(idx):
+    mols = [_MOLS[i] for i in idx]
+    b = collate_bin(mols, _SHAPE, strict=True)
+    assert int(b["node_mask"].sum()) == sum(m.n_atoms for m in mols)
+    assert int(b["edge_mask"].sum()) == sum(m.n_edges for m in mols)
+    # real entries are a contiguous prefix; the padding tail is inert
+    n = int(b["node_mask"].sum())
+    e = int(b["edge_mask"].sum())
+    assert b["node_mask"][:n].all() and not b["node_mask"][n:].any()
+    assert b["edge_mask"][:e].all() and not b["edge_mask"][e:].any()
+    assert (b["species"][n:] == 0).all()
+    assert (b["positions"][n:] == 0).all()
+    # padded nodes live in the spare (zero-loss-weight) graph slot
+    assert (b["graph_id"][n:] == _SHAPE.max_graphs - 1).all()
+    # live edges reference live nodes only
+    if e:
+        assert b["senders"][:e].max() < n and b["receivers"][:e].max() < n
+
+
+@given(rank_bins=ranks_strategy)
+@settings(max_examples=80, deadline=None)
+def test_stacked_slice_recovers_collate_bin(rank_bins):
+    mols_per_rank = [[_MOLS[i] for i in b] for b in rank_bins]
+    stacked = collate_stacked(mols_per_rank, _SHAPE, strict=True)
+    for r, mols in enumerate(mols_per_rank):
+        single = collate_bin(mols, _SHAPE, strict=True)
+        assert set(stacked) == set(single)
+        for k in single:
+            assert stacked[k].shape == (len(mols_per_rank),) + single[k].shape
+            assert stacked[k].dtype == single[k].dtype, k
+            np.testing.assert_array_equal(stacked[k][r], single[k], err_msg=k)

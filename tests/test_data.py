@@ -97,6 +97,41 @@ def test_elastic_rescale():
     assert sorted(seen) == list(range(800))
 
 
+def test_step_iter_deterministic_across_iterators():
+    """Two step_iter calls with equal SamplerState yield the same index
+    stream — the invariant that lets the prefetch producer thread look
+    ahead without ever diverging from the non-prefetched loop."""
+    ds = SyntheticCFMDataset(600, seed=10)
+    for s in (
+        BalancedBatchSampler(ds.sizes, 3072, n_ranks=2, seed=3),
+        FixedCountSampler(ds.sizes, graphs_per_batch=8, n_ranks=2, seed=3),
+    ):
+        state = SamplerState(epoch=1, cursor=2)
+        a = list(s.step_iter(state))
+        b = list(s.step_iter(SamplerState(epoch=1, cursor=2)))
+        assert len(a) > 0 and a == b
+        # resume semantics: the cursor skips exactly that many steps
+        full = list(s.step_iter(SamplerState(epoch=1, cursor=0)))
+        assert full[2:] == a
+
+
+def test_step_iter_snapshot_ignores_live_state_mutation():
+    """step_iter snapshots (epoch, cursor) eagerly: mutating the live
+    SamplerState mid-iteration (as the training loop does every step) must
+    not shift or truncate the stream a prefetch thread is consuming."""
+    ds = SyntheticCFMDataset(400, seed=11)
+    s = BalancedBatchSampler(ds.sizes, 3072, n_ranks=2, seed=0)
+    state = SamplerState(epoch=0, cursor=0)
+    expected = list(s.step_iter(SamplerState(epoch=0, cursor=0)))
+    it = s.step_iter(state)
+    got = []
+    for rank_bins in it:
+        got.append(rank_bins)
+        state.cursor += 1          # what Trainer.run_epoch does
+        state.epoch = 99           # even this must not disturb the stream
+    assert got == expected
+
+
 def test_fixed_count_sampler_baseline():
     ds = SyntheticCFMDataset(100, seed=9)
     s = FixedCountSampler(ds.sizes, graphs_per_batch=8, n_ranks=2, seed=0)

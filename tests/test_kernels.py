@@ -29,7 +29,11 @@ from repro.kernels.symmetric_contraction.ref import symcon_reference
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("nu_max", [1, 2, 3])
+# nu_max=3 builds the cubic contraction tables — minutes of interpret-mode
+# work, so those cases join the slow sweep
+@pytest.mark.parametrize(
+    "nu_max", [1, 2, pytest.param(3, marks=pytest.mark.slow)]
+)
 @pytest.mark.parametrize("N,k", [(8, 8), (33, 16)])
 def test_symcon_kernel_vs_oracle(nu_max, N, k):
     spec = SymConSpec(lspec(0, 1, 2, 3), lspec(0, 1), nu_max)
@@ -43,7 +47,10 @@ def test_symcon_kernel_vs_oracle(nu_max, N, k):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
 
 
-@pytest.mark.parametrize("out_ls", [(0,), (0, 1), (0, 1, 2)])
+@pytest.mark.parametrize(
+    "out_ls",
+    [(0,), (0, 1), pytest.param((0, 1, 2), marks=pytest.mark.slow)],
+)
 def test_symcon_kernel_output_specs(out_ls):
     spec = SymConSpec(lspec(0, 1, 2), LSpec(out_ls), 2)
     key = jax.random.PRNGKey(7)
@@ -55,6 +62,7 @@ def test_symcon_kernel_output_specs(out_ls):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.slow
 def test_symcon_kernel_dtype_bf16():
     spec = SymConSpec(lspec(0, 1, 2, 3), lspec(0, 1), 2)
     key = jax.random.PRNGKey(3)
@@ -86,7 +94,9 @@ def _tp_inputs(key, E, k, spec):
 
 
 @pytest.mark.parametrize("h_ls", [(0,), (0, 1)])
-@pytest.mark.parametrize("E,k", [(16, 8), (130, 4)])
+@pytest.mark.parametrize(
+    "E,k", [(16, 8), pytest.param(130, 4, marks=pytest.mark.slow)]
+)
 def test_tp_kernel_vs_oracle(h_ls, E, k):
     spec = TPSpec(sh_spec(3), LSpec(h_ls), lspec(0, 1, 2, 3))
     Y, h, R = _tp_inputs(jax.random.PRNGKey(E + k), E, k, spec)
@@ -95,6 +105,7 @@ def test_tp_kernel_vs_oracle(h_ls, E, k):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.slow
 def test_fused_interaction_vs_oracle():
     """The full fused TP+scatter (sort + one-hot MXU matmul) against
     tp_ref + segment_sum."""
@@ -135,6 +146,7 @@ def test_fused_interaction_empty_and_hub_receivers():
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_mace_model_pallas_impl_parity():
     """End-to-end: MACE with impl='pallas' equals impl='fused'."""
     from tests.test_mace import SMALL, random_batch, _energy

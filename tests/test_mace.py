@@ -103,6 +103,7 @@ def test_translation_invariance():
     np.testing.assert_allclose(np.asarray(e0), np.asarray(e1), rtol=2e-4, atol=2e-5)
 
 
+@pytest.mark.slow
 def test_force_equivariance():
     key = jax.random.PRNGKey(3)
     params = init_mace(key, SMALL)
@@ -117,6 +118,7 @@ def test_force_equivariance():
     )
 
 
+@pytest.mark.slow
 def test_padding_does_not_change_energy():
     key = jax.random.PRNGKey(4)
     params = init_mace(key, SMALL)
@@ -139,6 +141,7 @@ def test_impl_parity_ref_vs_fused():
     np.testing.assert_allclose(np.asarray(e_ref), np.asarray(e_fused), rtol=1e-5, atol=1e-6)
 
 
+@pytest.mark.slow
 def test_impl_parity_correlation3():
     key = jax.random.PRNGKey(6)
     kw = {**SMALL.__dict__, "correlation": 3}
@@ -172,6 +175,7 @@ def test_permutation_invariance():
     np.testing.assert_allclose(np.asarray(e0), np.asarray(e1), rtol=2e-4, atol=2e-5)
 
 
+@pytest.mark.slow
 def test_weighted_loss_runs_and_grads():
     key = jax.random.PRNGKey(8)
     params = init_mace(key, SMALL)

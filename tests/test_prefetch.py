@@ -1,0 +1,237 @@
+"""Prefetch pipeline tests: deterministic batch streams, bounded lookahead,
+clean shutdown, exception propagation, and the host/device overlap telemetry.
+
+All pure-host (no jitted compute), so the whole file runs in seconds — the
+engine-level equivalence proof (prefetched training == inline training on a
+2-device mesh) lives in tests/test_engine.py.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.data.collate import BinShape, collate_stacked
+from repro.data.molecules import SyntheticCFMDataset
+from repro.data.prefetch import PrefetchItem, PrefetchPipeline
+from repro.data.sampler import BalancedBatchSampler, SamplerState
+from repro.train.engine import RankTelemetry
+
+
+# ---------------------------------------------------------------------------
+# pipeline mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_depth_zero_is_inline_passthrough():
+    seen = []
+
+    def fetch(x):
+        seen.append(x)
+        return x * 10
+
+    with PrefetchPipeline(range(4), fetch, depth=0) as pipe:
+        first = next(pipe)
+        # inline mode: nothing fetched beyond what was consumed
+        assert seen == [0]
+        assert isinstance(first, PrefetchItem)
+        assert (first.index, first.item, first.batch) == (0, 0, 0)
+        # the consumer waited for the whole collation -> zero overlap
+        assert first.wait_s == first.collate_s and first.overlap_s == 0.0
+        rest = list(pipe)
+    assert [i.batch for i in rest] == [10, 20, 30]
+    with pytest.raises(StopIteration):
+        next(pipe)
+
+
+@pytest.mark.parametrize("depth", [1, 2, 3])
+def test_async_stream_matches_inline_order(depth):
+    out = list(PrefetchPipeline(range(17), lambda x: x * x, depth=depth))
+    assert [i.batch for i in out] == [x * x for x in range(17)]
+    assert [i.index for i in out] == list(range(17))
+    assert [i.item for i in out] == list(range(17))
+
+
+def test_lookahead_is_bounded():
+    """The producer never runs more than depth+1 items ahead of the
+    consumer (depth parked in the queue + one being built)."""
+    fetched = []
+    lock = threading.Lock()
+
+    def fetch(x):
+        with lock:
+            fetched.append(x)
+        return x
+
+    depth = 2
+    with PrefetchPipeline(range(100), fetch, depth=depth) as pipe:
+        consumed = 0
+        for _ in range(5):
+            next(pipe)
+            consumed += 1
+            time.sleep(0.02)  # let the producer run as far as it can
+            with lock:
+                ahead = len(fetched) - consumed
+            assert ahead <= depth + 1, (consumed, fetched)
+
+
+def test_close_mid_stream_stops_producer_without_deadlock():
+    """Early exit with a full queue: close() must unblock the producer's
+    put, stop fetching promptly, and join the thread."""
+    fetched = []
+
+    def fetch(x):
+        fetched.append(x)
+        return x
+
+    pipe = PrefetchPipeline(iter(range(10_000)), fetch, depth=1)
+    assert next(pipe).batch == 0
+    thread = pipe._thread
+    pipe.close()
+    assert thread is not None and not thread.is_alive()
+    assert len(fetched) < 10  # stopped near where the consumer left off
+    with pytest.raises(StopIteration):
+        next(pipe)
+    pipe.close()  # idempotent
+
+
+def test_abandoned_pipeline_is_stopped_by_gc():
+    """A pipeline dropped without close() must not leak its producer: the
+    thread holds no reference back to the pipeline, so garbage collection
+    fires the finalizer, raises the stop flag, and the thread exits."""
+    import gc
+
+    pipe = PrefetchPipeline(iter(range(10_000)), lambda x: x, depth=1)
+    assert next(pipe).batch == 0
+    thread = pipe._thread
+    del pipe
+    gc.collect()
+    deadline = time.monotonic() + 5.0
+    while thread.is_alive() and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert not thread.is_alive()
+
+
+def test_with_block_closes_on_break():
+    with PrefetchPipeline(range(1000), lambda x: x, depth=2) as pipe:
+        for item in pipe:
+            if item.index == 3:
+                break
+        thread = pipe._thread
+    assert thread is not None and not thread.is_alive()
+
+
+@pytest.mark.parametrize("depth", [0, 1, 2])
+def test_producer_exception_propagates_at_the_right_step(depth):
+    def fetch(x):
+        if x == 3:
+            raise ValueError("bad molecule")
+        return x
+
+    pipe = PrefetchPipeline(range(6), fetch, depth=depth)
+    got = []
+    with pytest.raises(ValueError, match="bad molecule"):
+        for item in pipe:
+            got.append(item.batch)
+    # every step before the failure was delivered; nothing after it
+    assert got == [0, 1, 2]
+    if pipe._thread is not None:
+        assert not pipe._thread.is_alive()
+
+
+@pytest.mark.parametrize("depth", [0, 2])
+def test_fetch_stopiteration_surfaces_as_error(depth):
+    """A StopIteration leaking out of fetch must not be mistaken for the
+    end of the epoch stream (PEP-479 semantics): it surfaces as a
+    RuntimeError instead of silently truncating training."""
+    def fetch(x):
+        if x == 2:
+            raise StopIteration("leaked")
+        return x
+
+    pipe = PrefetchPipeline(range(6), fetch, depth=depth)
+    got = []
+    with pytest.raises(RuntimeError, match="StopIteration"):
+        for item in pipe:
+            got.append(item.batch)
+    assert got == [0, 1]
+
+
+def test_negative_depth_rejected():
+    with pytest.raises(ValueError):
+        PrefetchPipeline(range(3), lambda x: x, depth=-1)
+
+
+def test_overlap_measured_when_consumer_is_slow():
+    """When the consumer spends time between gets (= device compute), the
+    producer's collate happens behind it: wait << collate -> overlap > 0."""
+    with PrefetchPipeline(range(4), lambda x: (time.sleep(0.05), x)[1],
+                          depth=2) as pipe:
+        items = []
+        for it in pipe:
+            time.sleep(0.08)  # "device compute"
+            items.append(it)
+    # steady-state items were already collated when requested
+    assert sum(i.overlap_s for i in items[1:]) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# bitwise-identical batch streams (prefetch vs. inline collation)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("depth", [1, 2])
+def test_prefetched_batches_bitwise_equal_inline(depth):
+    ds = SyntheticCFMDataset(48, seed=0, max_atoms=32)
+    sampler = BalancedBatchSampler(ds.sizes, capacity=64, n_ranks=2, seed=0)
+    shape = BinShape.for_capacity(64, edge_factor=48, max_graphs=8)
+
+    def fetch(rank_bins):
+        return collate_stacked(
+            [[ds.get(i) for i in b] for b in rank_bins], shape
+        )
+
+    inline = [
+        (rank_bins, fetch(rank_bins))
+        for rank_bins in sampler.step_iter(SamplerState(0, 0))
+    ]
+    with PrefetchPipeline(
+        sampler.step_iter(SamplerState(0, 0)), fetch, depth=depth
+    ) as pipe:
+        prefetched = [(it.item, it.batch) for it in pipe]
+
+    assert len(prefetched) == len(inline) > 0
+    for (bins_a, batch_a), (bins_b, batch_b) in zip(inline, prefetched):
+        assert bins_a == bins_b
+        assert set(batch_a) == set(batch_b)
+        for k in batch_a:
+            assert batch_a[k].dtype == batch_b[k].dtype, k
+            np.testing.assert_array_equal(batch_a[k], batch_b[k], err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# RankTelemetry host/overlap accounting
+# ---------------------------------------------------------------------------
+
+
+def test_telemetry_host_overlap_accounting():
+    t = RankTelemetry(2)
+    t.record_host(0.5, 0.5)    # warmup: inline-like, fully exposed
+    t.record_host(0.4, 0.1)    # 0.3 s hidden
+    t.record_host(0.2, 0.3)    # waited longer than collate -> clamped to 0
+    assert t.host_matrix().shape == (3, 2)
+    assert t.overlap_seconds() == pytest.approx(0.3)
+    assert t.overlap_fraction() == pytest.approx(0.3 / 1.1)
+    # skip drops the warmup step
+    assert t.overlap_seconds(skip=1) == pytest.approx(0.3)
+    assert t.overlap_fraction(skip=1) == pytest.approx(0.3 / 0.6)
+
+
+def test_telemetry_host_empty():
+    t = RankTelemetry(4)
+    assert t.host_matrix().shape == (0, 2)
+    assert t.overlap_seconds() == 0.0
+    assert t.overlap_fraction() == 0.0
+    # skipping past the end stays empty, not an error
+    t.record_host(1.0, 1.0)
+    assert t.overlap_fraction(skip=5) == 0.0

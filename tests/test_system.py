@@ -59,6 +59,7 @@ def test_balanced_sampler_reduces_step_time_variance():
     assert cv_b < 0.1
 
 
+@pytest.mark.slow
 def test_whole_pipeline_composes(tmp_path):
     """Dataset -> Algorithm 1 -> collate -> fused MACE -> AdamW+EMA ->
     checkpoint -> restore -> continue: the full system in one test."""
