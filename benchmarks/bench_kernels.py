@@ -6,6 +6,15 @@ vs the per-path dense-CG einsum chain.  The measured speedup kappa feeds the
 ablation/scaling models (Fig 6-10).  The Pallas TPU kernels are validated in
 interpret mode in tests/test_kernels.py; on-device they fuse further (VMEM
 residency; DESIGN.md §2).
+
+``bench_interaction`` measures the full interaction op (TP + receiver
+scatter + neighbor norm) through the ``interaction`` registry kind: the ref
+path materializes the ``[E, k, d_out]`` per-edge message tensor, the fused
+path aggregates in the nnz basis and provably never does (asserted on its
+jaxpr shape census — note the per-edge ``[E, k, nnz]`` CG-contribution
+tensor remains, so this is the *partial* XLA-level dematerialization; the
+full on-chip fusion is the Pallas kernel), and the host-side edge-blocking
+cost of the Pallas kernel's data contract is timed alongside.
 """
 from __future__ import annotations
 
@@ -14,10 +23,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_row, timeit
+from repro.core.interaction import InteractionSpec
 from repro.core.irreps import lspec, sh_spec
 from repro.core.symmetric_contraction import SymConSpec, init_symcon_weights
 from repro.core.channelwise_tp import TPSpec
+from repro.data.blocking import block_edges
 from repro.kernels.registry import resolve
+from repro.roofline.hlo import jaxpr_out_shapes
 
 
 def bench_symcon(N=512, k=32, nu=2):
@@ -55,6 +67,51 @@ def bench_tp(E=2048, k=32):
     return t_ref, t_fused
 
 
+def interaction_inputs(E, N, k, spec, seed=2):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    Y = jax.random.normal(k1, (E, spec.tp.y_spec.dim))
+    h = jax.random.normal(k2, (N, k, spec.tp.h_spec.dim))
+    R = jax.random.normal(k3, (E, spec.tp.n_paths, k))
+    senders = jax.random.randint(k4, (E,), 0, N)
+    receivers = jax.random.randint(k5, (E,), 0, N)
+    edge_mask = jax.random.bernoulli(k6, 0.95, (E,))
+    return Y, h, R, senders, receivers, edge_mask
+
+
+def bench_interaction(E=4096, N=512, k=32):
+    """ref vs fused interaction op + the Pallas path's host blocking cost.
+
+    Returns ``(t_ref, t_fused, t_block, fused_no_edge_msgs)`` where the last
+    is the materialization guard: True iff the fused jaxpr contains no
+    ``[E, k, d_out]`` per-edge message tensor (the ref jaxpr must; the
+    ``[E, k, nnz]`` contribution tensor is expected and not asserted on).
+    """
+    spec = InteractionSpec(
+        TPSpec(sh_spec(3), lspec(0, 1), lspec(0, 1, 2, 3)),
+        avg_num_neighbors=12.0,
+    )
+    args = interaction_inputs(E, N, k, spec)
+    ref = jax.jit(resolve("interaction", "ref", spec))
+    fused = jax.jit(resolve("interaction", "fused", spec))
+    np.testing.assert_allclose(
+        np.asarray(ref(*args)), np.asarray(fused(*args)), rtol=1e-4, atol=1e-4
+    )
+
+    edge_msgs = (E, k, spec.tp.out_spec.dim)
+    assert edge_msgs in jaxpr_out_shapes(resolve("interaction", "ref", spec), *args)
+    no_msgs = edge_msgs not in jaxpr_out_shapes(
+        resolve("interaction", "fused", spec), *args
+    )
+
+    t_ref = timeit(lambda: jax.block_until_ready(ref(*args)))
+    t_fused = timeit(lambda: jax.block_until_ready(fused(*args)))
+    receivers_np = np.asarray(args[4])
+    edge_mask_np = np.asarray(args[5])
+    t_block = timeit(lambda: block_edges(receivers_np, edge_mask_np, N))
+    return t_ref, t_fused, t_block, no_msgs
+
+
 def measured_kernel_speedup() -> float:
     """kappa for the scaling models: end-to-end contraction-stage speedup."""
     tr1, tf1 = bench_symcon()
@@ -77,6 +134,16 @@ def main():
         f"speedup={t_ref / t_fused:.2f}x_fused",
     ))
     rows.append(csv_row("kernel_channelwise_tp_fused", t_fused * 1e6))
+    t_ref, t_fused, t_block, no_msgs = bench_interaction()
+    rows.append(csv_row(
+        "kernel_interaction_ref", t_ref * 1e6,
+        f"speedup={t_ref / t_fused:.2f}x_fused",
+    ))
+    rows.append(csv_row(
+        "kernel_interaction_fused", t_fused * 1e6,
+        f"no_edge_dout_messages={no_msgs}",
+    ))
+    rows.append(csv_row("kernel_interaction_edge_blocking_host", t_block * 1e6))
     for r in rows:
         print(r)
     return rows

@@ -48,6 +48,7 @@ def calibrate_with_engine(
     n_graphs: int = 96,
     capacity: int = 128,
     prefetch: int = 1,
+    interaction_impl: str = "auto",
 ):
     """Train ``steps`` measured steps (+1 jit-warmup step that is discarded)
     through the execution engine and return (c_token, rows) — the calibrated
@@ -65,6 +66,7 @@ def calibrate_with_engine(
     mcfg = MaceConfig(
         n_species=10, channels=8, hidden_ls=(0, 1), sh_lmax=2, a_ls=(0, 1, 2),
         correlation=2, n_interactions=2, avg_num_neighbors=8.0, impl="fused",
+        interaction_impl=interaction_impl,
     )
     ds = SyntheticCFMDataset(n_graphs, seed=11, max_atoms=min(96, capacity))
     tcfg = TrainerConfig(
@@ -85,9 +87,11 @@ def calibrate_with_engine(
     host = tel.host_matrix(skip=1)
     rows = [
         f"fig7_calibration,engine={engine},ranks={n_ranks},steps={tel.n_steps - 1},"
+        f"interaction={mcfg.interaction_impl_name},"
         f"c_token_s={c_tok:.3e},straggler_proxy={proxy.straggler_ratio:.3f},"
         f"straggler_measured={measured.straggler_ratio:.3f},"
         f"prefetch={prefetch},host_collate_s={float(host[:, 0].sum()):.3e},"
+        f"host_block_s={tel.blocking_seconds(skip=1):.3e},"
         f"host_overlap_s={tel.overlap_seconds(skip=1):.3e},"
         f"overlap_frac={tel.overlap_fraction(skip=1):.3f}"
     ]
@@ -154,6 +158,9 @@ if __name__ == "__main__":
     ap.add_argument("--prefetch", type=int, default=1,
                     help="async collate lookahead depth for the measured "
                          "run (0 = inline)")
+    ap.add_argument("--interaction-impl", default="auto",
+                    help="interaction impl for the measured run (pallas "
+                         "adds host edge blocking, reported as host_block_s)")
     args = ap.parse_args()
 
     if args.devices:
@@ -166,7 +173,7 @@ if __name__ == "__main__":
     if args.measure_steps:
         c_tok, extra = calibrate_with_engine(
             engine=args.engine, n_ranks=args.ranks, steps=args.measure_steps,
-            prefetch=args.prefetch,
+            prefetch=args.prefetch, interaction_impl=args.interaction_impl,
         )
         if c_tok is not None:
             c_token = c_tok

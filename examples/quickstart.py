@@ -23,11 +23,13 @@ def main():
     out = tr.train(n_epochs=2, max_steps=10)
     print("losses:", [round(h["loss"], 3) for h in out["history"]])
 
-    # predict on a fresh molecule (engine.collate returns one batch per rank)
+    # predict on a fresh molecule (engine.collate returns one batch per rank
+    # plus a host-stats dict)
     bin_items = tr.sampler.bins_for_epoch(0)[0]
-    batch = tr.engine.collate(
+    batches, _ = tr.engine.collate(
         [[ds.get(i) for i in bin_items]], tr.bin_shape
-    )[0]
+    )
+    batch = batches[0]
     energy, forces = mace_energy_forces(tr.params, cfg, batch, tcfg.max_graphs)
     n_real = int(batch["node_mask"].sum())
     print(f"energies[:4]: {jnp.round(energy[:4], 3)}")

@@ -21,6 +21,15 @@ behaviour — numerically identical either way, see tests/test_engine.py).
 The final telemetry line reports how much collate time was hidden
 (``overlap``).
 
+Kernel selection: ``--impl`` picks the contraction kernels from
+``kernels.registry`` and ``--interaction-impl`` the TP+scatter interaction
+op (``auto`` follows --impl; ``pallas`` consumes the data pipeline's
+pre-blocked edges — collation then emits the ``blk_*`` arrays and the
+telemetry line attributes the host blocking seconds):
+
+    PYTHONPATH=src python examples/train_mace_cfm.py \
+        --steps 20 --interaction-impl pallas
+
 Flags scale from smoke (defaults) to the paper's config
 (--channels 128 --capacity 3072 --correlation 2 on real hardware).
 Compare against the fixed-count baseline with --sampler fixed.
@@ -42,6 +51,10 @@ def main():
     ap.add_argument("--impl", default="fused",
                     help="kernel impl name from kernels.registry "
                          "(ref | fused | pallas | registered)")
+    ap.add_argument("--interaction-impl", default="auto",
+                    help="interaction (TP+scatter) impl from kernels.registry "
+                         "(auto = follow --impl; pallas consumes pre-blocked "
+                         "edges from collation)")
     ap.add_argument("--engine", choices=["sequential", "shard_map"],
                     default="sequential")
     ap.add_argument("--n-ranks", type=int, default=0,
@@ -74,6 +87,7 @@ def main():
         n_species=10, channels=args.channels, hidden_ls=(0, 1), sh_lmax=3,
         a_ls=(0, 1, 2, 3), correlation=args.correlation, n_interactions=2,
         avg_num_neighbors=12.0, impl=args.impl,
+        interaction_impl=args.interaction_impl,
     )
     ds = SyntheticCFMDataset(args.n_graphs, seed=0, max_atoms=args.max_atoms)
     tcfg = TrainerConfig(
@@ -88,7 +102,8 @@ def main():
     print(
         f"params={param_count(tr.params):,} graphs={len(ds)} "
         f"steps/epoch={tr.sampler.steps_per_epoch()} sampler={args.sampler} "
-        f"engine={args.engine} ranks={tcfg.n_ranks} prefetch={tcfg.prefetch}"
+        f"engine={args.engine} ranks={tcfg.n_ranks} prefetch={tcfg.prefetch} "
+        f"impl={args.impl} interaction={cfg.interaction_impl_name}"
     )
 
     t0 = time.perf_counter()
@@ -121,7 +136,8 @@ def main():
         print(
             f"prefetch: depth={tcfg.prefetch} "
             f"overlap={tel.overlap_seconds(skip):.3f}s "
-            f"({100 * tel.overlap_fraction(skip):.0f}% of host collate hidden)"
+            f"({100 * tel.overlap_fraction(skip):.0f}% of host collate hidden) "
+            f"edge_blocking={tel.blocking_seconds(skip):.3f}s"
         )
     print("checkpoint at", tcfg.ckpt_dir)
 

@@ -7,6 +7,12 @@ from .binpack import (  # noqa: F401
     first_fit_decreasing,
     fixed_count_batches,
 )
+from .interaction import (  # noqa: F401
+    InteractionSpec,
+    interaction_fused,
+    interaction_ref,
+    resolve_interaction,
+)
 from .irreps import LSpec, lspec, sh_spec  # noqa: F401
 from .mace import (  # noqa: F401
     MaceConfig,

@@ -8,12 +8,13 @@ Bessel functions, polynomial cutoff, Adam-friendly fp32.
 Structure per interaction layer t:
   1. per-l linear "up" on node features h
   2. radial MLP -> per-path x per-channel TP weights  R_{ji,k,(l1l2l3)}
-  3. channelwise tensor product (Algorithm 2)  ->  edge features
-  4. scatter-sum over receivers / avg_num_neighbors  ->  atomic basis A_i
-  5. per-l linear on A
-  6. symmetric contraction (Algorithm 3)  ->  higher-body-order B_i
-  7. message m = per-l linear(B);  h' = m + species-dependent skip(h)
-  8. readout: layer < last: linear on invariant block; last: MLP
+  3. interaction op (one call through ``kernels.registry``): channelwise
+     tensor product (Algorithm 2) + masked scatter-sum over receivers
+     + /avg_num_neighbors  ->  atomic basis A_i
+  4. per-l linear on A
+  5. symmetric contraction (Algorithm 3)  ->  higher-body-order B_i
+  6. message m = per-l linear(B);  h' = m + species-dependent skip(h)
+  7. readout: layer < last: linear on invariant block; last: MLP
 
 Total energy  E = sum_i (E0_{z_i} + sum_t readout_t(h_i^t));
 forces  F = -dE/dr  via jax.grad (tests check rotational equivariance).
@@ -27,11 +28,21 @@ Batch layout (static shapes; padding masked):
   edge_mask  [E] bool
   graph_id   [N] int32   (which graph a node belongs to; < n_graphs)
   n_graphs   static int
+
+Optional blocking metadata (the fused TP+scatter kernel's batch contract,
+emitted by ``data/collate.py`` when the selected interaction impl consumes
+it — see ``data.blocking``):
+  blk_perm   [T*epb] int32   edge permutation into receiver-sorted tiles
+  blk_valid  [T*epb] bool
+  blk_local  [T*epb] int32   receiver offset within the tile
+  blk_base   [T] int32       first atom row covered by each tile
+``MaceConfig.interaction_block_n`` must equal the pipeline's
+``BinShape.block_n`` (one static value that cannot travel in an array).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -40,6 +51,7 @@ import numpy as np
 from repro.kernels.registry import resolve
 
 from .channelwise_tp import TPSpec
+from .interaction import InteractionSpec, resolve_interaction
 from .irreps import LSpec, lspec, sh_spec
 from .radial import apply_mlp, init_mlp, radial_embedding
 from .spherical import spherical_harmonics
@@ -63,6 +75,13 @@ class MaceConfig:
     readout_mlp: int = 16
     avg_num_neighbors: float = 12.0
     impl: str = "fused"                   # any name in kernels.registry ("ref" | "fused" | "pallas" | registered)
+    # interaction (TP+scatter) impl; "auto" follows ``impl``.  Selecting
+    # "pallas" consumes the data pipeline's blk_* batch arrays when present
+    # and falls back to TP-kernel + segment_sum when absent.
+    interaction_impl: str = "auto"
+    # atom rows per kernel tile; must match BinShape.block_n when blocking
+    # metadata is consumed (data.blocking.DEFAULT_BLOCK_N)
+    interaction_block_n: int = 32
     dtype: Any = jnp.float32
 
     @property
@@ -87,6 +106,16 @@ class MaceConfig:
 
     def symcon_spec(self) -> SymConSpec:
         return SymConSpec(self.a_spec, self.hidden_spec, self.correlation)
+
+    @property
+    def interaction_impl_name(self) -> str:
+        return self.impl if self.interaction_impl == "auto" else self.interaction_impl
+
+    def interaction_spec_at(self, layer: int) -> InteractionSpec:
+        return InteractionSpec(
+            self.tp_spec_at(layer), self.avg_num_neighbors,
+            self.interaction_block_n,
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -166,8 +195,14 @@ def mace_energy(
     edge_mask: jnp.ndarray,
     graph_id: jnp.ndarray,
     n_graphs: int,
+    blocking: Optional[Dict[str, jnp.ndarray]] = None,
 ) -> jnp.ndarray:
-    """Total potential energy per graph: [n_graphs]."""
+    """Total potential energy per graph: [n_graphs].
+
+    ``blocking`` is the optional pre-blocked-edge metadata from the data
+    pipeline (``data.blocking.blocking_from_batch``); impls that don't
+    consume it ignore it.
+    """
     dt = cfg.dtype
     N = species.shape[0]
     k = cfg.channels
@@ -176,7 +211,6 @@ def mace_energy(
     lengths = jnp.sqrt(jnp.sum(vec * vec, axis=-1) + 1e-18)
     Y = spherical_harmonics(cfg.sh_lmax, vec).astype(dt)     # [E, dim_sh]
     radial = radial_embedding(lengths, cfg.r_max, cfg.num_bessel).astype(dt)
-    emask = edge_mask.astype(dt)[:, None]
 
     # initial node features: species embedding, l=0 block
     h = params["embed"][species][:, :, None]                 # [N, k, 1]
@@ -189,15 +223,19 @@ def mace_energy(
         layer = params[f"layer_{t}"]
         h_spec = cfg.h_spec_at(t)
         tp_spec = cfg.tp_spec_at(t)
-        tp_fn = resolve("channelwise_tp", cfg.impl, tp_spec)
+        # falls back to a registered TP-only impl of the same name wrapped
+        # in the oracle aggregation (third-party backend extension point)
+        int_fn = resolve_interaction(
+            cfg.interaction_impl_name, cfg.interaction_spec_at(t)
+        )
         sc_fn = resolve("symcon", cfg.impl, cfg.symcon_spec())
 
         h_up = _apply_linear_per_l(layer["lin_up"], h, h_spec)
         R = apply_mlp(layer["radial"], radial).reshape(-1, tp_spec.n_paths, k)
-        msgs = tp_fn(Y, h_up[senders], R)                    # [E, k, dim_a]
-        # scatter to receivers (pooling of Algorithm 2's output)
-        A = jax.ops.segment_sum(msgs * emask[:, None, :], receivers, N)
-        A = A / cfg.avg_num_neighbors
+        # interaction op: TP (Algorithm 2) + masked scatter to receivers
+        # + /avg_num_neighbors, fused behind one registry-resolved call
+        A = int_fn(Y, h_up, R, senders, receivers, edge_mask,
+                   blocking=blocking)                        # [N, k, dim_a]
         A = _apply_linear_per_l(layer["lin_a"], A, cfg.a_spec)
 
         B = sc_fn(A, species, layer["symcon"])               # [N, k, dim_hidden]
@@ -228,7 +266,14 @@ def mace_energy(
 def mace_energy_forces(
     params: Params, cfg: MaceConfig, batch: Dict[str, jnp.ndarray], n_graphs: int
 ):
-    """Returns (energy [G], forces [N, 3])."""
+    """Returns (energy [G], forces [N, 3]).
+
+    Picks up the optional ``blk_*`` blocking arrays from the batch (the
+    fused-interaction contract; see module docstring) when present.
+    """
+    from repro.data.blocking import blocking_from_batch  # deferred: layering
+
+    blocking = blocking_from_batch(batch)
 
     def e_total(pos):
         e = mace_energy(
@@ -242,6 +287,7 @@ def mace_energy_forces(
             batch["edge_mask"],
             batch["graph_id"],
             n_graphs,
+            blocking=blocking,
         )
         return jnp.sum(e), e
 

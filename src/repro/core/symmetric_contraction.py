@@ -14,6 +14,7 @@ Implementations:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Tuple
 
 import jax
@@ -97,7 +98,11 @@ class SymConTables:
     # each: (L, nu, idx [nnz, nu], M [nnz], eta [nnz], val [nnz])
 
 
+@functools.lru_cache(maxsize=None)
 def build_symcon_tables(spec: SymConSpec) -> SymConTables:
+    """Build (and memoise per spec) the sparse U tables: nu_max=3 tables take
+    minutes to enumerate, so every impl/benchmark/test binding the same spec
+    must share one build."""
     entries = []
     for (L, nu) in spec.terms():
         idx, M, eta, val = u_tensor_nonzeros(tuple(spec.in_spec.ls), L, nu)

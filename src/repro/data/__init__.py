@@ -1,5 +1,6 @@
 from .molecules import SyntheticCFMDataset, TABLE3_MIXTURE  # noqa: F401
 from .collate import collate_bin, collate_stacked, BinShape  # noqa: F401
+from .blocking import EdgeBlocking, block_edges  # noqa: F401
 from .prefetch import PrefetchItem, PrefetchPipeline  # noqa: F401
 from .sampler import BalancedBatchSampler, FixedCountSampler  # noqa: F401
 from .sequence_pack import pack_documents, packing_stats  # noqa: F401

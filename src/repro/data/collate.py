@@ -4,14 +4,29 @@ A *bin* (the paper's minibatch) is collated to fixed node/edge/graph counts
 so every training step hits the same compiled program regardless of which
 graphs Algorithm 1 placed in the bin — padding is the memory objective the
 packer minimises (Eq. 4).
+
+``with_blocking=True`` additionally emits the fused-interaction kernel's
+pre-blocked edge arrays (``blk_*`` keys; see ``data.blocking``) — host-side
+numpy work that runs right next to Algorithm-1 collation, so the prefetch
+pipeline hides it behind device compute.  Blocking shapes are a pure
+function of the :class:`BinShape` (``blocking_tiles``), keeping jit
+recompiles bounded and per-rank blockings stackable to ``[R, ...]``.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from .blocking import (
+    DEFAULT_BLOCK_E,
+    DEFAULT_BLOCK_N,
+    block_edges,
+    blocking_to_batch,
+    static_n_tiles,
+)
 from .molecules import Molecule
 
 
@@ -22,20 +37,58 @@ class BinShape:
     max_nodes: int           # == bin capacity C
     max_edges: int           # C * edge_factor
     max_graphs: int
+    # fused-interaction edge blocking (see data.blocking): atom rows / edge
+    # slots per kernel tile
+    block_n: int = DEFAULT_BLOCK_N
+    block_e: int = DEFAULT_BLOCK_E
+
+    @property
+    def blocking_tiles(self) -> int:
+        """Static tile count for this shape's blocking arrays."""
+        return static_n_tiles(
+            self.max_edges, self.max_nodes, self.block_n, self.block_e
+        )
 
     @staticmethod
-    def for_capacity(capacity: int, edge_factor: int = 24, max_graphs: Optional[int] = None):
+    def for_capacity(
+        capacity: int,
+        edge_factor: int = 24,
+        max_graphs: Optional[int] = None,
+        *,
+        block_n: int = DEFAULT_BLOCK_N,
+        block_e: int = DEFAULT_BLOCK_E,
+    ):
         return BinShape(
             max_nodes=capacity,
             max_edges=capacity * edge_factor,
             max_graphs=max_graphs or max(8, capacity // 8),
+            block_n=block_n,
+            block_e=block_e,
         )
 
 
-def collate_bin(
-    mols: Sequence[Molecule], shape: BinShape, *, strict: bool = False
+def bin_blocking_arrays(
+    col: Dict[str, np.ndarray], shape: BinShape
 ) -> Dict[str, np.ndarray]:
-    """Concatenate graphs block-diagonally (Fig. 3) and pad to ``shape``."""
+    """Shape-stable ``blk_*`` arrays for one collated bin."""
+    return blocking_to_batch(
+        block_edges(
+            col["receivers"], col["edge_mask"], shape.max_nodes,
+            block_n=shape.block_n, block_e=shape.block_e,
+            n_tiles=shape.blocking_tiles,
+        )
+    )
+
+
+def collate_bin(
+    mols: Sequence[Molecule], shape: BinShape, *, strict: bool = False,
+    with_blocking: bool = False, timings: Optional[Dict[str, float]] = None,
+) -> Dict[str, np.ndarray]:
+    """Concatenate graphs block-diagonally (Fig. 3) and pad to ``shape``.
+
+    ``timings`` (optional, mutated) accumulates the host seconds spent on
+    edge blocking under ``"block_s"`` so callers (the engines) can
+    attribute the fused-interaction preprocessing in telemetry."""
     N, E, G = shape.max_nodes, shape.max_edges, shape.max_graphs
     n_tot = sum(m.n_atoms for m in mols)
     e_tot = sum(m.n_edges for m in mols)
@@ -80,7 +133,7 @@ def collate_bin(
 
     # padded nodes join a dedicated spare graph slot (zero weight in loss)
     graph_id[n_off:] = G - 1
-    return {
+    out = {
         "species": species,
         "positions": positions,
         "node_mask": node_mask,
@@ -91,6 +144,14 @@ def collate_bin(
         "energy": energy,
         "forces": forces,
     }
+    if with_blocking:
+        t0 = time.perf_counter()
+        out.update(bin_blocking_arrays(out, shape))
+        if timings is not None:
+            timings["block_s"] = (
+                timings.get("block_s", 0.0) + time.perf_counter() - t0
+            )
+    return out
 
 
 def collate_stacked(
@@ -98,6 +159,8 @@ def collate_stacked(
     shape: BinShape,
     *,
     strict: bool = False,
+    with_blocking: bool = False,
+    timings: Optional[Dict[str, float]] = None,
 ) -> Dict[str, np.ndarray]:
     """Collate R per-rank bins and stack them on a leading ``[R, ...]`` axis.
 
@@ -109,5 +172,9 @@ def collate_stacked(
     """
     if not mols_per_rank:
         raise ValueError("need at least one rank's bin")
-    cols = [collate_bin(m, shape, strict=strict) for m in mols_per_rank]
+    cols = [
+        collate_bin(m, shape, strict=strict, with_blocking=with_blocking,
+                    timings=timings)
+        for m in mols_per_rank
+    ]
     return {k: np.stack([c[k] for c in cols]) for k in cols[0]}

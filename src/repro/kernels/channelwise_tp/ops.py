@@ -1,96 +1,52 @@
 """Public wrappers for the fused channelwise-TP(+scatter) kernel.
 
-``block_edges``      — host-side (numpy) edge blocking: sort by receiver,
-                       group into atom tiles, pad each tile's edge list.
-                       Runs in the data pipeline alongside Algorithm 1.
-``interaction_pallas`` — full fused TP+scatter given blocked edges.
-``tp_pallas``        — TP-only drop-in for ``tp_fused`` (scatter outside);
-                       used by the MACE model's ``impl="pallas"`` mode.
+Batch contract (the model/pipeline handshake)
+---------------------------------------------
+Edge blocking is a *data-pipeline product*: ``data.blocking.block_edges``
+runs on the host next to Algorithm-1 collation and its arrays ride inside
+the batch dict under ``blk_*`` keys (``data.blocking.BLOCKING_BATCH_KEYS``),
+shape-stable per ``BinShape`` and stacked to ``[R, ...]`` for shard_map.
+``core/mace.py`` extracts them (``blocking_from_batch``) and hands them —
+untouched — to the ``interaction`` impl resolved from ``kernels.registry``:
+
+``interaction_pallas_op``
+    The registered ``interaction/pallas`` impl.  With blocking it runs the
+    fully fused TP+scatter kernel (sort + one-hot MXU matmul; the TPU-native
+    ``atomicAdd`` — see kernel.py) over the pre-blocked edges, then a cheap
+    ``[T*block_n] -> [N]`` segment-add folds the virtual tiles back onto
+    atom rows.  Without blocking it *falls back* (capability check) to the
+    TP-only kernel + XLA segment-sum, so the impl stays selectable on
+    batches that carry no blocking metadata.
+
+    Both paths differentiate through a ``jax.custom_vjp`` whose backward is
+    the VJP of the numerically-equivalent ``interaction_fused`` formulation
+    — the standard production-kernel pattern (forward = hand-written kernel,
+    backward = XLA) until a dedicated backward kernel lands.
+
+``tp_pallas``
+    TP-only drop-in for ``tp_fused`` (scatter outside); used by the
+    fallback above and by ``MaceConfig(impl="pallas")``'s contraction stage.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Tuple
+from functools import partial
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.channelwise_tp import TPSpec, TPTables, build_tp_tables
+from repro.core.interaction import (
+    InteractionSpec,
+    aggregate_edge_messages,
+    interaction_fused,
+)
+# Re-exported for backward compatibility: blocking is built by the data
+# pipeline now, but kernel-side callers/tests import it from here too.
+from repro.data.blocking import EdgeBlocking, block_edges  # noqa: F401
 
 from .kernel import tp_scatter_pallas_raw
-
-
-@dataclasses.dataclass(frozen=True)
-class EdgeBlocking:
-    """Static edge blocking for one batch shape."""
-
-    perm: np.ndarray         # [E_p] -> original edge id (padding slots -> 0)
-    valid: np.ndarray        # [E_p] bool
-    local_rcv: np.ndarray    # [E_p] receiver index within its atom tile
-    n_atom_tiles: int
-    block_n: int
-    epb: int                 # padded edges per atom tile
-
-
-def block_edges(
-    receivers: np.ndarray,
-    edge_mask: np.ndarray,
-    n_atoms: int,
-    *,
-    block_n: int = 32,
-    block_e: int = 128,
-) -> EdgeBlocking:
-    receivers = np.asarray(receivers)
-    edge_mask = np.asarray(edge_mask).astype(bool)
-    n_tiles = -(-n_atoms // block_n)
-    eids = [[] for _ in range(n_tiles)]
-    for e in np.nonzero(edge_mask)[0]:
-        eids[int(receivers[e]) // block_n].append(int(e))
-    epb = max((len(x) for x in eids), default=0)
-    epb = max(block_e, -(-epb // block_e) * block_e)
-
-    perm = np.zeros((n_tiles * epb,), np.int64)
-    valid = np.zeros((n_tiles * epb,), bool)
-    local = np.zeros((n_tiles * epb,), np.int32)
-    for t, lst in enumerate(eids):
-        for s, e in enumerate(lst):
-            perm[t * epb + s] = e
-            valid[t * epb + s] = True
-            local[t * epb + s] = int(receivers[e]) - t * block_n
-    return EdgeBlocking(perm, valid, local, n_tiles, block_n, epb)
-
-
-def interaction_pallas(
-    Y: jnp.ndarray,          # [E, d_sh]
-    h_send: jnp.ndarray,     # [E, k, d_h]
-    R: jnp.ndarray,          # [E, n_paths, k]
-    blocking: EdgeBlocking,
-    spec: TPSpec,
-    tables: TPTables | None = None,
-    *,
-    n_atoms: int,
-    block_e: int = 128,
-    interpret: bool | None = None,
-) -> jnp.ndarray:
-    """Fused TP + scatter. Returns A [n_atoms, k, d_out]."""
-    t = tables or build_tp_tables(spec)
-    perm = jnp.asarray(blocking.perm)
-    Y_b = Y[perm]                                 # [E_p, d_sh]
-    h_b = jnp.swapaxes(h_send[perm], 1, 2)        # [E_p, d_h, k]
-    R_b = R[perm]                                 # [E_p, n_paths, k] (already k-minor)
-    lr = jnp.asarray(blocking.local_rcv)[:, None]
-    em = jnp.asarray(blocking.valid, h_b.dtype)[:, None]
-
-    A_t = tp_scatter_pallas_raw(
-        Y_b, h_b, R_b, lr, em, spec, t,
-        n_atom_tiles=blocking.n_atom_tiles,
-        block_n=blocking.block_n,
-        block_e=min(block_e, blocking.epb),
-        interpret=interpret,
-    )                                             # [tiles*block_n, d_out, k]
-    A = jnp.swapaxes(A_t, 1, 2)[:n_atoms]
-    return A
 
 
 def tp_pallas(
@@ -104,10 +60,9 @@ def tp_pallas(
     interpret: bool | None = None,
 ) -> jnp.ndarray:
     """TP-only drop-in for ``tp_fused`` (identity 'scatter': each edge is its
-    own segment).  Lets the MACE model run impl="pallas" without changing its
-    aggregation path; the fully fused variant is ``interaction_pallas``."""
-    t = tables or build_tp_tables(spec)
-    E, k = h_send.shape[0], h_send.shape[1]
+    own segment).  The fully fused variant is ``interaction_pallas_op``."""
+    t = tables if tables is not None else build_tp_tables(spec)
+    E = h_send.shape[0]
     pad = (-E) % block_e
     Y_b = jnp.pad(Y, ((0, pad), (0, 0)))
     h_b = jnp.pad(jnp.swapaxes(h_send, 1, 2), ((0, pad), (0, 0), (0, 0)))
@@ -124,3 +79,137 @@ def tp_pallas(
         interpret=interpret,
     )                                             # [E_p, d_out, k]
     return jnp.swapaxes(A_t, 1, 2)[:E]
+
+
+# ---------------------------------------------------------------------------
+# fused interaction (TP + scatter) over pre-blocked edges
+# ---------------------------------------------------------------------------
+
+
+def _blocked_forward(spec, interpret, Y, h_node, R, senders, receivers,
+                     edge_mask, perm, valid, local, base):
+    """Fused kernel forward: returns A [N, k, d_out] (already /avg).
+
+    ``receivers``/``edge_mask`` are unused here (the blocking arrays encode
+    both) but kept in the uniform op signature: the shared backward needs
+    them as residuals."""
+    del receivers, edge_mask
+    T = base.shape[0]
+    epb = perm.shape[0] // T
+    t = build_tp_tables(spec.tp)                  # lru-cached per spec
+    n_atoms = h_node.shape[0]
+    Y_b = Y[perm]                                 # [E_p, d_sh]
+    h_b = jnp.swapaxes(h_node[senders[perm]], 1, 2)   # one composed gather
+    R_b = R[perm]                                 # [E_p, n_paths, k]
+    lr = local[:, None]
+    em = valid.astype(h_b.dtype)[:, None]
+
+    A_t = tp_scatter_pallas_raw(
+        Y_b, h_b, R_b, lr, em, spec.tp, t,
+        n_atom_tiles=T, block_n=spec.block_n, block_e=epb,
+        interpret=interpret,
+    )                                             # [T*block_n, d_out, k]
+    # fold virtual tiles back onto atom rows: tiny [T*block_n] segment-add
+    # (tile bases may repeat for hub atoms / overflow tiles)
+    rows = (base[:, None] + jnp.arange(spec.block_n, dtype=base.dtype)).reshape(-1)
+    A = jax.ops.segment_sum(A_t, rows, n_atoms + spec.block_n)[:n_atoms]
+    return jnp.swapaxes(A, 1, 2) / spec.avg_num_neighbors
+
+
+def _unblocked_forward(spec, interpret, Y, h_node, R, senders,
+                       receivers, edge_mask):
+    """Capability fallback: TP-only kernel + XLA segment-sum."""
+    msgs = tp_pallas(Y, h_node[senders], R, spec.tp, interpret=interpret)
+    return aggregate_edge_messages(
+        msgs, receivers, edge_mask, h_node.shape[0], spec
+    )
+
+
+def _float0(a):
+    return np.zeros(a.shape, jax.dtypes.float0)
+
+
+def _make_pallas_interaction_op(forward):
+    """Wrap a pallas forward ``(spec, interpret, Y, h_node, R, senders,
+    receivers, edge_mask, *blocking_arrays)`` in a ``jax.custom_vjp`` whose
+    backward is the VJP of the numerically-equivalent ``interaction_fused``
+    formulation; integer/bool operands get float0 cotangents."""
+
+    @partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+    def op(spec, interpret, Y, h_node, R, *ints):
+        return forward(spec, interpret, Y, h_node, R, *ints)
+
+    def fwd(spec, interpret, Y, h_node, R, *ints):
+        return op(spec, interpret, Y, h_node, R, *ints), (Y, h_node, R) + ints
+
+    def bwd(spec, interpret, res, g):
+        Y, h_node, R, senders, receivers, edge_mask = res[:6]
+        _, vjp = jax.vjp(
+            lambda y, h, r: interaction_fused(
+                y, h, r, senders, receivers, edge_mask, spec=spec
+            ),
+            Y, h_node, R,
+        )
+        return vjp(g) + tuple(_float0(a) for a in res[3:])
+
+    op.defvjp(fwd, bwd)
+    return op
+
+
+_blocked_op = _make_pallas_interaction_op(_blocked_forward)
+_unblocked_op = _make_pallas_interaction_op(_unblocked_forward)
+
+
+def interaction_pallas_op(
+    Y: jnp.ndarray,
+    h_node: jnp.ndarray,
+    R: jnp.ndarray,
+    senders: jnp.ndarray,
+    receivers: jnp.ndarray,
+    edge_mask: jnp.ndarray,
+    *,
+    spec: InteractionSpec,
+    blocking: Optional[Dict[str, jnp.ndarray]] = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Registered ``interaction/pallas`` impl (see module docstring)."""
+    if blocking is None:
+        return _unblocked_op(
+            spec, interpret, Y, h_node, R, senders, receivers, edge_mask
+        )
+    if blocking["perm"].shape[0] % blocking["base"].shape[0]:
+        raise ValueError("blocking perm length not a multiple of tile count")
+    return _blocked_op(
+        spec, interpret, Y, h_node, R, senders, receivers, edge_mask,
+        blocking["perm"], blocking["valid"], blocking["local"],
+        blocking["base"],
+    )
+
+
+def interaction_pallas(
+    Y: jnp.ndarray,
+    h_node: jnp.ndarray,
+    R: jnp.ndarray,
+    senders: jnp.ndarray,
+    receivers: jnp.ndarray,
+    edge_mask: jnp.ndarray,
+    blocking: EdgeBlocking,
+    spec: InteractionSpec,
+    *,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Convenience wrapper taking a host-side :class:`EdgeBlocking`."""
+    if blocking.block_n != spec.block_n:
+        raise ValueError(
+            f"blocking block_n={blocking.block_n} != spec.block_n={spec.block_n}"
+        )
+    arrays = {
+        "perm": jnp.asarray(blocking.perm, jnp.int32),
+        "valid": jnp.asarray(blocking.valid),
+        "local": jnp.asarray(blocking.local_rcv),
+        "base": jnp.asarray(blocking.tile_base),
+    }
+    return interaction_pallas_op(
+        Y, h_node, R, senders, receivers, edge_mask,
+        spec=spec, blocking=arrays, interpret=interpret,
+    )

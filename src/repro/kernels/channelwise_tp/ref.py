@@ -1,11 +1,12 @@
-"""Pure-jnp oracle for the fused channelwise-TP(+scatter) kernel: the
-per-path dense-CG einsum chain (e3nn-style) followed by segment_sum."""
+"""Pure-jnp oracles for the channelwise-TP(+scatter) kernels: the e3nn-style
+per-path dense-CG einsum chain, and the full interaction op (TP -> masked
+segment_sum -> /avg_num_neighbors) it is fused against."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.channelwise_tp import TPSpec, tp_ref
+from repro.core.interaction import InteractionSpec, interaction_ref
 
 
 def tp_reference(Y, h_send, R, spec: TPSpec) -> jnp.ndarray:
@@ -13,8 +14,9 @@ def tp_reference(Y, h_send, R, spec: TPSpec) -> jnp.ndarray:
 
 
 def interaction_reference(
-    Y, h_send, R, receivers, edge_mask, n_atoms: int, spec: TPSpec
+    Y, h_node, R, senders, receivers, edge_mask, spec: InteractionSpec
 ) -> jnp.ndarray:
-    msgs = tp_ref(Y, h_send, R, spec)
-    msgs = msgs * edge_mask.astype(msgs.dtype)[:, None, None]
-    return jax.ops.segment_sum(msgs, receivers, n_atoms)
+    """Oracle for the fused TP+scatter kernel: A [N, k, d_out]."""
+    return interaction_ref(
+        Y, h_node, R, senders, receivers, edge_mask, spec=spec
+    )

@@ -1,9 +1,10 @@
 """Kernel dispatch registry: one name -> implementation table for every
 compute hot-spot the paper optimizes (§4).
 
-The MACE forward pass has two custom contractions — the channelwise tensor
-product (Algorithm 2) and the symmetric contraction (Algorithm 3) — and each
-ships in three implementations:
+The MACE forward pass has three custom hot-spots — the channelwise tensor
+product (Algorithm 2), the symmetric contraction (Algorithm 3), and the
+``interaction`` op (TP + receiver scatter + neighbor norm as ONE operation,
+the paper's fused-kernel target) — and each ships in three implementations:
 
   ``ref``     chained per-path dense-CG einsums (e3nn-style; the oracle)
   ``fused``   sparse-table single-einsum formulation (XLA-fused; default)
@@ -44,8 +45,13 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 # used by configs/CLI to the canonical kind name.
 KIND_TP = "channelwise_tp"
 KIND_SYMCON = "symcon"
-KINDS = (KIND_TP, KIND_SYMCON)
-KIND_ALIASES = {"tp": KIND_TP, "symmetric_contraction": KIND_SYMCON}
+KIND_INTERACTION = "interaction"
+KINDS = (KIND_TP, KIND_SYMCON, KIND_INTERACTION)
+KIND_ALIASES = {
+    "tp": KIND_TP,
+    "symmetric_contraction": KIND_SYMCON,
+    "tp_scatter": KIND_INTERACTION,
+}
 
 Builder = Callable[[Any], Callable]  # spec -> bound kernel callable
 
@@ -60,6 +66,12 @@ class KernelImpl:
     needs_tables: bool = False          # builds sparse lookup tables at bind time
     platforms: Tuple[str, ...] = ("cpu", "gpu", "tpu")
     interpret_only_on: Tuple[str, ...] = ()   # platforms where it runs emulated
+    # impl exploits the data pipeline's pre-blocked edges (``data.blocking``);
+    # engines use this to decide whether collation should emit blk_* arrays
+    consumes_blocking: bool = False
+    # impl traces a ``pallas_call`` (no shard_map replication rule: engines
+    # must drop ``check_rep`` when such an impl is selected)
+    uses_pallas: bool = False
     description: str = ""
 
     def supports(self, platform: str) -> bool:
@@ -87,6 +99,8 @@ def register(
     needs_tables: bool = False,
     platforms: Tuple[str, ...] = ("cpu", "gpu", "tpu"),
     interpret_only_on: Tuple[str, ...] = (),
+    consumes_blocking: bool = False,
+    uses_pallas: bool = False,
     description: str = "",
     overwrite: bool = False,
 ) -> Callable[[Builder], Builder]:
@@ -100,6 +114,7 @@ def register(
         _REGISTRY[key] = KernelImpl(
             kind=kind, name=name, builder=builder, needs_tables=needs_tables,
             platforms=platforms, interpret_only_on=interpret_only_on,
+            consumes_blocking=consumes_blocking, uses_pallas=uses_pallas,
             description=description,
         )
         # a re-registration invalidates stale bindings
@@ -173,7 +188,7 @@ def _tp_fused_builder(spec):
 
 
 @register(KIND_TP, "pallas", needs_tables=True, platforms=("tpu",),
-          interpret_only_on=("cpu",),
+          interpret_only_on=("cpu",), uses_pallas=True,
           description="Pallas TPU kernel (interpret mode off-TPU)")
 def _tp_pallas_builder(spec):
     from functools import partial
@@ -204,7 +219,7 @@ def _symcon_fused_builder(spec):
 
 
 @register(KIND_SYMCON, "pallas", needs_tables=True, platforms=("tpu",),
-          interpret_only_on=("cpu",),
+          interpret_only_on=("cpu",), uses_pallas=True,
           description="Pallas TPU kernel (interpret mode off-TPU)")
 def _symcon_pallas_builder(spec):
     from functools import partial
@@ -213,3 +228,45 @@ def _symcon_pallas_builder(spec):
     from repro.kernels.symmetric_contraction.ops import symcon_pallas
 
     return partial(symcon_pallas, spec=spec, tables=build_symcon_tables(spec))
+
+
+# --- interaction: TP + receiver scatter + neighbor norm as one op ----------
+# spec is ``core.interaction.InteractionSpec``; signature
+#   fn(Y, h_node, R, senders, receivers, edge_mask, *, blocking=None) -> A
+
+
+@register(KIND_INTERACTION, "ref",
+          description="tp_ref -> [E,k,d_out] messages -> segment_sum (oracle)")
+def _interaction_ref_builder(spec):
+    from functools import partial
+
+    from repro.core.interaction import interaction_ref
+
+    return partial(interaction_ref, spec=spec)
+
+
+@register(KIND_INTERACTION, "fused", needs_tables=True,
+          description="nnz-basis aggregation: no [E,k,d_out] materialization")
+def _interaction_fused_builder(spec):
+    from functools import partial
+
+    from repro.core.channelwise_tp import build_tp_tables
+    from repro.core.interaction import interaction_fused
+
+    return partial(interaction_fused, spec=spec,
+                   tables=build_tp_tables(spec.tp))
+
+
+@register(KIND_INTERACTION, "pallas", needs_tables=True, platforms=("tpu",),
+          interpret_only_on=("cpu",), consumes_blocking=True,
+          uses_pallas=True,
+          description="fused TP+scatter kernel over pre-blocked edges "
+                      "(TP-only kernel + segment_sum when blocking absent)")
+def _interaction_pallas_builder(spec):
+    from functools import partial
+
+    from repro.core.channelwise_tp import build_tp_tables
+    from repro.kernels.channelwise_tp.ops import interaction_pallas_op
+
+    build_tp_tables(spec.tp)  # warm the table cache at bind time
+    return partial(interaction_pallas_op, spec=spec)

@@ -195,3 +195,46 @@ def collective_bytes_from_hlo(hlo: str) -> Dict[str, float]:
     res["total"] = sum(v for k, v in res.items() if k in _COLL_KINDS)
     res["unknown_trip_count"] = unknown_flags[0]
     return res
+
+
+# ---------------------------------------------------------------------------
+# jaxpr shape census (materialization guards)
+# ---------------------------------------------------------------------------
+
+
+def jaxpr_out_shapes(fn, *args, **kwargs) -> set:
+    """Set of every intermediate/output aval shape a traced ``fn`` produces,
+    including nested sub-jaxprs (pjit/scan/custom_vjp/...).
+
+    Used as a *materialization guard*: e.g. the fused interaction op must
+    never produce an ``[E, k, d_out]`` per-edge message tensor (paper §4),
+    so benchmarks/tests assert that shape is absent from this census.
+    Version-portable: sub-jaxprs are discovered by duck-typing
+    (``.jaxpr``/``.eqns``) rather than concrete jax.core classes.
+    """
+    import jax
+
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    shapes = set()
+
+    def subjaxprs(param):
+        if hasattr(param, "jaxpr") and hasattr(param, "consts"):  # ClosedJaxpr
+            yield param.jaxpr
+        elif hasattr(param, "eqns"):                              # Jaxpr
+            yield param
+        elif isinstance(param, (list, tuple)):
+            for p in param:
+                yield from subjaxprs(p)
+
+    def walk(jaxpr):
+        for eqn in jaxpr.eqns:
+            for v in eqn.outvars:
+                shp = getattr(getattr(v, "aval", None), "shape", None)
+                if shp is not None:
+                    shapes.add(tuple(shp))
+            for p in eqn.params.values():
+                for sub in subjaxprs(p):
+                    walk(sub)
+
+    walk(closed.jaxpr)
+    return shapes

@@ -6,10 +6,19 @@ The paper's headline result is *distributed* training (Algorithm 1 bins ->
 one bin per GPU per step -> gradient all-reduce).  Everything above the
 optimizer update is therefore factored into an *engine* with one contract:
 
-    engine.collate(mols_per_rank, bin_shape) -> backend batch layout
+    engine.collate(mols_per_rank, bin_shape)
+                       -> (backend batch layout, host stats {"block_s": s})
     engine.init_ef(params)                   -> error-feedback residuals
     engine.step(params, opt_state, ef, batch, i)
                                     -> (params, opt_state, ef, metrics)
+
+When the model's selected ``interaction`` impl consumes pre-blocked edges
+(``kernels.registry`` capability ``consumes_blocking``; e.g. the fused
+TP+scatter Pallas kernel), ``collate`` additionally emits the ``blk_*``
+blocking arrays per rank (``data.blocking``) and reports the host seconds
+spent blocking in the stats dict, which the trainer feeds to
+``RankTelemetry.record_host`` so ``bench_scaling --measure-steps``
+attributes the new host work.
 
 and two interchangeable backends:
 
@@ -84,6 +93,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.mace import MaceConfig, weighted_loss
 from repro.data.collate import BinShape, collate_bin, collate_stacked
+from repro.kernels import registry
 from repro.launch.mesh import make_dp_mesh
 from .compression import compressed_psum_ef
 from .optimizer import Transform, apply_updates
@@ -120,18 +130,25 @@ class RankTelemetry:
     # single producer thread, not per-rank work)
     host_collate: List[float] = dataclasses.field(default_factory=list)
     host_wait: List[float] = dataclasses.field(default_factory=list)
+    # seconds of ``collate_s`` spent building the fused-interaction edge
+    # blocking (a subset of host_collate; 0.0 when blocking is off)
+    host_block: List[float] = dataclasses.field(default_factory=list)
 
     def record(self, times: Sequence[float], loads: Sequence[float]) -> None:
         assert len(times) == self.n_ranks and len(loads) == self.n_ranks
         self.times.append([float(t) for t in times])
         self.loads.append([float(l) for l in loads])
 
-    def record_host(self, collate_s: float, wait_s: float) -> None:
+    def record_host(
+        self, collate_s: float, wait_s: float, block_s: float = 0.0
+    ) -> None:
         """Per-step host timings from the prefetch pipeline: seconds spent
-        collating the batch and seconds the step loop blocked waiting for
-        it.  ``wait == collate`` for the inline (depth-0) path."""
+        collating the batch, seconds the step loop blocked waiting for it
+        (``wait == collate`` for the inline depth-0 path), and the part of
+        the collate seconds spent on edge blocking."""
         self.host_collate.append(float(collate_s))
         self.host_wait.append(float(wait_s))
+        self.host_block.append(float(block_s))
 
     @property
     def n_steps(self) -> int:
@@ -208,6 +225,12 @@ class RankTelemetry:
         total = float(h[:, 0].sum())
         return self.overlap_seconds(skip) / total if total > 0 else 0.0
 
+    def blocking_seconds(self, skip: int = 0) -> float:
+        """Total host seconds spent building edge blockings (subset of the
+        collate time; attributes the fused-interaction kernel's host-side
+        preprocessing in scaling reports)."""
+        return float(np.asarray(self.host_block[skip:], np.float64).sum())
+
 
 # ---------------------------------------------------------------------------
 # shared pieces
@@ -256,6 +279,35 @@ def _rank_load(batch: Batch) -> jnp.ndarray:
     return jnp.sum(batch["node_mask"].astype(jnp.float32))
 
 
+def interaction_consumes_blocking(mace_cfg: MaceConfig) -> bool:
+    """True when the model's selected interaction impl exploits pre-blocked
+    edges — the engine then asks collation to emit the ``blk_*`` arrays."""
+    try:
+        impl = registry.get_impl("interaction", mace_cfg.interaction_impl_name)
+    except KeyError:
+        return False
+    return impl.consumes_blocking
+
+
+def _uses_pallas(mace_cfg: MaceConfig) -> bool:
+    """True when the step function can contain a ``pallas_call`` (which has
+    no shard_map replication rule, forcing ``check_rep=False``) — driven by
+    the registry's ``uses_pallas`` capability flag so third-party
+    Pallas-backed impls under any name are covered."""
+    selected = (
+        ("channelwise_tp", mace_cfg.impl),
+        ("symcon", mace_cfg.impl),
+        ("interaction", mace_cfg.interaction_impl_name),
+    )
+    for kind, name in selected:
+        try:
+            if registry.get_impl(kind, name).uses_pallas:
+                return True
+        except KeyError:
+            continue
+    return False
+
+
 # ---------------------------------------------------------------------------
 # backends
 # ---------------------------------------------------------------------------
@@ -276,6 +328,7 @@ class SequentialEngine:
     ):
         self.n_ranks = tcfg.n_ranks
         self.compress = tcfg.compress_grads
+        self.with_blocking = interaction_consumes_blocking(mace_cfg)
         self.telemetry = RankTelemetry(self.n_ranks)
         loss_fn = make_loss_fn(mace_cfg, tcfg, n_graphs)
         self._grad_fn = jax.jit(jax.value_and_grad(loss_fn, has_aux=True))
@@ -301,11 +354,15 @@ class SequentialEngine:
 
     def collate(
         self, mols_per_rank: Sequence[Sequence[Any]], shape: BinShape
-    ) -> List[Batch]:
-        return [
-            {k: jnp.asarray(v) for k, v in collate_bin(m, shape).items()}
+    ):
+        stats = {"block_s": 0.0}
+        cols = [
+            collate_bin(m, shape, with_blocking=self.with_blocking,
+                        timings=stats)
             for m in mols_per_rank
         ]
+        batches = [{k: jnp.asarray(v) for k, v in c.items()} for c in cols]
+        return batches, stats
 
     def step(self, params, opt_state, ef_state, batches: List[Batch], step_idx):
         grads_l, metrics_l, times, loads = [], [], [], []
@@ -355,6 +412,7 @@ class ShardMapEngine:
                 f"mesh has {mesh_dp} devices but engine needs n_ranks={self.n_ranks}"
             )
         self.compress = tcfg.compress_grads
+        self.with_blocking = interaction_consumes_blocking(mace_cfg)
         self.telemetry = RankTelemetry(self.n_ranks, lockstep=True)
         loss_fn = make_loss_fn(mace_cfg, tcfg, n_graphs)
         compress = self.compress
@@ -378,12 +436,16 @@ class ShardMapEngine:
             updates, opt_state = optimizer.update(grads, opt_state, params, step_idx)
             return apply_updates(params, updates), opt_state, ef, metrics, load
 
+        # pallas_call has no shard_map replication rule; disable check_rep
+        # only for configs that can trace one, keeping the replication
+        # check live for the plain ref/fused XLA paths
         self._step_fn = jax.jit(
             shard_map(
                 rank_step,
                 mesh=self.mesh,
                 in_specs=(P(), P(), P(DP_AXIS), P(DP_AXIS), P()),
                 out_specs=(P(), P(), P(DP_AXIS), P(), P(DP_AXIS)),
+                check_rep=not _uses_pallas(mace_cfg),
             )
         )
 
@@ -392,15 +454,17 @@ class ShardMapEngine:
 
     def collate(
         self, mols_per_rank: Sequence[Sequence[Any]], shape: BinShape
-    ) -> Batch:
+    ):
         if len(mols_per_rank) != self.n_ranks:
             raise ValueError(
                 f"got {len(mols_per_rank)} bins for {self.n_ranks} ranks"
             )
-        return {
-            k: jnp.asarray(v)
-            for k, v in collate_stacked(mols_per_rank, shape).items()
-        }
+        stats = {"block_s": 0.0}
+        arrs = collate_stacked(
+            mols_per_rank, shape, with_blocking=self.with_blocking,
+            timings=stats,
+        )
+        return {k: jnp.asarray(v) for k, v in arrs.items()}, stats
 
     def step(self, params, opt_state, ef_state, batch: Batch, step_idx):
         t0 = time.perf_counter()

@@ -49,6 +49,13 @@ class TrainerConfig:
     compress_grads: bool = False
     engine: str = "sequential"       # "sequential" | "shard_map" (train.engine)
     prefetch: int = 0                # async collate lookahead depth (0 = inline)
+    # overrides MaceConfig.interaction_impl when set ("ref" | "fused" |
+    # "pallas" | registered); None leaves the model config untouched
+    interaction_impl: Optional[str] = None
+    # fused-interaction edge blocking tile shape (data.blocking); block_n
+    # must match MaceConfig.interaction_block_n when blocking is consumed
+    block_n: int = 32
+    block_e: int = 128
     fixed_graphs_per_batch: int = 8   # baseline sampler's PyG-style count
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 50
@@ -66,11 +73,16 @@ class Trainer:
         seed: int = 0,
         mesh=None,
     ):
+        if tcfg.interaction_impl is not None:
+            mace_cfg = dataclasses.replace(
+                mace_cfg, interaction_impl=tcfg.interaction_impl
+            )
         self.mace_cfg = mace_cfg
         self.tcfg = tcfg
         self.dataset = dataset
         self.bin_shape = BinShape.for_capacity(
-            tcfg.capacity, tcfg.edge_factor, tcfg.max_graphs
+            tcfg.capacity, tcfg.edge_factor, tcfg.max_graphs,
+            block_n=tcfg.block_n, block_e=tcfg.block_e,
         )
         if sampler == "balanced":
             self.sampler = BalancedBatchSampler(
@@ -98,6 +110,15 @@ class Trainer:
             tcfg.engine, mace_cfg, tcfg, self.optimizer, tcfg.max_graphs,
             mesh=mesh,
         )
+        # blocking is one static tile geometry shared by data pipeline and
+        # kernel; catch a mismatch before the first (mis-shaped) batch
+        if getattr(self.engine, "with_blocking", False) and (
+            self.bin_shape.block_n != mace_cfg.interaction_block_n
+        ):
+            raise ValueError(
+                f"BinShape.block_n={self.bin_shape.block_n} != "
+                f"MaceConfig.interaction_block_n={mace_cfg.interaction_block_n}"
+            )
         # per-rank error-feedback residuals for the compressed all-reduce
         # (empty when compress_grads is off); checkpointed with the run.
         self.ef_state = self.engine.init_ef(self.params)
@@ -139,7 +160,8 @@ class Trainer:
 
     def _fetch_batch(self, rank_bins):
         """Host side of one step: materialise molecules and collate to the
-        engine's device layout.  Runs on the prefetch producer thread."""
+        engine's device layout (plus host-stats dict: blocking seconds).
+        Runs on the prefetch producer thread."""
         mols_per_rank = [[self.dataset.get(i) for i in b] for b in rank_bins]
         return self.engine.collate(mols_per_rank, self.bin_shape)
 
@@ -168,9 +190,10 @@ class Trainer:
             depth=self.tcfg.prefetch,
         ) as pipeline:
             for item in pipeline:
+                batch, host_stats = item.batch
                 self.params, self.opt_state, self.ef_state, metrics = (
                     self.engine.step(
-                        self.params, self.opt_state, self.ef_state, item.batch,
+                        self.params, self.opt_state, self.ef_state, batch,
                         jnp.asarray(self.global_step),
                     )
                 )
@@ -179,7 +202,10 @@ class Trainer:
                 )
                 self.global_step += 1
                 self.sampler_state.cursor += 1
-                self.engine.telemetry.record_host(item.collate_s, item.wait_s)
+                self.engine.telemetry.record_host(
+                    item.collate_s, item.wait_s,
+                    host_stats.get("block_s", 0.0),
+                )
                 history.append({k: float(v) for k, v in metrics.items()})
 
                 if simulate_failure_at is not None and self.global_step >= simulate_failure_at:

@@ -6,29 +6,7 @@
 import numpy as np
 import pytest
 
-try:
-    from hypothesis import given, settings, strategies as st
-except ImportError:  # pragma: no cover - depends on environment
-    class _StrategyStub:
-        def __getattr__(self, name):
-            return lambda *a, **k: None
-
-    st = _StrategyStub()
-
-    def settings(**kwargs):
-        return lambda f: f
-
-    def given(**kwargs):
-        def deco(f):
-            @pytest.mark.skip(reason="hypothesis not installed")
-            def stub():
-                pass
-
-            stub.__name__ = f.__name__
-            stub.__doc__ = f.__doc__
-            return stub
-
-        return deco
+from tests.hypothesis_support import given, settings, st
 
 from repro.core.binpack import (
     assignment_vector,

@@ -1,7 +1,7 @@
 """Property-based tests for static-shape collation invariants.
 
-``hypothesis`` is optional (same guard as tests/test_binpack.py): without it
-the property tests are collected as skip stubs.
+``hypothesis`` is optional (shared shim: tests/hypothesis_support.py):
+without it the property tests are collected as skip stubs.
 
 Invariants under test, over arbitrary per-rank bins of synthetic molecules:
 * padding masks are exact — ``node_mask``/``edge_mask`` sum to the real
@@ -13,31 +13,8 @@ Invariants under test, over arbitrary per-rank bins of synthetic molecules:
   SequentialEngine would have built).
 """
 import numpy as np
-import pytest
 
-try:
-    from hypothesis import given, settings, strategies as st
-except ImportError:  # pragma: no cover - depends on environment
-    class _StrategyStub:
-        def __getattr__(self, name):
-            return lambda *a, **k: None
-
-    st = _StrategyStub()
-
-    def settings(**kwargs):
-        return lambda f: f
-
-    def given(**kwargs):
-        def deco(f):
-            @pytest.mark.skip(reason="hypothesis not installed")
-            def stub():
-                pass
-
-            stub.__name__ = f.__name__
-            stub.__doc__ = f.__doc__
-            return stub
-
-        return deco
+from tests.hypothesis_support import given, settings, st
 
 from repro.data.collate import BinShape, collate_bin, collate_stacked
 from repro.data.molecules import SyntheticCFMDataset

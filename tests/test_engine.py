@@ -44,7 +44,7 @@ TINY = MaceConfig(
 
 
 def test_registry_lists_builtin_impls():
-    for kind in ("symcon", "channelwise_tp"):
+    for kind in ("symcon", "channelwise_tp", "interaction"):
         names = registry.available(kind)
         assert {"ref", "fused", "pallas"} <= set(names)
     # capability filter: pallas is TPU-native, interpret-mode on cpu
@@ -268,15 +268,18 @@ from repro.train.train_loop import Trainer, TrainerConfig
 
 cfg = json.loads(sys.argv[1])
 compress, steps = cfg["compress"], cfg["steps"]
-TINY = MaceConfig(n_species=10, channels=4, hidden_ls=(0, 1), sh_lmax=2,
-                  a_ls=(0, 1, 2), correlation=2, n_interactions=2,
-                  avg_num_neighbors=8.0, impl="fused")
+TINY_KW = dict(n_species=10, channels=4, hidden_ls=(0, 1), sh_lmax=2,
+               a_ls=(0, 1, 2), correlation=2, n_interactions=2,
+               avg_num_neighbors=8.0, impl="fused")
+tcfg_kw = dict(capacity=64, edge_factor=48, max_graphs=8, lr=2e-3, n_ranks=2,
+               compress_grads=compress, ckpt_dir=None)
+tcfg_kw.update(cfg.get("tcfg", {}))
 ds = SyntheticCFMDataset(48, seed=0, max_atoms=48)
 
-def run(engine, prefetch):
-    kw = dict(capacity=64, edge_factor=48, max_graphs=8, lr=2e-3, n_ranks=2,
-              compress_grads=compress, prefetch=prefetch, ckpt_dir=None)
-    tr = Trainer(TINY, TrainerConfig(engine=engine, **kw), ds, seed=0)
+def run(engine, prefetch, mace_overrides):
+    mcfg = MaceConfig(**{**TINY_KW, **(mace_overrides or {})})
+    tr = Trainer(mcfg, TrainerConfig(engine=engine, prefetch=prefetch,
+                                     **tcfg_kw), ds, seed=0)
     o = tr.train(n_epochs=1, max_steps=steps)
     return tr, [h["loss"] for h in o["history"]]
 
@@ -286,7 +289,7 @@ def ef_live(tr):
     return any(float(np.abs(np.asarray(e)).max()) > 0
                for e in jax.tree.leaves(tr.ef_state))
 
-oracle, ref_losses = run("sequential", 0)
+oracle, ref_losses = run("sequential", 0, cfg.get("oracle_mace"))
 out = {"devices": len(jax.devices()),
        "oracle": {"steps": len(ref_losses),
                   "losses_finite": bool(np.all(np.isfinite(ref_losses))),
@@ -295,9 +298,11 @@ out = {"devices": len(jax.devices()),
 # compressed path: a one-quantum round() flip near a quantization
 # boundary shifts a param by ~scale/R, so give it headroom
 rtol, atol = (1e-4, 2e-5) if compress else (2e-5, 1e-6)
+rtol, atol = cfg.get("rtol", rtol), cfg.get("atol", atol)
+loss_rtol = cfg.get("loss_rtol", 1e-5)
 for engine, depth in cfg["variants"]:
-    tr, losses = run(engine, depth)
-    np.testing.assert_allclose(losses, ref_losses, rtol=1e-5)
+    tr, losses = run(engine, depth, cfg.get("mace"))
+    np.testing.assert_allclose(losses, ref_losses, rtol=loss_rtol)
     for a, b in zip(jax.tree.leaves(oracle.params), jax.tree.leaves(tr.params)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=rtol, atol=atol)
@@ -307,21 +312,27 @@ for engine, depth in cfg["variants"]:
         "loads_per_rank": tel.load_matrix().sum(axis=0).tolist(),
         "host_steps": len(tel.host_collate),
         "overlap_s": tel.overlap_seconds(skip=1),
+        "block_s": tel.blocking_seconds(),
         "ef_live": bool(compress) and ef_live(tr),
     }
 print("RESULT " + json.dumps(out))
 """
 
 
-def run_equivalence_matrix(compress, variants=EQUIV_VARIANTS, steps=EQUIV_STEPS):
+def run_equivalence_matrix(compress, variants=EQUIV_VARIANTS, steps=EQUIV_STEPS,
+                           **cfg_extra):
     """Reusable harness: train the non-prefetched SequentialEngine oracle on
     a forced 2-device CPU mesh, then every (engine, prefetch-depth) variant,
     asserting identical loss curves and allclose final params inside the
-    subprocess.  Returns the telemetry/diagnostics report."""
+    subprocess.  ``cfg_extra`` may override the variant/oracle MaceConfig
+    (``mace`` / ``oracle_mace``), TrainerConfig fields (``tcfg``), and the
+    comparison tolerances (``rtol``/``atol``/``loss_rtol``) for cross-impl
+    matrices.  Returns the telemetry/diagnostics report."""
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
     env.pop("XLA_FLAGS", None)
-    cfg = {"compress": compress, "steps": steps, "variants": list(variants)}
+    cfg = {"compress": compress, "steps": steps, "variants": list(variants),
+           **cfg_extra}
     proc = subprocess.run(
         [sys.executable, "-c", SCRIPT, json.dumps(cfg)],
         capture_output=True, text=True, timeout=900, env=env,
@@ -366,3 +377,29 @@ def test_engine_prefetch_equivalence_two_devices(compress):
         # variants (their equality over steps is implied by param allclose)
         assert out["oracle"]["ef_live"]
         assert all(rec["ef_live"] for rec in out["variants"].values())
+
+
+@pytest.mark.slow
+def test_engine_matrix_pallas_interaction_matches_ref_oracle():
+    """Acceptance proof for the fused interaction path: the engine matrix
+    (sequential/shard_map x prefetch 0/1) trained with
+    ``interaction_impl="pallas"`` (interpret mode on CPU; collation emits
+    the pre-blocked edge arrays) is allclose to the ref-impl
+    non-prefetched SequentialEngine oracle.  Cross-impl tolerances: the
+    kernel reassociates float32 sums, so exact bitwise equality is not
+    expected — but 3 optimizer steps must stay within a few 1e-3."""
+    variants = [("sequential", 0), ("sequential", 1),
+                ("shard_map", 0), ("shard_map", 1)]
+    out = run_equivalence_matrix(
+        compress=False, variants=variants, steps=3,
+        mace={"interaction_impl": "pallas"},
+        # oracle differs ONLY in the interaction impl (symcon stays fused on
+        # both sides), isolating the kernel under test so the tolerance
+        # budget covers nothing but its own float32 reassociation
+        oracle_mace={"interaction_impl": "ref"},
+        tcfg={"edge_factor": 16},          # keep interpret-mode grids small
+        loss_rtol=2e-4, rtol=1e-3, atol=1e-5,
+    )
+    assert set(out["variants"]) == {f"{e}_p{d}" for e, d in variants}
+    # every pallas variant paid (and attributed) host blocking time
+    assert all(rec["block_s"] > 0.0 for rec in out["variants"].values())

@@ -1,0 +1,304 @@
+"""Interaction-op refactor tests: registry impl equivalence (ref / fused /
+pallas-interpret) under padded atoms, masked edges, and empty bins; the
+``block_edges`` layout invariants (hypothesis property + deterministic
+fallback); shape-stable blocking through collation/stacking; the fused
+path's no-[E,k,d_out]-materialization guard; table-cache memoisation; and a
+speed regression guard for the vectorized host blocking.
+"""
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from tests.hypothesis_support import given, settings, st
+
+from repro.core.channelwise_tp import TPSpec, build_tp_tables
+from repro.core.interaction import InteractionSpec
+from repro.core.irreps import lspec, sh_spec
+from repro.core.symmetric_contraction import SymConSpec, build_symcon_tables
+from repro.data.blocking import (
+    EdgeBlocking,
+    block_edges,
+    blocking_to_batch,
+    static_n_tiles,
+)
+from repro.data.collate import BinShape, collate_bin, collate_stacked
+from repro.data.molecules import SyntheticCFMDataset
+from repro.kernels import registry
+from repro.roofline.hlo import jaxpr_out_shapes
+
+SPEC = InteractionSpec(
+    TPSpec(sh_spec(2), lspec(0, 1), lspec(0, 1, 2)),
+    avg_num_neighbors=4.0,
+    block_n=8,
+)
+
+
+def _inputs(key, E, n_atoms, k, spec=SPEC, edge_keep=0.9):
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    Y = jax.random.normal(k1, (E, spec.tp.y_spec.dim), jnp.float32)
+    h = jax.random.normal(k2, (n_atoms, k, spec.tp.h_spec.dim), jnp.float32)
+    R = jax.random.normal(k3, (E, spec.tp.n_paths, k), jnp.float32)
+    senders = jax.random.randint(k4, (E,), 0, n_atoms)
+    receivers = jax.random.randint(k5, (E,), 0, n_atoms)
+    edge_mask = jax.random.bernoulli(k6, edge_keep, (E,))
+    return Y, h, R, senders, receivers, edge_mask
+
+
+def _blocking_arrays(receivers, edge_mask, n_atoms, spec=SPEC, block_e=16):
+    b = block_edges(
+        np.asarray(receivers), np.asarray(edge_mask), n_atoms,
+        block_n=spec.block_n, block_e=block_e,
+    )
+    return {
+        "perm": jnp.asarray(b.perm, jnp.int32),
+        "valid": jnp.asarray(b.valid),
+        "local": jnp.asarray(b.local_rcv),
+        "base": jnp.asarray(b.tile_base),
+    }
+
+
+# ---------------------------------------------------------------------------
+# registry + impl equivalence
+# ---------------------------------------------------------------------------
+
+
+def test_registry_lists_interaction_impls():
+    names = registry.available("interaction")
+    assert {"ref", "fused", "pallas"} <= set(names)
+    impl = registry.get_impl("interaction", "pallas")
+    assert impl.consumes_blocking and "cpu" in impl.interpret_only_on
+    assert impl.uses_pallas  # drives the engine's shard_map check_rep gate
+    fused = registry.get_impl("interaction", "fused")
+    assert not fused.consumes_blocking and not fused.uses_pallas
+    # alias: the paper's "TP + scatter" fusion name
+    assert registry.canonical_kind("tp_scatter") == "interaction"
+
+
+@pytest.mark.parametrize("edge_keep", [0.9, 0.0])  # 0.0 = empty bin
+def test_interaction_impls_agree_masked_and_empty(edge_keep):
+    """ref / fused / pallas(interpret; with and without blocking) agree on a
+    batch with padded atoms and masked edges — and all return exact zeros
+    for an empty bin (every edge masked)."""
+    E, n_atoms, k = 96, 21, 4  # 21 atoms: last tile of 8 is ragged/padded
+    args = _inputs(jax.random.PRNGKey(0), E, n_atoms, k, edge_keep=edge_keep)
+    ref = registry.resolve("interaction", "ref", SPEC)
+    fused = registry.resolve("interaction", "fused", SPEC)
+    pallas = registry.resolve("interaction", "pallas", SPEC)
+    blocking = _blocking_arrays(args[4], args[5], n_atoms)
+
+    want = np.asarray(ref(*args))
+    for got in (
+        fused(*args),
+        pallas(*args, blocking=None),           # capability fallback
+        pallas(*args, blocking=blocking),       # fused TP+scatter kernel
+    ):
+        np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5, atol=2e-5)
+    if edge_keep == 0.0:
+        np.testing.assert_array_equal(want, np.zeros_like(want))
+
+
+def test_interaction_grads_agree_through_pallas_custom_vjp():
+    """d/d(Y, h, R) of the blocked pallas op equals the ref op's grads (the
+    custom_vjp backward is the fused formulation's VJP)."""
+    E, n_atoms, k = 48, 13, 4
+    Y, h, R, senders, receivers, edge_mask = _inputs(
+        jax.random.PRNGKey(1), E, n_atoms, k
+    )
+    blocking = _blocking_arrays(receivers, edge_mask, n_atoms)
+    ref = registry.resolve("interaction", "ref", SPEC)
+    pallas = registry.resolve("interaction", "pallas", SPEC)
+
+    def loss(fn, **kw):
+        return lambda y, hh, r: jnp.sum(
+            fn(y, hh, r, senders, receivers, edge_mask, **kw) ** 2
+        )
+
+    g_ref = jax.grad(loss(ref), argnums=(0, 1, 2))(Y, h, R)
+    g_pal = jax.grad(loss(pallas, blocking=blocking), argnums=(0, 1, 2))(Y, h, R)
+    for a, b in zip(g_pal, g_ref):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4
+        )
+
+
+def test_fused_interaction_never_materializes_edge_messages():
+    """The acceptance guard: the fused impl's jaxpr holds no [E, k, d_out]
+    per-edge message tensor; the ref impl's must (that's the bottleneck)."""
+    E, n_atoms, k = 64, 16, 4
+    args = _inputs(jax.random.PRNGKey(2), E, n_atoms, k)
+    edge_msgs = (E, k, SPEC.tp.out_spec.dim)
+    assert edge_msgs in jaxpr_out_shapes(
+        registry.resolve("interaction", "ref", SPEC), *args
+    )
+    assert edge_msgs not in jaxpr_out_shapes(
+        registry.resolve("interaction", "fused", SPEC), *args
+    )
+
+
+def test_tp_only_registered_impl_falls_back_to_wrapped_aggregation():
+    """A third-party kernel registered only under ``channelwise_tp`` (the
+    registry's documented extension point) must stay usable model-wide:
+    ``resolve_interaction`` wraps it in the oracle aggregation."""
+    from repro.core.channelwise_tp import tp_ref
+    from repro.core.interaction import resolve_interaction
+
+    @registry.register("channelwise_tp", "tp_only_test_impl",
+                       platforms=("cpu",))
+    def _build(spec):
+        return lambda Y, h_send, R: tp_ref(Y, h_send, R, spec)
+
+    try:
+        fn = resolve_interaction("tp_only_test_impl", SPEC)
+        args = _inputs(jax.random.PRNGKey(3), 48, 13, 4)
+        want = registry.resolve("interaction", "ref", SPEC)(*args)
+        np.testing.assert_allclose(
+            np.asarray(fn(*args)), np.asarray(want), rtol=2e-5, atol=2e-5
+        )
+    finally:
+        registry.unregister("channelwise_tp", "tp_only_test_impl")
+    with pytest.raises(KeyError):
+        resolve_interaction("no_such_impl_anywhere", SPEC)
+
+
+# ---------------------------------------------------------------------------
+# block_edges layout invariants
+# ---------------------------------------------------------------------------
+
+
+def _check_blocking_invariants(b: EdgeBlocking, receivers, edge_mask, n_atoms):
+    receivers = np.asarray(receivers)
+    edge_mask = np.asarray(edge_mask).astype(bool)
+    # valid slots are a permutation of exactly the valid edge ids
+    got = np.sort(b.perm[b.valid])
+    want = np.sort(np.nonzero(edge_mask)[0])
+    np.testing.assert_array_equal(got, want)
+    assert len(set(got.tolist())) == len(got)
+    # local receiver indices reconstruct the global receiver via the tile base
+    tile_of_slot = np.repeat(np.arange(b.n_atom_tiles), b.epb)
+    base = b.tile_base[tile_of_slot]
+    assert np.all(b.local_rcv[b.valid] >= 0)
+    assert np.all(b.local_rcv[b.valid] < b.block_n)
+    np.testing.assert_array_equal(
+        base[b.valid] + b.local_rcv[b.valid], receivers[b.perm[b.valid]]
+    )
+    # padding slots are inert
+    assert np.all(b.perm[~b.valid] == 0) and np.all(b.local_rcv[~b.valid] == 0)
+    # shape is the static function of (E, n_atoms)
+    assert b.n_atom_tiles == static_n_tiles(
+        len(receivers), n_atoms, b.block_n, b.epb
+    )
+
+
+@given(data=st.data())
+@settings(max_examples=60, deadline=None)
+def test_block_edges_is_valid_permutation_property(data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**32 - 1)))
+    E = data.draw(st.integers(0, 200))
+    n_atoms = data.draw(st.integers(1, 64))
+    block_n = data.draw(st.sampled_from([4, 8, 32]))
+    block_e = data.draw(st.sampled_from([8, 16, 128]))
+    receivers = rng.integers(0, n_atoms, E)
+    edge_mask = rng.random(E) < data.draw(st.floats(0.0, 1.0))
+    b = block_edges(receivers, edge_mask, n_atoms,
+                    block_n=block_n, block_e=block_e)
+    _check_blocking_invariants(b, receivers, edge_mask, n_atoms)
+
+
+def test_block_edges_invariants_deterministic_cases():
+    """Hypothesis-free fallback: hubs, empty masks, ragged tails."""
+    cases = [
+        (np.zeros(64, np.int64), np.ones(64, bool), 5),          # one hub atom
+        (np.arange(40) % 7, np.zeros(40, bool), 7),              # empty bin
+        (np.full(10, 6), np.array([True] * 5 + [False] * 5), 7),  # tail atom
+    ]
+    for receivers, edge_mask, n_atoms in cases:
+        b = block_edges(receivers, edge_mask, n_atoms, block_n=4, block_e=8)
+        _check_blocking_invariants(b, receivers, edge_mask, n_atoms)
+    with pytest.raises(ValueError):
+        block_edges(np.zeros(64, np.int64), np.ones(64, bool), 5,
+                    block_n=4, block_e=8, n_tiles=2)
+    with pytest.raises(ValueError):  # receiver outside [0, n_atoms)
+        block_edges(np.array([9]), np.array([True]), 5)
+
+
+# ---------------------------------------------------------------------------
+# collation contract: shape stability + stacking
+# ---------------------------------------------------------------------------
+
+
+def test_collate_blocking_shape_stable_and_stackable():
+    ds = SyntheticCFMDataset(12, seed=0, max_atoms=24)
+    shape = BinShape.for_capacity(48, 16, 8, block_n=8, block_e=16)
+    bins = [[ds.get(0), ds.get(1)], [ds.get(2)], []]
+    cols = [collate_bin(m, shape, with_blocking=True) for m in bins]
+    T = shape.blocking_tiles
+    for c in cols:
+        assert c["blk_perm"].shape == (T * shape.block_e,)
+        assert c["blk_base"].shape == (T,)
+        b = EdgeBlocking(
+            c["blk_perm"], c["blk_valid"], c["blk_local"], c["blk_base"],
+            shape.block_n, shape.block_e,
+        )
+        _check_blocking_invariants(
+            b, c["receivers"], c["edge_mask"], shape.max_nodes
+        )
+    stacked = collate_stacked(bins, shape, with_blocking=True)
+    for key in ("blk_perm", "blk_valid", "blk_local", "blk_base"):
+        assert stacked[key].shape[0] == len(bins)
+        np.testing.assert_array_equal(stacked[key][1], cols[1][key])
+
+
+def test_blocking_to_batch_roundtrip_dtypes():
+    b = block_edges(np.array([0, 1, 1]), np.ones(3, bool), 4,
+                    block_n=4, block_e=8)
+    arrs = blocking_to_batch(b)
+    assert arrs["blk_perm"].dtype == np.int32
+    assert arrs["blk_valid"].dtype == bool
+    assert arrs["blk_local"].dtype == np.int32
+    assert arrs["blk_base"].dtype == np.int32
+
+
+# ---------------------------------------------------------------------------
+# table caching
+# ---------------------------------------------------------------------------
+
+
+def test_tp_and_symcon_tables_are_cached_per_spec():
+    tspec = TPSpec(sh_spec(2), lspec(0, 1), lspec(0, 1, 2))
+    assert build_tp_tables(tspec) is build_tp_tables(
+        TPSpec(sh_spec(2), lspec(0, 1), lspec(0, 1, 2))
+    )
+    sspec = SymConSpec(lspec(0, 1), lspec(0, 1), 2)
+    assert build_symcon_tables(sspec) is build_symcon_tables(
+        SymConSpec(lspec(0, 1), lspec(0, 1), 2)
+    )
+    # distinct specs stay distinct
+    assert build_tp_tables(tspec) is not build_tp_tables(
+        TPSpec(sh_spec(2), lspec(0), lspec(0, 1, 2))
+    )
+
+
+# ---------------------------------------------------------------------------
+# vectorized host blocking: speed regression guard
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_block_edges_speed_regression_guard():
+    """Blocking runs in the hot host path (once per bin per step): 200k
+    edges must block in well under a second (the pre-vectorization per-edge
+    Python loop took multiple seconds at this size)."""
+    rng = np.random.default_rng(0)
+    E, n_atoms = 200_000, 4096
+    receivers = rng.integers(0, n_atoms, E)
+    edge_mask = rng.random(E) < 0.95
+    block_edges(receivers[:100], edge_mask[:100], n_atoms)  # warm numpy
+    t0 = time.perf_counter()
+    b = block_edges(receivers, edge_mask, n_atoms)
+    dt = time.perf_counter() - t0
+    assert b.n_atom_tiles == static_n_tiles(E, n_atoms)
+    assert dt < 0.75, f"block_edges took {dt:.3f}s for {E} edges"

@@ -8,6 +8,7 @@ import numpy as np
 import pytest
 
 from repro.core.channelwise_tp import TPSpec, build_tp_tables
+from repro.core.interaction import InteractionSpec
 from repro.core.irreps import LSpec, lspec, sh_spec
 from repro.core.symmetric_contraction import (
     SymConSpec,
@@ -105,43 +106,63 @@ def test_tp_kernel_vs_oracle(h_ls, E, k):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
 
 
+def _interaction_inputs(key, E, n_atoms, k, spec: InteractionSpec):
+    k1, k2 = jax.random.split(key)
+    Y, _, R = _tp_inputs(k1, E, k, spec.tp)
+    h = jax.random.normal(k2, (n_atoms, k, spec.tp.h_spec.dim), jnp.float32)
+    s1, s2 = jax.random.split(k2)
+    senders = jax.random.randint(s1, (E,), 0, n_atoms)
+    receivers = jax.random.randint(s2, (E,), 0, n_atoms)
+    return Y, h, R, senders, receivers
+
+
 @pytest.mark.slow
 def test_fused_interaction_vs_oracle():
     """The full fused TP+scatter (sort + one-hot MXU matmul) against
     tp_ref + segment_sum."""
-    spec = TPSpec(sh_spec(3), lspec(0, 1), lspec(0, 1, 2, 3))
+    spec = InteractionSpec(
+        TPSpec(sh_spec(3), lspec(0, 1), lspec(0, 1, 2, 3)),
+        avg_num_neighbors=4.0, block_n=8,
+    )
     E, k, n_atoms = 200, 8, 37
     key = jax.random.PRNGKey(0)
-    Y, h, R = _tp_inputs(key, E, k, spec)
-    receivers = jax.random.randint(key, (E,), 0, n_atoms)
+    Y, h, R, senders, receivers = _interaction_inputs(key, E, n_atoms, k, spec)
     edge_mask = jax.random.bernoulli(key, 0.9, (E,))
 
-    want = interaction_reference(Y, h, R, receivers, edge_mask, n_atoms, spec)
+    want = interaction_reference(Y, h, R, senders, receivers, edge_mask, spec)
     blocking = block_edges(
         np.asarray(receivers), np.asarray(edge_mask), n_atoms,
         block_n=8, block_e=32,
     )
     got = interaction_pallas(
-        Y, h, R, blocking, spec, n_atoms=n_atoms, block_e=32, interpret=True
+        Y, h, R, senders, receivers, edge_mask, blocking, spec, interpret=True
     )
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
 
 
 def test_fused_interaction_empty_and_hub_receivers():
-    """Degenerate scatter patterns: atoms with no edges + one hub atom."""
-    spec = TPSpec(sh_spec(2), lspec(0), lspec(0, 1, 2))
+    """Degenerate scatter patterns: atoms with no edges + one hub atom whose
+    degree exceeds a tile's edge budget (spills into extra virtual tiles)."""
+    spec = InteractionSpec(
+        TPSpec(sh_spec(2), lspec(0), lspec(0, 1, 2)),
+        avg_num_neighbors=4.0, block_n=8,
+    )
     E, k, n_atoms = 64, 4, 16
     key = jax.random.PRNGKey(1)
-    Y, h, R = _tp_inputs(key, E, k, spec)
+    Y, h, R, senders, _ = _interaction_inputs(key, E, n_atoms, k, spec)
     receivers = jnp.concatenate(
         [jnp.full((48,), 3, jnp.int32), jnp.full((16,), 11, jnp.int32)]
     )
     edge_mask = jnp.ones((E,), bool)
-    want = interaction_reference(Y, h, R, receivers, edge_mask, n_atoms, spec)
+    want = interaction_reference(Y, h, R, senders, receivers, edge_mask, spec)
     blocking = block_edges(np.asarray(receivers), np.ones(E, bool), n_atoms,
                            block_n=8, block_e=16)
+    # the hub atom's 48 edges spill into exactly ceil(48/16)=3 virtual tiles
+    # sharing base 0 (padding tiles carry base n_atoms, so this cannot be
+    # satisfied vacuously)
+    assert (np.asarray(blocking.tile_base) == 0).sum() == 3
     got = interaction_pallas(
-        Y, h, R, blocking, spec, n_atoms=n_atoms, block_e=16, interpret=True
+        Y, h, R, senders, receivers, edge_mask, blocking, spec, interpret=True
     )
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
 

@@ -139,7 +139,7 @@ def test_single_batch_overfit():
     tcfg = TrainerConfig(capacity=128, edge_factor=48, max_graphs=16, lr=5e-3)
     tr = Trainer(TINY, tcfg, ds, seed=0)
     bin_items = tr.sampler.bins_for_epoch(0)[0]
-    batch = tr.engine.collate(
+    batch, _ = tr.engine.collate(
         [[ds.get(i) for i in bin_items]], tr.bin_shape
     )
     losses = []
