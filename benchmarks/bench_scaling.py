@@ -20,6 +20,14 @@ paper's device-never-waits epoch model assumes is ~100% at scale.
 
     PYTHONPATH=src python -m benchmarks.bench_scaling \
         --measure-steps 8 --engine shard_map --devices 2 --prefetch 2
+
+``--rescale-at STEP:R`` additionally fires the elastic mid-run rescale
+during the measured run and reports each event's Algorithm-1 re-pack
+seconds and mesh/engine rebuild seconds (``fig7_rescale`` rows) — the cost
+of reacting to a mid-run device-count change:
+
+    PYTHONPATH=src python -m benchmarks.bench_scaling \
+        --measure-steps 8 --rescale-at 4:3
 """
 from __future__ import annotations
 
@@ -49,18 +57,31 @@ def calibrate_with_engine(
     capacity: int = 128,
     prefetch: int = 1,
     interaction_impl: str = "auto",
+    rescale_at: str = "",
 ):
     """Train ``steps`` measured steps (+1 jit-warmup step that is discarded)
     through the execution engine and return (c_token, rows) — the calibrated
-    per-atom cost plus CSV rows with the measured straggler ratio."""
+    per-atom cost plus CSV rows with the measured straggler ratio.
+
+    ``rescale_at`` ("STEP:R[,STEP:R...]") runs the measured steps through
+    the elastic trainer and appends one ``fig7_rescale`` row per event with
+    the measured Algorithm-1 re-pack seconds and the mesh/engine rebuild
+    seconds — the paper's mid-run device-count change, timed."""
     import jax  # deferred: --devices must set XLA_FLAGS first
 
     from repro.core.mace import MaceConfig
-    from repro.train.train_loop import Trainer, TrainerConfig
+    from repro.train.train_loop import (
+        ElasticTrainer,
+        Trainer,
+        TrainerConfig,
+        parse_rescale_schedule,
+    )
 
-    if engine == "shard_map" and len(jax.devices()) < n_ranks:
+    schedule = parse_rescale_schedule(rescale_at)
+    max_rank = max([n_ranks, *schedule.values()])
+    if engine == "shard_map" and len(jax.devices()) < max_rank:
         return None, [
-            f"fig7_calibration,skipped=need_{n_ranks}_devices_have_{len(jax.devices())}"
+            f"fig7_calibration,skipped=need_{max_rank}_devices_have_{len(jax.devices())}"
         ]
 
     mcfg = MaceConfig(
@@ -73,20 +94,26 @@ def calibrate_with_engine(
         capacity=capacity, edge_factor=48, max_graphs=16, n_ranks=n_ranks,
         engine=engine, prefetch=prefetch, ckpt_dir=None,
     )
-    tr = Trainer(mcfg, tcfg, ds, seed=0)
+    if schedule:
+        tr = ElasticTrainer(mcfg, tcfg, ds, seed=0, rescale_schedule=schedule)
+    else:
+        tr = Trainer(mcfg, tcfg, ds, seed=0)
     tr.train(n_epochs=1_000_000, max_steps=steps + 1)  # step 0 pays the jit
     tel = tr.engine.telemetry
+    # post-rescale the telemetry belongs to the current engine: its first
+    # step re-paid the jit, so skip=1 stays the right calibration guard
     c_tok = tel.c_token(skip=1)
+    n_ranks_now = tr.engine.n_ranks
 
-    bins = tr.sampler.bins_for_epoch(0)
+    bins = tr.sampler.bins_for_epoch(tr.sampler_state.epoch)
     packed = Bins([list(b) for b in bins], ds.sizes, capacity)
-    proxy = balance_metrics(packed, n_ranks)
+    proxy = balance_metrics(packed, n_ranks_now)
     measured = balance_metrics(
-        packed, n_ranks, measured_work=tel.straggler_matrix(skip=1)
+        packed, n_ranks_now, measured_work=tel.straggler_matrix(skip=1)
     )
     host = tel.host_matrix(skip=1)
     rows = [
-        f"fig7_calibration,engine={engine},ranks={n_ranks},steps={tel.n_steps - 1},"
+        f"fig7_calibration,engine={engine},ranks={n_ranks_now},steps={tel.n_steps - 1},"
         f"interaction={mcfg.interaction_impl_name},"
         f"c_token_s={c_tok:.3e},straggler_proxy={proxy.straggler_ratio:.3f},"
         f"straggler_measured={measured.straggler_ratio:.3f},"
@@ -95,7 +122,17 @@ def calibrate_with_engine(
         f"host_overlap_s={tel.overlap_seconds(skip=1):.3e},"
         f"overlap_frac={tel.overlap_fraction(skip=1):.3f}"
     ]
-    return c_tok, rows
+    for ev in tr.rescale_events:
+        rows.append(
+            f"fig7_rescale,step={ev['step']},from_ranks={ev['from_ranks']},"
+            f"to_ranks={ev['to_ranks']},repack_s={ev['repack_s']:.3e},"
+            f"engine_rebuild_s={ev['rebuild_s']:.3e},"
+            f"discarded_prefetch={ev['discarded_batches']}"
+        )
+    # a rescale near the end of the window can leave no calibrated step
+    # (c_token 0.0): keep the rows but hand the epoch model no c_token so
+    # it falls back to its default instead of dividing by zero
+    return (c_tok if c_tok > 0.0 else None), rows
 
 
 def main(n: int = 260_000, c_token: float = 1.0, extra_rows=None):
@@ -161,6 +198,11 @@ if __name__ == "__main__":
     ap.add_argument("--interaction-impl", default="auto",
                     help="interaction impl for the measured run (pallas "
                          "adds host edge blocking, reported as host_block_s)")
+    ap.add_argument("--rescale-at", default="",
+                    metavar="STEP:R[,STEP:R...]",
+                    help="elastic rescale event(s) during the measured run; "
+                         "each reports repack_s + engine_rebuild_s in a "
+                         "fig7_rescale row")
     args = ap.parse_args()
 
     if args.devices:
@@ -174,6 +216,7 @@ if __name__ == "__main__":
         c_tok, extra = calibrate_with_engine(
             engine=args.engine, n_ranks=args.ranks, steps=args.measure_steps,
             prefetch=args.prefetch, interaction_impl=args.interaction_impl,
+            rescale_at=args.rescale_at,
         )
         if c_tok is not None:
             c_token = c_tok

@@ -30,6 +30,16 @@ telemetry line attributes the host blocking seconds):
     PYTHONPATH=src python examples/train_mace_cfm.py \
         --steps 20 --interaction-impl pallas
 
+Elastic rescale fault drill (``--rescale-at STEP:R``, repeatable): at the
+given step boundary the run snapshots, drains the prefetch pipeline,
+re-packs the epoch remainder for R ranks, and rebuilds mesh + engine — the
+mid-run scale-up/down the paper's preemptible-cluster setting needs.
+``--elastic`` alone lets a restart resume a checkpoint written at a
+different rank count (params/opt/EMA exact, error feedback re-initialised):
+
+    PYTHONPATH=src python examples/train_mace_cfm.py \
+        --steps 40 --n-ranks 2 --rescale-at 20:4
+
 Flags scale from smoke (defaults) to the paper's config
 (--channels 128 --capacity 3072 --correlation 2 on real hardware).
 Compare against the fixed-count baseline with --sampler fixed.
@@ -68,6 +78,14 @@ def main():
     ap.add_argument("--prefetch", type=int, default=1,
                     help="async collate lookahead depth (0 = inline, "
                          "1 = double buffering)")
+    ap.add_argument("--rescale-at", action="append", default=[],
+                    metavar="STEP:R",
+                    help="elastic fault drill: after STEP completes, drain, "
+                         "snapshot, re-pack bins and rebuild the engine at R "
+                         "ranks (repeatable / comma-separated)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="allow resuming a checkpoint written at a different "
+                         "rank count (implied by --rescale-at)")
     args = ap.parse_args()
 
     # XLA device count must be pinned before the first jax import.
@@ -80,7 +98,12 @@ def main():
     from repro.core.binpack import Bins, balance_metrics
     from repro.core.mace import MaceConfig, param_count
     from repro.data.molecules import SyntheticCFMDataset
-    from repro.train.train_loop import Trainer, TrainerConfig
+    from repro.train.train_loop import (
+        ElasticTrainer,
+        Trainer,
+        TrainerConfig,
+        parse_rescale_schedule,
+    )
 
     n_ranks = args.n_ranks or (args.devices if args.engine == "shard_map" else 1)
     cfg = MaceConfig(
@@ -90,13 +113,19 @@ def main():
         interaction_impl=args.interaction_impl,
     )
     ds = SyntheticCFMDataset(args.n_graphs, seed=0, max_atoms=args.max_atoms)
+    schedule = parse_rescale_schedule(args.rescale_at)
     tcfg = TrainerConfig(
         capacity=args.capacity, edge_factor=48, max_graphs=max(16, args.capacity // 8),
         n_ranks=max(1, n_ranks), engine=args.engine,
         lr=5e-3, ema_decay=0.99, ckpt_dir=args.ckpt_dir, ckpt_every=50,
         compress_grads=args.compress_grads, prefetch=args.prefetch,
+        elastic=args.elastic or bool(schedule),
     )
-    tr = Trainer(cfg, tcfg, ds, sampler=args.sampler, seed=0)
+    if schedule:
+        tr = ElasticTrainer(cfg, tcfg, ds, sampler=args.sampler, seed=0,
+                            rescale_schedule=schedule)
+    else:
+        tr = Trainer(cfg, tcfg, ds, sampler=args.sampler, seed=0)
     if tr.maybe_restore():
         print(f"resumed from step {tr.global_step}")
     print(
@@ -121,17 +150,21 @@ def main():
     tel = tr.engine.telemetry
     if tel.n_steps:
         skip = 1 if tel.n_steps > 1 else 0   # drop the jit-compiling step
+        # after a rescale (or a cross-rank resume), telemetry + packing
+        # belong to the CURRENT engine/epoch — epoch 0 may be a (possibly
+        # empty) remainder packing, so read everything from tr's live state
+        n_ranks_now = tr.engine.n_ranks
         packed = Bins(
-            [list(b) for b in tr.sampler.bins_for_epoch(0)], ds.sizes,
-            args.capacity,
+            [list(b) for b in tr.sampler.bins_for_epoch(tr.sampler_state.epoch)],
+            ds.sizes, args.capacity,
         )
         measured = balance_metrics(
-            packed, tcfg.n_ranks, measured_work=tel.straggler_matrix(skip)
+            packed, n_ranks_now, measured_work=tel.straggler_matrix(skip)
         )
         print(
             f"telemetry: c_token={tel.c_token(skip):.3e}s/atom "
             f"straggler_measured={measured.straggler_ratio:.3f} "
-            f"(proxy={balance_metrics(packed, tcfg.n_ranks).straggler_ratio:.3f})"
+            f"(proxy={balance_metrics(packed, n_ranks_now).straggler_ratio:.3f})"
         )
         print(
             f"prefetch: depth={tcfg.prefetch} "
@@ -139,7 +172,14 @@ def main():
             f"({100 * tel.overlap_fraction(skip):.0f}% of host collate hidden) "
             f"edge_blocking={tel.blocking_seconds(skip):.3f}s"
         )
-    print("checkpoint at", tcfg.ckpt_dir)
+    for ev in tr.rescale_events:
+        print(
+            f"rescale @step {ev['step']}: R {ev['from_ranks']} -> "
+            f"{ev['to_ranks']} repack={ev['repack_s']:.3f}s "
+            f"engine_rebuild={ev['rebuild_s']:.3f}s "
+            f"discarded_prefetch={ev['discarded_batches']}"
+        )
+    print("checkpoint at", tr.tcfg.ckpt_dir)
 
 
 if __name__ == "__main__":

@@ -280,7 +280,9 @@ def balance_metrics(
     loads = b.loads()
     nonempty = loads[loads > 0] if (loads > 0).any() else loads
     cap = max(b.capacity, 1)
-    pad = float((cap - nonempty).clip(min=0).sum()) / (len(nonempty) * cap)
+    # a packing can legitimately be empty (e.g. the remainder of an epoch
+    # rescaled away at its last step): degrade to neutral metrics
+    pad = float((cap - nonempty).clip(min=0).sum()) / max(len(nonempty) * cap, 1)
 
     if measured_work is not None:
         work = np.asarray(measured_work, dtype=np.float64)

@@ -21,6 +21,14 @@ is that overlap as a first-class subsystem:
   poll-with-timeout loop that re-checks the stop flag, so early exit from a
   training loop (max_steps, checkpoint-triggered abort, exceptions) can
   never deadlock or leak the thread.
+* **Drain-and-rebuild (elastic rescale)** — a mid-run rescale changes the
+  stacked batch layout (the ``[R, ...]`` leading dim), so in-flight batches
+  collated at the old rank count are unusable.  ``close()`` *discards* them
+  (the count lands in :attr:`discarded`) rather than handing them over;
+  correctness is unaffected because the sampler cursor only advances for
+  *consumed* steps — the rescaled sampler re-derives exactly the un-consumed
+  remainder and a fresh pipeline re-collates it at the new rank count
+  (``train_loop.Trainer.rescale`` reports the discard count per event).
 * **Exception propagation** — a producer-side error (bad molecule, collate
   overflow, ...) is captured and re-raised in the *consumer* at the step
   where it would have surfaced in the inline loop.
@@ -135,6 +143,9 @@ class PrefetchPipeline:
         self._fetch = fetch
         self._items: Iterator[Any] = iter(items)
         self._index = 0
+        #: finished batches thrown away by close() — in-flight work a
+        #: drain-and-rebuild (elastic rescale, early exit) chose not to use
+        self.discarded = 0
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self._queue: Optional["queue.Queue"] = None
@@ -202,7 +213,9 @@ class PrefetchPipeline:
     def close(self) -> None:
         """Stop the producer and join it.  Idempotent; never deadlocks —
         the producer's put loop re-checks the stop flag, and the queue is
-        drained here so a blocked put always unblocks."""
+        drained here so a blocked put always unblocks.  Finished batches
+        still in flight are discarded (counted in :attr:`discarded`) — the
+        drain half of the rescale path's drain-and-rebuild."""
         self._stop.set()
         if self._thread is None:
             return
@@ -210,7 +223,8 @@ class PrefetchPipeline:
             if self._queue is not None:
                 try:
                     while True:
-                        self._queue.get_nowait()
+                        if isinstance(self._queue.get_nowait(), PrefetchItem):
+                            self.discarded += 1
                 except queue.Empty:
                     pass
             self._thread.join(timeout=_PUT_POLL_S)

@@ -16,16 +16,34 @@ Beyond-paper additions:
   ``data.prefetch.PrefetchPipeline`` producer thread while the live
   ``SamplerState`` advances;
 * elastic rescale: ``with_ranks`` re-packs for a new device count (the bins
-  are independent, so scaling up/down is a pure host-side operation).
+  are independent, so scaling up/down is a pure host-side operation), and
+  ``rescale`` performs the *mid-epoch* cursor remap.
+
+Rescale cursor-remap semantics
+------------------------------
+``SamplerState.cursor`` counts steps *at the sampler's own rank count*, so a
+cursor measured at ``R_old`` is meaningless under an ``R_new`` packing.
+``sampler.rescale(R_new, state)`` defines the remap exactly: the first
+``cursor * R_old`` bins of the current epoch packing are the consumed
+prefix; the remaining graph indices are re-packed with Algorithm 1 at
+``R_new`` (an epoch-scoped *remainder universe*), and the returned state
+restarts at ``cursor=0`` inside that remainder packing.  The multiset
+invariant — consumed prefix + remainder stream == every index exactly once —
+is what "a rescale neither drops nor duplicates a graph" means, and it
+composes: rescaling a remainder packing intersects universes, so any chain
+``R0 -> R1 -> ... -> Rk`` within one epoch still covers the dataset exactly
+once (property-tested in tests/test_rescale.py).  The remainder universe
+applies only to the epoch it was created in; from the next epoch on the
+sampler packs the full dataset at its new rank count.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, List, Optional, Sequence
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.binpack import Bins, create_balanced_batches, fixed_count_batches
+from repro.core.binpack import create_balanced_batches, fixed_count_batches
 
 
 @dataclasses.dataclass
@@ -41,7 +59,69 @@ class SamplerState:
         return SamplerState(int(d["epoch"]), int(d["cursor"]))
 
 
-class BalancedBatchSampler:
+class _ElasticRescaleMixin:
+    """Mid-epoch elastic rescale shared by the samplers.
+
+    ``_resume`` — ``None`` for a full-dataset packing, or
+    ``(epoch, remaining_indices)``: this sampler's packing for ``epoch``
+    covers exactly ``remaining_indices`` (the graphs a pre-rescale sampler
+    had not yet consumed).  Any other epoch packs the full dataset.
+    """
+
+    _resume: Optional[Tuple[int, Tuple[int, ...]]] = None
+
+    def _epoch_universe(self, epoch: int) -> Optional[np.ndarray]:
+        """Global indices this epoch's packing draws from (None = all)."""
+        if self._resume is not None and self._resume[0] == epoch:
+            return np.asarray(self._resume[1], np.int64)
+        return None
+
+    def _universe_bins(self, epoch: int, pack) -> List[List[int]]:
+        """Pack this epoch's universe and return bins of *global* indices.
+
+        ``pack(sizes) -> Bins`` runs the sampler's packing algorithm; when
+        the epoch is a rescale remainder, it packs the remaining sizes and
+        the local bin entries are mapped back through the universe."""
+        sub = self._epoch_universe(epoch)
+        if sub is None:
+            return [list(b) for b in pack(self.sizes).bins]
+        return [[int(sub[i]) for i in b] for b in pack(self.sizes[sub]).bins]
+
+    def consumed_indices(self, state: SamplerState) -> List[int]:
+        """Graph indices consumed by the first ``state.cursor`` steps of
+        ``state.epoch`` — the prefix a rescale treats as done."""
+        bins = self.bins_for_epoch(state.epoch)
+        prefix = bins[: state.cursor * self.n_ranks]
+        return sorted(i for b in prefix for i in b)
+
+    def rescale(
+        self, n_ranks: int, state: SamplerState
+    ) -> Tuple["_ElasticRescaleMixin", SamplerState]:
+        """Mid-epoch elastic rescale: cursor remap by remainder re-packing.
+
+        Returns ``(sampler, state)`` where the new sampler's packing for
+        ``state.epoch`` covers exactly the graphs this sampler had *not*
+        consumed after ``state.cursor`` steps, re-packed at ``n_ranks``, and
+        the new state restarts at ``cursor=0`` inside it.  Consumed prefix +
+        new stream == the epoch's multiset, exactly once (see module
+        docstring); later epochs pack the full dataset at ``n_ranks``.
+        """
+        new = self.with_ranks(n_ranks)
+        if state.cursor <= 0:
+            # nothing of *this* packing consumed; inherit its universe
+            # (it may itself be a remainder from an earlier rescale)
+            new._resume = self._resume
+            return new, SamplerState(state.epoch, 0)
+        consumed = set(self.consumed_indices(state))
+        universe = self._epoch_universe(state.epoch)
+        if universe is None:
+            universe = np.arange(len(self.sizes), dtype=np.int64)
+        remaining = tuple(int(i) for i in universe if int(i) not in consumed)
+        new._resume = (state.epoch, remaining)
+        return new, SamplerState(state.epoch, 0)
+
+
+class BalancedBatchSampler(_ElasticRescaleMixin):
     def __init__(
         self,
         sizes: Sequence[int],
@@ -59,7 +139,8 @@ class BalancedBatchSampler:
         self._cache: Optional[List[List[int]]] = None
 
     def with_ranks(self, n_ranks: int) -> "BalancedBatchSampler":
-        """Elastic rescale: same data, new device count."""
+        """Elastic rescale at an epoch boundary: same data, new device
+        count, full-dataset packing (mid-epoch, use :meth:`rescale`)."""
         return BalancedBatchSampler(
             self.sizes, self.capacity, n_ranks, self.seed, self.shuffle_bins
         )
@@ -67,10 +148,10 @@ class BalancedBatchSampler:
     def bins_for_epoch(self, epoch: int) -> List[List[int]]:
         if self._cache_epoch == epoch and self._cache is not None:
             return self._cache
-        packed: Bins = create_balanced_batches(
-            self.sizes, self.capacity, self.n_ranks
+        bins = self._universe_bins(
+            epoch,
+            lambda s: create_balanced_batches(s, self.capacity, self.n_ranks),
         )
-        bins = [list(b) for b in packed.bins]
         if self.shuffle_bins:
             rng = np.random.default_rng((self.seed, epoch))
             # permute bins in rank-sized groups so each step keeps one bin per
@@ -124,7 +205,7 @@ def _step_slices(
     ]
 
 
-class FixedCountSampler:
+class FixedCountSampler(_ElasticRescaleMixin):
     """PyG-style baseline: fixed number of graphs per minibatch."""
 
     def __init__(
@@ -135,15 +216,20 @@ class FixedCountSampler:
         self.n_ranks = n_ranks
         self.seed = seed
 
-    def bins_for_epoch(self, epoch: int) -> List[List[int]]:
-        packed = fixed_count_batches(
-            self.sizes,
-            self.graphs_per_batch,
-            self.n_ranks,
-            shuffle=True,
-            seed=hash((self.seed, epoch)) % (2**31),
+    def with_ranks(self, n_ranks: int) -> "FixedCountSampler":
+        """Elastic rescale at an epoch boundary (mid-epoch: `rescale`)."""
+        return FixedCountSampler(
+            self.sizes, self.graphs_per_batch, n_ranks, self.seed
         )
-        return [list(b) for b in packed.bins]
+
+    def bins_for_epoch(self, epoch: int) -> List[List[int]]:
+        return self._universe_bins(
+            epoch,
+            lambda s: fixed_count_batches(
+                s, self.graphs_per_batch, self.n_ranks,
+                shuffle=True, seed=hash((self.seed, epoch)) % (2**31),
+            ),
+        )
 
     def steps_per_epoch(self, epoch: int = 0) -> int:
         return len(self.bins_for_epoch(epoch)) // self.n_ranks

@@ -12,6 +12,14 @@ Design for 1000+ nodes (DESIGN.md §5):
   multi-host one;
 * retention: keep the newest ``keep`` checkpoints (old ones garbage-collected
   only after a successful commit).
+
+Elastic rescale portability: the trainer stores ``n_ranks`` (and the
+sampler's rescale lineage) in ``meta``; ``read_meta`` exposes it *without*
+loading arrays, so a restore at a different rank count can pick the right
+template first — rank-shaped state (the ``[R, ...]`` error-feedback
+residuals) is excluded from the template and re-initialised at the new rank
+count, while params/opt/EMA restore exactly (the documented contract,
+asserted in tests/test_rescale.py).
 """
 from __future__ import annotations
 
@@ -117,6 +125,20 @@ def _committed_steps(directory: str):
 def latest_step(directory: str) -> Optional[int]:
     steps = _committed_steps(directory)
     return max(steps) if steps else None
+
+
+def read_meta(
+    directory: str, *, step: Optional[int] = None
+) -> Tuple[int, Dict[str, Any]]:
+    """Read a committed checkpoint's ``meta.json`` without touching the
+    array shards.  Lets an elastic restore inspect the writer's rank count
+    (``meta["n_ranks"]``) before deciding which leaves to restore."""
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no committed checkpoint in {directory}")
+    path = os.path.join(directory, f"step_{step:010d}")
+    with open(os.path.join(path, "meta.json")) as f:
+        return step, json.load(f)
 
 
 def restore_checkpoint(

@@ -11,6 +11,13 @@ optimizer update is therefore factored into an *engine* with one contract:
     engine.init_ef(params)                   -> error-feedback residuals
     engine.step(params, opt_state, ef, batch, i)
                                     -> (params, opt_state, ef, metrics)
+    engine.close()                           -> teardown (mesh + jit caches)
+
+Engines are context managers and must be ``close()``-able mid-run: the
+elastic rescale path (``train_loop.Trainer.rescale``) tears the engine down
+at a step boundary and rebuilds one at a new rank count over a fresh mesh —
+params/opt state carry over, error-feedback residuals are re-initialised at
+the new R by ``init_ef`` (rank-local state cannot survive a change of R).
 
 When the model's selected ``interaction`` impl consumes pre-blocked edges
 (``kernels.registry`` capability ``consumes_blocking``; e.g. the fused
@@ -133,6 +140,11 @@ class RankTelemetry:
     # seconds of ``collate_s`` spent building the fused-interaction edge
     # blocking (a subset of host_collate; 0.0 when blocking is off)
     host_block: List[float] = dataclasses.field(default_factory=list)
+    # elastic rescale events the trainer folded into this engine's run:
+    # per event, host seconds re-packing bins (Algorithm 1 on the epoch
+    # remainder) and seconds tearing down + rebuilding mesh/engine/EF state
+    rescale_repack: List[float] = dataclasses.field(default_factory=list)
+    rescale_rebuild: List[float] = dataclasses.field(default_factory=list)
 
     def record(self, times: Sequence[float], loads: Sequence[float]) -> None:
         assert len(times) == self.n_ranks and len(loads) == self.n_ranks
@@ -149,6 +161,19 @@ class RankTelemetry:
         self.host_collate.append(float(collate_s))
         self.host_wait.append(float(wait_s))
         self.host_block.append(float(block_s))
+
+    def record_rescale(self, repack_s: float, rebuild_s: float) -> None:
+        """One elastic rescale event: bin re-pack seconds + engine/mesh
+        rebuild seconds (``bench_scaling --measure-steps --rescale-at``
+        reports them as ``repack_s`` / ``engine_rebuild_s``)."""
+        self.rescale_repack.append(float(repack_s))
+        self.rescale_rebuild.append(float(rebuild_s))
+
+    def rescale_seconds(self) -> tuple:
+        """(total repack seconds, total engine-rebuild seconds)."""
+        return float(np.sum(self.rescale_repack)), float(
+            np.sum(self.rescale_rebuild)
+        )
 
     @property
     def n_steps(self) -> int:
@@ -350,7 +375,34 @@ class SequentialEngine:
         self._finalize = finalize
 
     def init_ef(self, params):
+        """Fresh error-feedback residuals at *this engine's* rank count.
+
+        Elastic-rescale contract: EF residuals are rank-local state with a
+        ``[R, ...]`` leading dim — they cannot survive a change of R, so a
+        rescale (or a cross-R checkpoint restore) re-initialises them to
+        zeros here and the compressed path restarts its residual
+        accumulation (tests/test_rescale.py asserts this contract)."""
         return _init_stacked_ef(params, self.n_ranks, self.compress)
+
+    def close(self) -> None:
+        """Teardown: drop the jitted step functions (clearing their
+        compilation caches) so a successor engine at a different rank count
+        can be built in the same process without leaked state.  Idempotent;
+        ``step`` raises afterwards.  Engines are context managers."""
+        for fn in (self._grad_fn, self._finalize):
+            if fn is not None and hasattr(fn, "clear_cache"):
+                fn.clear_cache()
+        self._grad_fn = self._finalize = None
+
+    @property
+    def closed(self) -> bool:
+        return self._grad_fn is None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc_info):
+        self.close()
 
     def collate(
         self, mols_per_rank: Sequence[Sequence[Any]], shape: BinShape
@@ -365,6 +417,8 @@ class SequentialEngine:
         return batches, stats
 
     def step(self, params, opt_state, ef_state, batches: List[Batch], step_idx):
+        if self.closed:
+            raise RuntimeError("engine is closed (rescaled away?)")
         grads_l, metrics_l, times, loads = [], [], [], []
         for b in batches:
             t0 = time.perf_counter()
@@ -450,7 +504,31 @@ class ShardMapEngine:
         )
 
     def init_ef(self, params):
+        """Fresh ``[R, ...]`` error-feedback residuals for this engine's
+        rank count (see SequentialEngine.init_ef for the rescale contract)."""
         return _init_stacked_ef(params, self.n_ranks, self.compress)
+
+    def close(self) -> None:
+        """Teardown: clear the jitted SPMD step's compilation cache and drop
+        the mesh reference.  The engine used to assume its mesh outlives it;
+        explicit close makes serial engines over *different* device counts
+        safe in one process (elastic rescale rebuilds through here —
+        tests/test_rescale.py constructs R=4 then R=2 engines serially).
+        Idempotent; ``step`` raises afterwards."""
+        if self._step_fn is not None and hasattr(self._step_fn, "clear_cache"):
+            self._step_fn.clear_cache()
+        self._step_fn = None
+        self.mesh = None
+
+    @property
+    def closed(self) -> bool:
+        return self._step_fn is None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc_info):
+        self.close()
 
     def collate(
         self, mols_per_rank: Sequence[Sequence[Any]], shape: BinShape
@@ -467,6 +545,8 @@ class ShardMapEngine:
         return {k: jnp.asarray(v) for k, v in arrs.items()}, stats
 
     def step(self, params, opt_state, ef_state, batch: Batch, step_idx):
+        if self.closed:
+            raise RuntimeError("engine is closed (rescaled away?)")
         t0 = time.perf_counter()
         params, opt_state, ef_state, metrics, loads = self._step_fn(
             params, opt_state, ef_state, batch, step_idx

@@ -12,13 +12,42 @@ restored).  ``simulate_failure_at`` lets tests kill the loop mid-epoch and
 prove restart equivalence.  Per-rank step-time/load telemetry plus per-step
 host collate/wait times are exposed via ``Trainer.engine.telemetry`` for the
 straggler model and the host/device overlap report.
+
+Elastic mid-run rescale
+-----------------------
+MACE's data parallelism is graph-level (one Algorithm-1 bin per rank, never
+a partitioned graph), so changing the device count mid-run is a pure
+host-side re-pack plus an engine rebuild — no model state is sharded by
+rank except the compressed all-reduce's error-feedback residuals.
+``Trainer.rescale(n_ranks)`` is that operation at a step boundary:
+
+1. snapshot ``(params, opt_state, ema, ef, SamplerState)`` through the
+   atomic checkpoint (a crash mid-rescale restores the pre-rescale run);
+2. remap the sampler via ``sampler.rescale`` — the consumed bin prefix at
+   the old rank count is excluded and the epoch *remainder* re-packed at
+   the new one, so no graph is dropped or duplicated (the cursor-remap
+   semantics documented in ``data.sampler``);
+3. ``engine.close()`` then ``make_engine`` at the new rank count: fresh
+   mesh, same params/opt/EMA, error-feedback residuals re-initialised to
+   zeros at the new ``[R, ...]`` leading dim (``engine.init_ef`` contract);
+4. the epoch loop re-enters a fresh prefetch pipeline (in-flight batches
+   collated at the old rank count were drained and discarded).
+
+``ElasticTrainer`` drives this from a ``{global_step: new_R}`` schedule
+(the ``--rescale-at STEP:R`` fault drill), and checkpoints are *portable
+across rank counts*: meta records ``n_ranks`` plus the epoch's rescale
+lineage, so ``maybe_restore`` with ``TrainerConfig.elastic`` replays the
+(deterministic) remap chain and continues a checkpoint written at R=4 on an
+R=1 or R=2 trainer with params/opt/EMA restored exactly and EF re-init at
+the new rank count.  tests/test_rescale.py proves rescale-equivalence
+against an uninterrupted oracle and fault-injected restart at a different R.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
 import time
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +57,7 @@ from repro.data.collate import BinShape
 from repro.data.molecules import SyntheticCFMDataset
 from repro.data.prefetch import PrefetchPipeline
 from repro.data.sampler import BalancedBatchSampler, FixedCountSampler, SamplerState
-from .checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from .checkpoint import latest_step, read_meta, restore_checkpoint, save_checkpoint
 from .engine import make_engine
 from .optimizer import EMA, adamw, chain, clip_by_global_norm
 
@@ -57,6 +86,10 @@ class TrainerConfig:
     block_n: int = 32
     block_e: int = 128
     fixed_graphs_per_batch: int = 8   # baseline sampler's PyG-style count
+    # elastic wiring: allow restoring a checkpoint written at a different
+    # rank count (EF re-init + sampler lineage replay); ElasticTrainer and
+    # the --rescale-at fault drill force this on
+    elastic: bool = False
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 50
     log_every: int = 10
@@ -122,6 +155,13 @@ class Trainer:
         # per-rank error-feedback residuals for the compressed all-reduce
         # (empty when compress_grads is off); checkpointed with the run.
         self.ef_state = self.engine.init_ef(self.params)
+        # elastic rescale state: {global_step: new_R} fired at step
+        # boundaries, this epoch's rescale lineage (how the current packing
+        # derives from the full one — checkpointed for cross-R restore),
+        # and the per-event timing records the benchmarks report.
+        self.rescale_schedule: Dict[int, int] = {}
+        self._lineage: List[Dict[str, int]] = []
+        self.rescale_events: List[Dict[str, Any]] = []
 
     # -------------------------- fault tolerance ---------------------------
 
@@ -140,21 +180,118 @@ class Trainer:
             self.tcfg.ckpt_dir,
             self.global_step,
             self._state(),
-            meta={"sampler": self.sampler_state.to_dict()},
+            meta={
+                "sampler": self.sampler_state.to_dict(),
+                "n_ranks": self.engine.n_ranks,
+                "lineage": [dict(h) for h in self._lineage],
+            },
         )
 
     def maybe_restore(self) -> bool:
         d = self.tcfg.ckpt_dir
         if not d or latest_step(d) is None:
             return False
-        step, state, meta = restore_checkpoint(d, self._state())
+        step, meta = read_meta(d)
+        ckpt_ranks = int(meta.get("n_ranks", self.engine.n_ranks))
+        cross_rank = ckpt_ranks != self.engine.n_ranks
+        if cross_rank and not self.tcfg.elastic:
+            raise ValueError(
+                f"checkpoint in {d} was written at n_ranks={ckpt_ranks} but "
+                f"this trainer runs n_ranks={self.engine.n_ranks}; set "
+                "TrainerConfig.elastic=True to restore across rank counts"
+            )
+        template = self._state()
+        if cross_rank:
+            # the [R_ckpt, ...] error-feedback residuals are rank-local and
+            # cannot be restored into an engine with a different R: leave
+            # them out of the template and re-init below (documented
+            # contract, asserted in tests/test_rescale.py)
+            template = {k: v for k, v in template.items() if k != "ef"}
+        step, state, meta = restore_checkpoint(d, template, step=step)
         self.params = state["params"]
         self.opt_state = state["opt_state"]
         self.ema_params = state["ema"]
-        self.ef_state = state["ef"]
+        self.ef_state = (
+            self.engine.init_ef(self.params) if cross_rank else state["ef"]
+        )
         self.global_step = step
-        self.sampler_state = SamplerState.from_dict(meta["sampler"])
+        st = SamplerState.from_dict(meta["sampler"])
+        lineage = [dict(h) for h in meta.get("lineage", [])]
+        if lineage or cross_rank:
+            self.sampler, self.sampler_state, self._lineage = (
+                self._replay_lineage(st, lineage, ckpt_ranks)
+            )
+        else:
+            self.sampler_state = st
+            self._lineage = []
         return True
+
+    def _replay_lineage(self, st: SamplerState, lineage, ckpt_ranks: int):
+        """Rebuild the checkpoint's epoch packing at *this* trainer's rank
+        count: start from the full packing at the first hop's rank count,
+        replay each recorded mid-epoch rescale (all deterministic — same
+        sizes, capacity, seed), and append one more remap when the
+        checkpoint's rank count differs from ours."""
+        hops = lineage + [{"n_ranks": ckpt_ranks, "cursor": st.cursor}]
+        sampler = self.sampler.with_ranks(int(hops[0]["n_ranks"]))
+        for prev, nxt in zip(hops, hops[1:]):
+            sampler, _ = sampler.rescale(
+                int(nxt["n_ranks"]), SamplerState(st.epoch, int(prev["cursor"]))
+            )
+        state = SamplerState(st.epoch, int(hops[-1]["cursor"]))
+        if self.engine.n_ranks != ckpt_ranks:
+            sampler, state = sampler.rescale(self.engine.n_ranks, state)
+            return sampler, state, hops
+        return sampler, state, lineage
+
+    # --------------------------- elastic rescale ---------------------------
+
+    def rescale(self, n_ranks: int, *, mesh=None) -> Dict[str, Any]:
+        """Elastic mid-run rescale at a step boundary (see module
+        docstring): snapshot -> sampler cursor remap -> engine teardown +
+        rebuild at ``n_ranks`` -> EF re-init.  Must not be called while an
+        epoch's prefetch pipeline is live — schedule it via
+        ``rescale_schedule`` / ``ElasticTrainer`` instead, which drains the
+        pipeline first.  Returns the event record (timings land in the new
+        engine's telemetry as ``repack_s`` / ``rebuild_s``)."""
+        self.save()  # crash during the rebuild restores the pre-rescale run
+        old_ranks = self.engine.n_ranks
+        cursor = self.sampler_state.cursor
+        t0 = time.perf_counter()
+        self.sampler, self.sampler_state = self.sampler.rescale(
+            n_ranks, self.sampler_state
+        )
+        repack_s = time.perf_counter() - t0
+        self._lineage.append({"n_ranks": old_ranks, "cursor": cursor})
+        t1 = time.perf_counter()
+        self.engine.close()
+        self.tcfg = dataclasses.replace(self.tcfg, n_ranks=n_ranks)
+        self.engine = make_engine(
+            self.tcfg.engine, self.mace_cfg, self.tcfg, self.optimizer,
+            self.tcfg.max_graphs, mesh=mesh,
+        )
+        new_mesh = getattr(self.engine, "mesh", None)
+        if new_mesh is not None:
+            # replicated state is committed to the *old* mesh's devices;
+            # re-place it on the new mesh before the first jitted step
+            # (checkpoints stay device-free — logical addressing — so the
+            # restore path needs no equivalent)
+            replicated = jax.sharding.NamedSharding(
+                new_mesh, jax.sharding.PartitionSpec()
+            )
+            self.params, self.opt_state, self.ema_params = jax.device_put(
+                (self.params, self.opt_state, self.ema_params), replicated
+            )
+        self.ef_state = self.engine.init_ef(self.params)
+        rebuild_s = time.perf_counter() - t1
+        self.engine.telemetry.record_rescale(repack_s, rebuild_s)
+        event = {
+            "step": self.global_step, "from_ranks": old_ranks,
+            "to_ranks": n_ranks, "repack_s": repack_s,
+            "rebuild_s": rebuild_s, "discarded_batches": 0,
+        }
+        self.rescale_events.append(event)
+        return event
 
     # ------------------------------ loop ----------------------------------
 
@@ -174,47 +311,68 @@ class Trainer:
     ) -> bool:
         """Run the rest of the current epoch (from the sampler cursor)
         through the prefetch pipeline: collation of step t+1 overlaps the
-        device executing step t when ``tcfg.prefetch >= 1``.  Returns True
+        device executing step t when ``tcfg.prefetch >= 1``.  A scheduled
+        elastic rescale (``rescale_schedule``) fires at its step boundary:
+        the pipeline is drained (in-flight old-rank-count batches
+        discarded), ``rescale`` runs, and a fresh pipeline resumes the rest
+        of the epoch at the new rank count.  Entries are popped once fired;
+        an entry at the *current* step fires before any stepping, so a
+        restart from the pre-rescale snapshot ``rescale`` writes at the
+        boundary re-applies the rescale it was about to do.  Returns True
         when ``max_steps`` was reached (the run should stop)."""
-        items = self.sampler.step_iter(self.sampler_state)
-        if max_steps is not None:
-            # bound the producer's lookahead too: no collating (and then
-            # discarding) batches past the stop point
-            remaining = max_steps - self.global_step
-            if remaining <= 0:
-                return True
-            items = itertools.islice(items, remaining)
-        with PrefetchPipeline(
-            items,
-            self._fetch_batch,
-            depth=self.tcfg.prefetch,
-        ) as pipeline:
-            for item in pipeline:
-                batch, host_stats = item.batch
-                self.params, self.opt_state, self.ef_state, metrics = (
-                    self.engine.step(
-                        self.params, self.opt_state, self.ef_state, batch,
-                        jnp.asarray(self.global_step),
-                    )
-                )
-                self.ema_params = self.ema.update(
-                    self.ema_params, self.params, jnp.asarray(self.global_step)
-                )
-                self.global_step += 1
-                self.sampler_state.cursor += 1
-                self.engine.telemetry.record_host(
-                    item.collate_s, item.wait_s,
-                    host_stats.get("block_s", 0.0),
-                )
-                history.append({k: float(v) for k, v in metrics.items()})
-
-                if simulate_failure_at is not None and self.global_step >= simulate_failure_at:
-                    raise RuntimeError("simulated node failure")
-                if self.tcfg.ckpt_every and self.global_step % self.tcfg.ckpt_every == 0:
-                    self.save()
-                if max_steps and self.global_step >= max_steps:
+        pipeline = None
+        while True:
+            if self.global_step in self.rescale_schedule:
+                # either the loop just drained the pipeline for this entry,
+                # or a restart resumed exactly at the boundary snapshot
+                event = self.rescale(self.rescale_schedule.pop(self.global_step))
+                if pipeline is not None:
+                    event["discarded_batches"] = pipeline.discarded
+            # the schedule outranks max_steps: a drill scheduled at the stop
+            # step still fires above (the run then ends — and checkpoints —
+            # at the new rank count) before this bound stops the loop
+            items = self.sampler.step_iter(self.sampler_state)
+            if max_steps is not None:
+                # bound the producer's lookahead too: no collating (and then
+                # discarding) batches past the stop point
+                remaining = max_steps - self.global_step
+                if remaining <= 0:
                     return True
-        return False
+                items = itertools.islice(items, remaining)
+            with PrefetchPipeline(
+                items,
+                self._fetch_batch,
+                depth=self.tcfg.prefetch,
+            ) as pipeline:
+                for item in pipeline:
+                    batch, host_stats = item.batch
+                    self.params, self.opt_state, self.ef_state, metrics = (
+                        self.engine.step(
+                            self.params, self.opt_state, self.ef_state, batch,
+                            jnp.asarray(self.global_step),
+                        )
+                    )
+                    self.ema_params = self.ema.update(
+                        self.ema_params, self.params, jnp.asarray(self.global_step)
+                    )
+                    self.global_step += 1
+                    self.sampler_state.cursor += 1
+                    self.engine.telemetry.record_host(
+                        item.collate_s, item.wait_s,
+                        host_stats.get("block_s", 0.0),
+                    )
+                    history.append({k: float(v) for k, v in metrics.items()})
+
+                    if simulate_failure_at is not None and self.global_step >= simulate_failure_at:
+                        raise RuntimeError("simulated node failure")
+                    if self.tcfg.ckpt_every and self.global_step % self.tcfg.ckpt_every == 0:
+                        self.save()
+                    if self.global_step in self.rescale_schedule:
+                        break  # leave the with-block: drain, fire at loop top
+                    if max_steps and self.global_step >= max_steps:
+                        return True
+            if self.global_step not in self.rescale_schedule:
+                return False  # epoch stream exhausted, nothing pending
 
     def train(
         self,
@@ -233,5 +391,59 @@ class Trainer:
             ):
                 break
             self.sampler_state = SamplerState(self.sampler_state.epoch + 1, 0)
+            self._lineage = []  # remainder universes are epoch-scoped
         self.save()
         return {"history": history, "wall": time.perf_counter() - t_start}
+
+
+def parse_rescale_schedule(specs) -> Dict[int, int]:
+    """Parse ``--rescale-at STEP:R`` fault-drill specs (a repeatable flag
+    and/or comma-separated) into a ``{global_step: new_n_ranks}`` schedule."""
+    schedule: Dict[int, int] = {}
+    if isinstance(specs, str):
+        specs = [specs]
+    for spec in specs or []:
+        for part in str(spec).split(","):
+            part = part.strip()
+            if not part:
+                continue
+            try:
+                step_s, ranks_s = part.split(":")
+                step, ranks = int(step_s), int(ranks_s)
+            except ValueError:
+                raise ValueError(
+                    f"bad rescale spec {part!r}; want STEP:R"
+                ) from None
+            if step <= 0 or ranks <= 0:
+                raise ValueError(
+                    f"bad rescale spec {part!r}: STEP and R must be positive"
+                )
+            schedule[step] = ranks
+    return schedule
+
+
+class ElasticTrainer(Trainer):
+    """Trainer wired for mid-run elasticity.
+
+    ``rescale_schedule`` maps global step -> new rank count: when a step in
+    the schedule completes, the epoch's prefetch pipeline drains (in-flight
+    old-R batches discarded), the full state snapshots through the atomic
+    checkpoint, the epoch remainder re-packs for the new rank count (exact
+    cursor remap — ``data.sampler``), and a fresh mesh + engine are built
+    before the loop resumes.  ``TrainerConfig.elastic`` is forced on so the
+    checkpoints it writes restore across rank counts.
+    """
+
+    def __init__(
+        self,
+        mace_cfg: MaceConfig,
+        tcfg: TrainerConfig,
+        dataset: SyntheticCFMDataset,
+        *,
+        rescale_schedule: Optional[Dict[int, int]] = None,
+        **kwargs,
+    ):
+        if not tcfg.elastic:
+            tcfg = dataclasses.replace(tcfg, elastic=True)
+        super().__init__(mace_cfg, tcfg, dataset, **kwargs)
+        self.rescale_schedule = dict(rescale_schedule or {})
