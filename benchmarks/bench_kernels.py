@@ -1,11 +1,21 @@
 """Paper §4 / Listing 1: symmetric-tensor-contraction + channelwise-TP
-kernel optimization — fused vs e3nn-style chained baseline.
+kernel optimization — fused vs e3nn-style chained baseline, forward AND
+backward.
 
 Measured on this host (CPU, jitted XLA): the fused sparse-table formulation
 vs the per-path dense-CG einsum chain.  The measured speedup kappa feeds the
 ablation/scaling models (Fig 6-10).  The Pallas TPU kernels are validated in
 interpret mode in tests/test_kernels.py; on-device they fuse further (VMEM
 residency; DESIGN.md §2).
+
+``--grad`` additionally times ``jax.value_and_grad`` through each impl —
+the training-shaped measurement (backward is ~2/3 of training FLOPs, and
+the pallas impls run their *hand-written backward kernels* through
+``jax.custom_vjp`` here, not an autodiff trace of the forward).  Every run
+(CSV rows aside) appends a machine-readable snapshot to
+``BENCH_kernels.json`` at the repo root — the kernel perf trajectory; CI's
+quick tier regenerates it in interpret mode (``--grad --quick``) and
+uploads the artifact.
 
 ``bench_interaction`` measures the full interaction op (TP + receiver
 scatter + neighbor norm) through the ``interaction`` registry kind: the ref
@@ -18,6 +28,13 @@ cost of the Pallas kernel's data contract is timed alongside.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import sys
+import time
+from functools import partial
+from pathlib import Path
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -27,9 +44,12 @@ from repro.core.interaction import InteractionSpec
 from repro.core.irreps import lspec, sh_spec
 from repro.core.symmetric_contraction import SymConSpec, init_symcon_weights
 from repro.core.channelwise_tp import TPSpec
-from repro.data.blocking import block_edges
-from repro.kernels.registry import resolve
+from repro.data.blocking import block_edges, blocking_to_batch
+from repro.kernels.registry import capabilities, resolve
 from repro.roofline.hlo import jaxpr_out_shapes
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+DEFAULT_JSON = REPO_ROOT / "BENCH_kernels.json"
 
 
 def bench_symcon(N=512, k=32, nu=2):
@@ -119,35 +139,249 @@ def measured_kernel_speedup() -> float:
     return float((tr1 + tr2) / (tf1 + tf2))
 
 
-def main():
+# ---------------------------------------------------------------------------
+# fwd / fwd+bwd benchmark matrix (--grad) + the JSON perf trajectory
+# ---------------------------------------------------------------------------
+
+
+def _time_pair(fwd_fn, vg_fn, repeats):
+    """(fwd seconds, fwd+bwd seconds or None) for jitted callables."""
+    t_fwd = timeit(lambda: jax.block_until_ready(fwd_fn()), repeats=repeats)
+    t_both = None
+    if vg_fn is not None:
+        t_both = timeit(lambda: jax.block_until_ready(vg_fn()), repeats=repeats)
+    return t_fwd, t_both
+
+
+def _rows_for(kind, impl, params, t_fwd, t_both):
+    rows = [{
+        "kind": kind, "impl": impl, "mode": "fwd",
+        "seconds": t_fwd, "us": t_fwd * 1e6, "params": params,
+    }]
+    if t_both is not None:
+        rows.append({
+            "kind": kind, "impl": impl, "mode": "fwd_bwd",
+            "seconds": t_both, "us": t_both * 1e6, "params": params,
+            "fwd_bwd_over_fwd": t_both / t_fwd if t_fwd > 0 else None,
+        })
+    return rows
+
+
+def bench_matrix(grad=False, quick=False, impls=("ref", "fused", "pallas"),
+                 repeats=5):
+    """Time every (kind, impl) in fwd mode and — with ``grad`` — through
+    ``jax.value_and_grad`` of a scalar loss (the training-shaped fwd+bwd
+    path; pallas impls exercise their hand-written backward kernels).
+
+    ``quick`` shrinks problem sizes so interpret-mode pallas rows stay
+    cheap (the CI tier).  Returns a list of machine-readable row dicts.
+    """
     rows = []
-    for nu in (2, 3):
-        t_ref, t_fused = bench_symcon(nu=nu)
+
+    # --- symmetric contraction (Algorithm 3) ---
+    N, k = (64, 8) if quick else (512, 32)
+    spec = SymConSpec(lspec(0, 1, 2, 3), lspec(0, 1), 2)
+    key = jax.random.PRNGKey(0)
+    A = jax.random.normal(key, (N, k, spec.in_spec.dim))
+    species = jax.random.randint(key, (N,), 0, 4)
+    W = init_symcon_weights(key, spec, 4, k)
+    for impl in impls:
+        fn = resolve("symcon", impl, spec)
+        fwd = jax.jit(lambda A, W, fn=fn: fn(A, species, W))
+        vg = None
+        if grad:
+            vg = jax.jit(jax.value_and_grad(
+                lambda A, W, fn=fn: jnp.sum(fn(A, species, W) ** 2),
+                argnums=(0, 1),
+            ))
+        t_fwd, t_both = _time_pair(
+            partial(fwd, A, W), partial(vg, A, W) if vg else None, repeats
+        )
+        rows += _rows_for("symcon", impl, {"N": N, "k": k, "nu": 2},
+                          t_fwd, t_both)
+
+    # --- channelwise TP (Algorithm 2) ---
+    E, k = (256, 8) if quick else (2048, 32)
+    tspec = TPSpec(sh_spec(3), lspec(0, 1), lspec(0, 1, 2, 3))
+    key = jax.random.PRNGKey(1)
+    Y = jax.random.normal(key, (E, tspec.y_spec.dim))
+    h = jax.random.normal(key, (E, k, tspec.h_spec.dim))
+    R = jax.random.normal(key, (E, tspec.n_paths, k))
+    for impl in impls:
+        fn = resolve("channelwise_tp", impl, tspec)
+        fwd = jax.jit(fn)
+        vg = None
+        if grad:
+            vg = jax.jit(jax.value_and_grad(
+                lambda Y, h, R, fn=fn: jnp.sum(fn(Y, h, R) ** 2),
+                argnums=(0, 1, 2),
+            ))
+        t_fwd, t_both = _time_pair(
+            partial(fwd, Y, h, R), partial(vg, Y, h, R) if vg else None,
+            repeats,
+        )
+        rows += _rows_for("channelwise_tp", impl, {"E": E, "k": k},
+                          t_fwd, t_both)
+
+    # --- interaction (TP + scatter + /avg, the fused-kernel target) ---
+    E, N, k = (256, 64, 8) if quick else (4096, 512, 32)
+    ispec = InteractionSpec(
+        TPSpec(sh_spec(3), lspec(0, 1), lspec(0, 1, 2, 3)),
+        avg_num_neighbors=12.0,
+    )
+    args = interaction_inputs(E, N, k, ispec)
+    blocking_arrays = None
+    caps = capabilities("interaction")
+    for impl in impls:
+        fn = resolve("interaction", impl, ispec)
+        kwargs = {}
+        if caps.get(impl, {}).get("consumes_blocking"):
+            if blocking_arrays is None:
+                b = block_edges(
+                    np.asarray(args[4]), np.asarray(args[5]), N,
+                    block_n=ispec.block_n,
+                )
+                flat = blocking_to_batch(b)
+                blocking_arrays = {
+                    "perm": jnp.asarray(flat["blk_perm"]),
+                    "valid": jnp.asarray(flat["blk_valid"]),
+                    "local": jnp.asarray(flat["blk_local"]),
+                    "base": jnp.asarray(flat["blk_base"]),
+                }
+            kwargs["blocking"] = blocking_arrays
+        senders, receivers, edge_mask = args[3], args[4], args[5]
+        fwd = jax.jit(lambda Y, h, R, fn=fn, kw=kwargs: fn(
+            Y, h, R, senders, receivers, edge_mask, **kw))
+        vg = None
+        if grad:
+            vg = jax.jit(jax.value_and_grad(
+                lambda Y, h, R, fn=fn, kw=kwargs: jnp.sum(
+                    fn(Y, h, R, senders, receivers, edge_mask, **kw) ** 2
+                ),
+                argnums=(0, 1, 2),
+            ))
+        t_fwd, t_both = _time_pair(
+            partial(fwd, *args[:3]),
+            partial(vg, *args[:3]) if vg else None, repeats,
+        )
+        rows += _rows_for(
+            "interaction", impl,
+            {"E": E, "N": N, "k": k,
+             "blocked": bool(kwargs.get("blocking") is not None)},
+            t_fwd, t_both,
+        )
+    return rows
+
+
+MAX_TRAJECTORY_RUNS = 50
+
+
+def write_bench_json(rows, path, *, grad, quick):
+    """Append this run to the machine-readable perf-trajectory artifact.
+
+    The file holds ``{"schema": 1, "runs": [run, ...]}`` — one entry per
+    benchmark invocation, oldest first, capped at ``MAX_TRAJECTORY_RUNS``
+    so the committed artifact stays bounded.  A corrupt/legacy file is
+    replaced rather than crashing the benchmark."""
+    run = {
+        "unix_time": int(time.time()),
+        "backend": jax.default_backend(),
+        "interpret_pallas": jax.default_backend() == "cpu",
+        "grad": bool(grad),
+        "quick": bool(quick),
+        "rows": rows,
+    }
+    path = Path(path)
+    runs = []
+    if path.exists():
+        try:
+            prior = json.loads(path.read_text())
+            if prior.get("schema") == 1:
+                runs = list(prior.get("runs", []))
+        except (ValueError, AttributeError):
+            runs = []
+    runs = (runs + [run])[-MAX_TRAJECTORY_RUNS:]
+    payload = {
+        "schema": 1,
+        "generated_by": "benchmarks/bench_kernels.py",
+        "runs": runs,
+    }
+    path.write_text(json.dumps(payload, indent=1) + "\n")
+    return payload
+
+
+def main(argv=()):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--grad", action="store_true",
+                    help="also time jax.value_and_grad through each impl "
+                         "(fwd+bwd rows; pallas runs its dedicated "
+                         "backward kernels)")
+    ap.add_argument("--quick", action="store_true",
+                    help="small problem sizes (CI tier; interpret-mode "
+                         "pallas stays cheap)")
+    ap.add_argument("--impls", default="",
+                    help="comma-separated impl names to bench (default: "
+                         "ref,fused,pallas — pallas skipped at full sizes "
+                         "on CPU where it would run in interpret mode)")
+    ap.add_argument("--json", default=str(DEFAULT_JSON),
+                    help="perf-trajectory artifact path "
+                         "(default: BENCH_kernels.json at the repo root)")
+    ap.add_argument("--no-json", action="store_true",
+                    help="skip writing the JSON artifact")
+    ap.add_argument("--repeats", type=int, default=5)
+    args = ap.parse_args(list(argv))
+
+    rows = []
+    # the legacy full-size CSV sweep (nu=3 tables take minutes to build)
+    # is skipped at --quick: the CI tier measures through bench_matrix only
+    if not args.quick:
+        for nu in (2, 3):
+            t_ref, t_fused = bench_symcon(nu=nu)
+            rows.append(csv_row(
+                f"kernel_symcon_nu{nu}_ref", t_ref * 1e6,
+                f"speedup={t_ref / t_fused:.2f}x_fused",
+            ))
+            rows.append(csv_row(f"kernel_symcon_nu{nu}_fused", t_fused * 1e6))
+        t_ref, t_fused = bench_tp()
         rows.append(csv_row(
-            f"kernel_symcon_nu{nu}_ref", t_ref * 1e6,
+            "kernel_channelwise_tp_ref", t_ref * 1e6,
             f"speedup={t_ref / t_fused:.2f}x_fused",
         ))
-        rows.append(csv_row(f"kernel_symcon_nu{nu}_fused", t_fused * 1e6))
-    t_ref, t_fused = bench_tp()
-    rows.append(csv_row(
-        "kernel_channelwise_tp_ref", t_ref * 1e6,
-        f"speedup={t_ref / t_fused:.2f}x_fused",
-    ))
-    rows.append(csv_row("kernel_channelwise_tp_fused", t_fused * 1e6))
-    t_ref, t_fused, t_block, no_msgs = bench_interaction()
-    rows.append(csv_row(
-        "kernel_interaction_ref", t_ref * 1e6,
-        f"speedup={t_ref / t_fused:.2f}x_fused",
-    ))
-    rows.append(csv_row(
-        "kernel_interaction_fused", t_fused * 1e6,
-        f"no_edge_dout_messages={no_msgs}",
-    ))
-    rows.append(csv_row("kernel_interaction_edge_blocking_host", t_block * 1e6))
+        rows.append(csv_row("kernel_channelwise_tp_fused", t_fused * 1e6))
+        t_ref, t_fused, t_block, no_msgs = bench_interaction()
+        rows.append(csv_row(
+            "kernel_interaction_ref", t_ref * 1e6,
+            f"speedup={t_ref / t_fused:.2f}x_fused",
+        ))
+        rows.append(csv_row(
+            "kernel_interaction_fused", t_fused * 1e6,
+            f"no_edge_dout_messages={no_msgs}",
+        ))
+        rows.append(csv_row(
+            "kernel_interaction_edge_blocking_host", t_block * 1e6
+        ))
+
+    impls = tuple(s for s in args.impls.split(",") if s)
+    if not impls:
+        impls = ("ref", "fused", "pallas")
+        if jax.default_backend() == "cpu" and not args.quick:
+            # full-size interpret-mode pallas timings are meaningless and
+            # slow; the CI tier measures pallas at --quick sizes instead
+            impls = ("ref", "fused")
+    matrix = bench_matrix(grad=args.grad, quick=args.quick, impls=impls,
+                          repeats=args.repeats)
+    for r in matrix:
+        rows.append(csv_row(
+            f"kernel_{r['kind']}_{r['impl']}_{r['mode']}", r["us"],
+            ",".join(f"{k}={v}" for k, v in r["params"].items()),
+        ))
+    if not args.no_json:
+        write_bench_json(matrix, args.json, grad=args.grad, quick=args.quick)
+        rows.append(f"bench_json,written={args.json},rows={len(matrix)}")
     for r in rows:
         print(r)
     return rows
 
 
 if __name__ == "__main__":
-    main()
+    main(sys.argv[1:])

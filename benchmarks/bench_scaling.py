@@ -57,6 +57,7 @@ def calibrate_with_engine(
     capacity: int = 128,
     prefetch: int = 1,
     interaction_impl: str = "auto",
+    interaction_bwd_impl: str = "pallas",
     rescale_at: str = "",
 ):
     """Train ``steps`` measured steps (+1 jit-warmup step that is discarded)
@@ -88,6 +89,7 @@ def calibrate_with_engine(
         n_species=10, channels=8, hidden_ls=(0, 1), sh_lmax=2, a_ls=(0, 1, 2),
         correlation=2, n_interactions=2, avg_num_neighbors=8.0, impl="fused",
         interaction_impl=interaction_impl,
+        interaction_bwd_impl=interaction_bwd_impl,
     )
     ds = SyntheticCFMDataset(n_graphs, seed=11, max_atoms=min(96, capacity))
     tcfg = TrainerConfig(
@@ -99,22 +101,31 @@ def calibrate_with_engine(
     else:
         tr = Trainer(mcfg, tcfg, ds, seed=0)
     tr.train(n_epochs=1_000_000, max_steps=steps + 1)  # step 0 pays the jit
-    tel = tr.engine.telemetry
-    # post-rescale the telemetry belongs to the current engine: its first
-    # step re-paid the jit, so skip=1 stays the right calibration guard
+    # whole-run view: ``Trainer.telemetry`` merges every engine generation,
+    # so after a rescale the calibration spans the rescale event instead of
+    # reading only the newest engine's matrix.  Each generation re-pays the
+    # jit on its first step, and merged ``skip`` applies per generation, so
+    # skip=1 stays the right calibration guard throughout.
+    tel = tr.telemetry
     c_tok = tel.c_token(skip=1)
     n_ranks_now = tr.engine.n_ranks
+    n_gens = len(tr.telemetry_generations) + 1
 
     bins = tr.sampler.bins_for_epoch(tr.sampler_state.epoch)
     packed = Bins([list(b) for b in bins], ds.sizes, capacity)
     proxy = balance_metrics(packed, n_ranks_now)
+    # the straggler matrix must match the *current* rank count: use the live
+    # generation's matrix (merged exposes the per-generation list)
     measured = balance_metrics(
-        packed, n_ranks_now, measured_work=tel.straggler_matrix(skip=1)
+        packed, n_ranks_now,
+        measured_work=tr.engine.telemetry.straggler_matrix(skip=1),
     )
     host = tel.host_matrix(skip=1)
     rows = [
-        f"fig7_calibration,engine={engine},ranks={n_ranks_now},steps={tel.n_steps - 1},"
+        f"fig7_calibration,engine={engine},ranks={n_ranks_now},"
+        f"steps={tel.n_steps - n_gens},generations={n_gens},"
         f"interaction={mcfg.interaction_impl_name},"
+        f"bwd={mcfg.interaction_bwd_impl},"
         f"c_token_s={c_tok:.3e},straggler_proxy={proxy.straggler_ratio:.3f},"
         f"straggler_measured={measured.straggler_ratio:.3f},"
         f"prefetch={prefetch},host_collate_s={float(host[:, 0].sum()):.3e},"
@@ -198,6 +209,10 @@ if __name__ == "__main__":
     ap.add_argument("--interaction-impl", default="auto",
                     help="interaction impl for the measured run (pallas "
                          "adds host edge blocking, reported as host_block_s)")
+    ap.add_argument("--bwd-impl", choices=["pallas", "xla"], default="pallas",
+                    help="backward impl for custom-VJP interaction kernels "
+                         "(pallas = dedicated backward kernel, xla = fused-"
+                         "XLA VJP fallback)")
     ap.add_argument("--rescale-at", default="",
                     metavar="STEP:R[,STEP:R...]",
                     help="elastic rescale event(s) during the measured run; "
@@ -216,6 +231,7 @@ if __name__ == "__main__":
         c_tok, extra = calibrate_with_engine(
             engine=args.engine, n_ranks=args.ranks, steps=args.measure_steps,
             prefetch=args.prefetch, interaction_impl=args.interaction_impl,
+            interaction_bwd_impl=args.bwd_impl,
             rescale_at=args.rescale_at,
         )
         if c_tok is not None:

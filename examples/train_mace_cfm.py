@@ -61,6 +61,10 @@ def main():
     ap.add_argument("--impl", default="fused",
                     help="kernel impl name from kernels.registry "
                          "(ref | fused | pallas | registered)")
+    ap.add_argument("--bwd-impl", choices=["pallas", "xla"], default="pallas",
+                    help="backward impl for custom-VJP interaction kernels: "
+                         "pallas = dedicated blocked-gather + TP-transpose "
+                         "backward kernel, xla = fused-XLA VJP fallback")
     ap.add_argument("--interaction-impl", default="auto",
                     help="interaction (TP+scatter) impl from kernels.registry "
                          "(auto = follow --impl; pallas consumes pre-blocked "
@@ -111,6 +115,7 @@ def main():
         a_ls=(0, 1, 2, 3), correlation=args.correlation, n_interactions=2,
         avg_num_neighbors=12.0, impl=args.impl,
         interaction_impl=args.interaction_impl,
+        interaction_bwd_impl=args.bwd_impl,
     )
     ds = SyntheticCFMDataset(args.n_graphs, seed=0, max_atoms=args.max_atoms)
     schedule = parse_rescale_schedule(args.rescale_at)
@@ -132,7 +137,8 @@ def main():
         f"params={param_count(tr.params):,} graphs={len(ds)} "
         f"steps/epoch={tr.sampler.steps_per_epoch()} sampler={args.sampler} "
         f"engine={args.engine} ranks={tcfg.n_ranks} prefetch={tcfg.prefetch} "
-        f"impl={args.impl} interaction={cfg.interaction_impl_name}"
+        f"impl={args.impl} interaction={cfg.interaction_impl_name} "
+        f"bwd={cfg.interaction_bwd_impl}"
     )
 
     t0 = time.perf_counter()

@@ -63,6 +63,18 @@ class InteractionSpec:
     # atom rows per kernel tile; must equal the data pipeline's
     # BinShape.block_n when blocking metadata is consumed (Trainer validates)
     block_n: int = 32
+    # backward implementation for custom_vjp-carrying impls: "pallas" runs
+    # the dedicated gather + TP-transpose backward kernel sharing the
+    # forward's tile geometry; "xla" retains the fused-XLA formulation's VJP
+    # (the capability fallback, and the second-order-autodiff escape hatch
+    # on compiled backends).  Impls without a custom backward ignore it.
+    bwd_impl: str = "pallas"
+
+    def __post_init__(self):
+        if self.bwd_impl not in ("pallas", "xla"):
+            raise ValueError(
+                f"bwd_impl must be 'pallas' or 'xla', got {self.bwd_impl!r}"
+            )
 
 
 def resolve_interaction(name: str, spec: InteractionSpec):

@@ -38,6 +38,13 @@ it — see ``data.blocking``):
   blk_base   [T] int32       first atom row covered by each tile
 ``MaceConfig.interaction_block_n`` must equal the pipeline's
 ``BinShape.block_n`` (one static value that cannot travel in an array).
+
+Training differentiates through the same registry-resolved calls: the
+pallas impls carry hand-written backward kernels via ``jax.custom_vjp``
+(registry capability ``has_custom_bwd``), and
+``MaceConfig.interaction_bwd_impl`` selects the interaction backward
+("pallas" = dedicated blocked-gather + TP-transpose kernel, "xla" = the
+fused formulation's VJP fallback).
 """
 from __future__ import annotations
 
@@ -79,6 +86,12 @@ class MaceConfig:
     # "pallas" consumes the data pipeline's blk_* batch arrays when present
     # and falls back to TP-kernel + segment_sum when absent.
     interaction_impl: str = "auto"
+    # backward impl for custom-VJP interaction kernels: "pallas" = the
+    # dedicated blocked-gather + TP-transpose backward kernel (default),
+    # "xla" = the fused-XLA formulation's VJP (capability fallback; also
+    # the grad-of-grad escape hatch on compiled backends).  Ignored by
+    # impls without a hand-written backward.
+    interaction_bwd_impl: str = "pallas"
     # atom rows per kernel tile; must match BinShape.block_n when blocking
     # metadata is consumed (data.blocking.DEFAULT_BLOCK_N)
     interaction_block_n: int = 32
@@ -114,7 +127,7 @@ class MaceConfig:
     def interaction_spec_at(self, layer: int) -> InteractionSpec:
         return InteractionSpec(
             self.tp_spec_at(layer), self.avg_num_neighbors,
-            self.interaction_block_n,
+            self.interaction_block_n, self.interaction_bwd_impl,
         )
 
 

@@ -19,6 +19,21 @@ Blocked layout (produced by ``ops.block_edges``): edges are permuted so that
 each atom tile of ``block_n`` atoms owns a contiguous, padded range of
 ``epb`` edge slots; grid = (n_atom_tiles, epb // block_e); the output tile is
 revisited across the second grid axis and accumulated.
+
+Backward (``tp_bwd_pallas_raw``): the scatter-transpose is a *gather* over
+the same pre-blocked edge tiles — each edge slot reads the cotangent row of
+its receiver from the tile's ``[block_n, d_out, k]`` gradient block via the
+transpose of the forward's one-hot matrix (again an MXU matmul), then the
+TP-transpose runs the unrolled CG nonzeros in reverse:
+
+    dY[e, m1] += val * sum_k  g[e, m3, k] * h[e, m2, k] * R[e, p, k]
+    dh[e, m2, k] += val * Y[e, m1] * R[e, p, k] * g[e, m3, k]
+    dR[e, p,  k] += val * Y[e, m1] * h[e, m2, k] * g[e, m3, k]
+
+(the dY reduction over the channel/lane axis is the only cross-lane op).
+The forward and backward share one tile geometry, so the data pipeline's
+blocking arrays serve both directions; ``ops.py`` wires the pair into
+``jax.custom_vjp`` behind the ``InteractionSpec.bwd_impl`` knob.
 """
 from __future__ import annotations
 
@@ -74,6 +89,64 @@ def _tp_scatter_kernel(
         preferred_element_type=jnp.float32,
     )
     o_ref[...] += acc.reshape(block_n, d_out, k).astype(o_ref.dtype)
+
+
+def _tp_gather_bwd_kernel(
+    g_ref,      # [block_n, d_out, k]  cotangent of the output atom tile
+    y_ref,      # [block_e, d_sh]
+    h_ref,      # [block_e, d_h, k]
+    r_ref,      # [block_e, n_paths, k]
+    lr_ref,     # [block_e, 1] int32 local receiver (within atom tile)
+    em_ref,     # [block_e, 1] f32 edge mask
+    dy_ref,     # [block_e, d_sh]
+    dh_ref,     # [block_e, d_h, k]
+    dr_ref,     # [block_e, n_paths, k]
+    *,
+    entries: List[Tuple[int, int, int, int, float]],
+    d_out: int,
+    block_n: int,
+):
+    block_e = y_ref.shape[0]
+    k = h_ref.shape[2]
+    lr = lr_ref[:, 0]
+    em = em_ref[:, 0]
+
+    # --- gather = transpose of the forward's one-hot scatter matmul ---
+    cols = jax.lax.broadcasted_iota(jnp.int32, (block_e, block_n), 1)
+    onehot_t = (cols == lr[:, None]).astype(g_ref.dtype) * em[:, None]
+    gflat = g_ref[...].reshape(block_n, d_out * k)
+    ge = jax.lax.dot_general(
+        onehot_t, gflat, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).reshape(block_e, d_out, k).astype(h_ref.dtype)   # per-edge msg cotangent
+
+    # --- TP-transpose across all CG paths (cotangents stay in VREGs) ---
+    d_sh = y_ref.shape[1]
+    d_h = h_ref.shape[1]
+    n_paths = r_ref.shape[1]
+    dy = [None] * d_sh
+    dh = [None] * d_h
+    dr = [None] * n_paths
+
+    def acc(buf, i, v):
+        buf[i] = v if buf[i] is None else buf[i] + v
+
+    for (m1, m2, m3, p, val) in entries:
+        gm = ge[:, m3, :]                              # [block_e, k]
+        y = y_ref[:, m1][:, None] * val                # [block_e, 1]
+        h = h_ref[:, m2, :]
+        r = r_ref[:, p, :]
+        acc(dy, m1, jnp.sum(gm * h * r, axis=1, keepdims=True) * val)
+        acc(dh, m2, (gm * r) * y)
+        acc(dr, p, (gm * h) * y)
+
+    z1 = jnp.zeros((block_e, 1), dy_ref.dtype)
+    dy_ref[...] = jnp.concatenate(
+        [c if c is not None else z1 for c in dy], axis=1
+    )
+    zk = jnp.zeros((block_e, k), dh_ref.dtype)
+    dh_ref[...] = jnp.stack([c if c is not None else zk for c in dh], axis=1)
+    dr_ref[...] = jnp.stack([c if c is not None else zk for c in dr], axis=1)
 
 
 def tp_scatter_pallas_raw(
@@ -132,3 +205,73 @@ def tp_scatter_pallas_raw(
         ),
         interpret=interpret,
     )(Y_b, h_b, R_b, local_rcv, emask)
+
+
+def tp_bwd_pallas_raw(
+    G_t: jnp.ndarray,        # [n_atom_tiles*block_n, d_out, k] output cotangent
+    Y_b: jnp.ndarray,        # [E_p, d_sh]
+    h_b: jnp.ndarray,        # [E_p, d_h, k]
+    R_b: jnp.ndarray,        # [E_p, n_paths, k]
+    local_rcv: jnp.ndarray,  # [E_p, 1] int32
+    emask: jnp.ndarray,      # [E_p, 1] f32
+    spec: TPSpec,
+    tables: TPTables,
+    *,
+    n_atom_tiles: int,
+    block_n: int,
+    block_e: int = 128,
+    interpret: bool | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Blocked gather + TP-transpose backward (same tile geometry as the
+    forward).  Returns per-slot cotangents ``(dY_b [E_p, d_sh],
+    dh_b [E_p, d_h, k], dR_b [E_p, n_paths, k])`` — masked slots carry exact
+    zeros, so un-permuting back to edge order is a plain scatter-add."""
+    E_p = Y_b.shape[0]
+    k = h_b.shape[2]
+    assert E_p % n_atom_tiles == 0
+    epb = E_p // n_atom_tiles
+    assert epb % block_e == 0, (epb, block_e)
+    d_out = spec.out_spec.dim
+    assert G_t.shape == (n_atom_tiles * block_n, d_out, k), G_t.shape
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+
+    entries = [
+        (int(tables.m1[i]), int(tables.m2[i]), int(tables.m3[i]),
+         int(tables.path[i]), float(tables.val[i]))
+        for i in range(len(tables.val))
+    ]
+    kern = functools.partial(
+        _tp_gather_bwd_kernel, entries=entries, d_out=d_out, block_n=block_n
+    )
+    inner = epb // block_e
+
+    def eidx(i, j):
+        return (i * inner + j, 0)
+
+    def eidx3(i, j):
+        return (i * inner + j, 0, 0)
+
+    return pl.pallas_call(
+        kern,
+        grid=(n_atom_tiles, inner),
+        in_specs=[
+            pl.BlockSpec((block_n, d_out, k), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((block_e, Y_b.shape[1]), eidx),
+            pl.BlockSpec((block_e, h_b.shape[1], k), eidx3),
+            pl.BlockSpec((block_e, R_b.shape[1], k), eidx3),
+            pl.BlockSpec((block_e, 1), eidx),
+            pl.BlockSpec((block_e, 1), eidx),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_e, Y_b.shape[1]), eidx),
+            pl.BlockSpec((block_e, h_b.shape[1], k), eidx3),
+            pl.BlockSpec((block_e, R_b.shape[1], k), eidx3),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(Y_b.shape, Y_b.dtype),
+            jax.ShapeDtypeStruct(h_b.shape, h_b.dtype),
+            jax.ShapeDtypeStruct(R_b.shape, R_b.dtype),
+        ],
+        interpret=interpret,
+    )(G_t, Y_b, h_b, R_b, local_rcv, emask)

@@ -18,14 +18,45 @@ untouched — to the ``interaction`` impl resolved from ``kernels.registry``:
     TP-only kernel + XLA segment-sum, so the impl stays selectable on
     batches that carry no blocking metadata.
 
-    Both paths differentiate through a ``jax.custom_vjp`` whose backward is
-    the VJP of the numerically-equivalent ``interaction_fused`` formulation
-    — the standard production-kernel pattern (forward = hand-written kernel,
-    backward = XLA) until a dedicated backward kernel lands.
-
 ``tp_pallas``
     TP-only drop-in for ``tp_fused`` (scatter outside); used by the
     fallback above and by ``MaceConfig(impl="pallas")``'s contraction stage.
+
+Differentiation contract (``InteractionSpec.bwd_impl``)
+-------------------------------------------------------
+Every op here differentiates through a ``jax.custom_vjp``; since backward is
+~2/3 of training FLOPs, the default backward is a *dedicated Pallas kernel*,
+not the forward's autodiff trace:
+
+``bwd_impl="pallas"`` (default)
+    The scatter-transpose is a *gather* over the same pre-blocked edge tiles
+    (``kernel.tp_bwd_pallas_raw``): each edge slot reads its receiver's
+    cotangent row via the transpose of the forward's one-hot MXU matmul,
+    then the TP-transpose produces ``dY/dh/dR`` per edge slot in VREGs.  A
+    plain XLA scatter-add un-permutes slots back to edge order (valid slots
+    are a permutation; masked slots carry exact zeros) and a segment-sum
+    over senders folds ``dh`` onto atoms — the exact adjoints of the
+    forward's host-side blocking gathers.
+
+``bwd_impl="xla"``
+    The previous behaviour, retained for capability-gated platforms: the
+    VJP of the numerically-equivalent ``interaction_fused`` formulation.
+    It is also the documented escape hatch for *second-order* autodiff on
+    compiled backends (grad-of-grad traces through the backward, which only
+    a pure-XLA backward supports outside interpret mode).
+
+Saved-residual memory contract: the custom_vjp stores exactly the op's own
+inputs — ``(Y, h_node, R)`` plus the integer/bool operands and blocking
+arrays (float0 cotangents) — never the ``[E, k, d_out]`` message tensor or
+any blocked copy; the backward re-gathers its blocked operands from these
+residuals just like the forward does.
+
+Second-order autodiff: ``pallas_call`` has no JVP rule, and every training
+step is a grad-of-grad (forces inside the loss), so each backward kernel is
+*itself* wrapped in a ``custom_vjp`` whose derivative rule is ``jax.vjp``
+of the numerically-equivalent XLA formulation (``tp_fused`` /
+``interaction_fused``): first-order backward = hand-written kernel, second
+and higher orders = XLA.
 """
 from __future__ import annotations
 
@@ -36,7 +67,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.channelwise_tp import TPSpec, TPTables, build_tp_tables
+from repro.core.channelwise_tp import TPSpec, TPTables, build_tp_tables, tp_fused
 from repro.core.interaction import (
     InteractionSpec,
     aggregate_edge_messages,
@@ -46,7 +77,90 @@ from repro.core.interaction import (
 # pipeline now, but kernel-side callers/tests import it from here too.
 from repro.data.blocking import EdgeBlocking, block_edges  # noqa: F401
 
-from .kernel import tp_scatter_pallas_raw
+from .kernel import tp_bwd_pallas_raw, tp_scatter_pallas_raw
+
+
+def _identity_blocking(E_p: int, block_e: int, dtype):
+    """One "atom" tile per edge block; local receiver = position in block."""
+    n_tiles = E_p // block_e
+    lr = jnp.tile(jnp.arange(block_e, dtype=jnp.int32), n_tiles)[:, None]
+    em = jnp.ones((E_p, 1), dtype)
+    return n_tiles, lr, em
+
+
+def _block_edge_operands(Y, h_send, R, block_e):
+    """Pad + k-minor-transpose per-edge operands to kernel layout."""
+    E = h_send.shape[0]
+    pad = (-E) % block_e
+    Y_b = jnp.pad(Y, ((0, pad), (0, 0)))
+    h_b = jnp.pad(jnp.swapaxes(h_send, 1, 2), ((0, pad), (0, 0), (0, 0)))
+    R_b = jnp.pad(R, ((0, pad), (0, 0), (0, 0)))  # [E_p, n_paths, k] (k-minor)
+    return Y_b, h_b, R_b, E + pad
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _tp_op(spec: TPSpec, block_e: int, interpret: bool, Y, h_send, R):
+    """TP-only core op (identity 'scatter': each edge is its own segment)."""
+    Y_b, h_b, R_b, E_p = _block_edge_operands(Y, h_send, R, block_e)
+    n_tiles, lr, em = _identity_blocking(E_p, block_e, h_b.dtype)
+    A_t = tp_scatter_pallas_raw(
+        Y_b, h_b, R_b, lr, em, spec, build_tp_tables(spec),
+        n_atom_tiles=n_tiles, block_n=block_e, block_e=block_e,
+        interpret=interpret,
+    )                                             # [E_p, d_out, k]
+    return jnp.swapaxes(A_t, 1, 2)[: h_send.shape[0]]
+
+
+def _tp_op_fwd(spec, block_e, interpret, Y, h_send, R):
+    return _tp_op(spec, block_e, interpret, Y, h_send, R), (Y, h_send, R)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _tp_bwd_op(spec, block_e, interpret, g, Y, h_send, R):
+    """First-order TP backward as a closed op: the identity-blocked
+    TP-transpose kernel, shielded from linearization by its own custom_vjp
+    (see the module docstring's second-order note)."""
+    E = h_send.shape[0]
+    Y_b, h_b, R_b, E_p = _block_edge_operands(Y, h_send, R, block_e)
+    n_tiles, lr, em = _identity_blocking(E_p, block_e, h_b.dtype)
+    G_t = jnp.pad(jnp.swapaxes(g, 1, 2), ((0, E_p - E), (0, 0), (0, 0)))
+    dY_b, dh_b, dR_b = tp_bwd_pallas_raw(
+        G_t, Y_b, h_b, R_b, lr, em, spec, build_tp_tables(spec),
+        n_atom_tiles=n_tiles, block_n=block_e, block_e=block_e,
+        interpret=interpret,
+    )
+    return dY_b[:E], jnp.swapaxes(dh_b[:E], 1, 2), dR_b[:E]
+
+
+def _tp_bwd_op_fwd(spec, block_e, interpret, g, Y, h_send, R):
+    return _tp_bwd_op(spec, block_e, interpret, g, Y, h_send, R), (
+        g, Y, h_send, R,
+    )
+
+
+def _tp_bwd_op_bwd(spec, block_e, interpret, res, ct):
+    g, Y, h_send, R = res
+    tables = build_tp_tables(spec)
+
+    def bwd_xla(gg, y, h, r):
+        _, vjp = jax.vjp(
+            lambda yy, hh, rr: tp_fused(yy, hh, rr, spec, tables), y, h, r
+        )
+        return vjp(gg)
+
+    _, vjp2 = jax.vjp(bwd_xla, g, Y, h_send, R)
+    return vjp2(tuple(ct))
+
+
+_tp_bwd_op.defvjp(_tp_bwd_op_fwd, _tp_bwd_op_bwd)
+
+
+def _tp_op_bwd(spec, block_e, interpret, res, g):
+    Y, h_send, R = res
+    return _tp_bwd_op(spec, block_e, interpret, g, Y, h_send, R)
+
+
+_tp_op.defvjp(_tp_op_fwd, _tp_op_bwd)
 
 
 def tp_pallas(
@@ -59,31 +173,33 @@ def tp_pallas(
     block_e: int = 128,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """TP-only drop-in for ``tp_fused`` (identity 'scatter': each edge is its
-    own segment).  The fully fused variant is ``interaction_pallas_op``."""
-    t = tables if tables is not None else build_tp_tables(spec)
-    E = h_send.shape[0]
-    pad = (-E) % block_e
-    Y_b = jnp.pad(Y, ((0, pad), (0, 0)))
-    h_b = jnp.pad(jnp.swapaxes(h_send, 1, 2), ((0, pad), (0, 0), (0, 0)))
-    R_b = jnp.pad(R, ((0, pad), (0, 0), (0, 0)))  # [E_p, n_paths, k] (k-minor)
-    E_p = E + pad
-    # one "atom" tile per edge block; local receiver = position in block
-    n_tiles = E_p // block_e
-    lr = jnp.tile(jnp.arange(block_e, dtype=jnp.int32), n_tiles)[:, None]
-    em = jnp.ones((E_p, 1), h_b.dtype)
-
-    A_t = tp_scatter_pallas_raw(
-        Y_b, h_b, R_b, lr, em, spec, t,
-        n_atom_tiles=n_tiles, block_n=block_e, block_e=block_e,
-        interpret=interpret,
-    )                                             # [E_p, d_out, k]
-    return jnp.swapaxes(A_t, 1, 2)[:E]
+    """TP-only drop-in for ``tp_fused``; forward *and* backward are Pallas
+    kernels (the backward via the identity-blocked ``tp_bwd_pallas_raw``).
+    The fully fused variant is ``interaction_pallas_op``."""
+    # the custom_vjp core always binds the canonical lru-cached tables (it
+    # cannot close over an unhashable argument), so a caller-supplied
+    # substitute would be silently ignored — reject anything non-canonical
+    if tables is not None and tables is not build_tp_tables(spec):
+        raise ValueError(
+            "tp_pallas cannot bind non-canonical TPTables; pass tables=None "
+            "(build_tp_tables(spec) is lru-cached and used internally)"
+        )
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    return _tp_op(spec, block_e, bool(interpret), Y, h_send, R)
 
 
 # ---------------------------------------------------------------------------
 # fused interaction (TP + scatter) over pre-blocked edges
 # ---------------------------------------------------------------------------
+
+
+def _tile_rows(base: jnp.ndarray, block_n: int) -> jnp.ndarray:
+    """[T*block_n] atom row per tile row (bases repeat for hub/overflow
+    tiles; padding tiles point at the trash rows >= n_atoms)."""
+    return (
+        base[:, None] + jnp.arange(block_n, dtype=base.dtype)
+    ).reshape(-1)
 
 
 def _blocked_forward(spec, interpret, Y, h_node, R, senders, receivers,
@@ -111,9 +227,90 @@ def _blocked_forward(spec, interpret, Y, h_node, R, senders, receivers,
     )                                             # [T*block_n, d_out, k]
     # fold virtual tiles back onto atom rows: tiny [T*block_n] segment-add
     # (tile bases may repeat for hub atoms / overflow tiles)
-    rows = (base[:, None] + jnp.arange(spec.block_n, dtype=base.dtype)).reshape(-1)
+    rows = _tile_rows(base, spec.block_n)
     A = jax.ops.segment_sum(A_t, rows, n_atoms + spec.block_n)[:n_atoms]
     return jnp.swapaxes(A, 1, 2) / spec.avg_num_neighbors
+
+
+def _float0(a):
+    return np.zeros(a.shape, jax.dtypes.float0)
+
+
+def _interaction_bwd_second_order(spec, res, ct):
+    """Shared derivative rule for both interaction backward ops: grad-of-
+    grad goes through ``jax.vjp`` of the fused-XLA formulation's VJP (the
+    numerically-equivalent twin of the backward kernels); integer/bool
+    operands get float0 cotangents."""
+    g, Y, h_node, R, senders, receivers, edge_mask = res[:7]
+
+    def bwd_xla(gg, y, h, r):
+        _, vjp = jax.vjp(
+            lambda yy, hh, rr: interaction_fused(
+                yy, hh, rr, senders, receivers, edge_mask, spec=spec
+            ),
+            y, h, r,
+        )
+        return vjp(gg)
+
+    _, vjp2 = jax.vjp(bwd_xla, g, Y, h_node, R)
+    return vjp2(tuple(ct)) + tuple(_float0(a) for a in res[4:])
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _blocked_bwd_op(spec, interpret, g, Y, h_node, R, senders, receivers,
+                    edge_mask, perm, valid, local, base):
+    """Dedicated Pallas backward for the blocked forward: the adjoint of the
+    virtual-tile fold is a gather of cotangent rows into tile layout, the
+    kernel does gather(one-hot^T) + TP-transpose per edge slot, and the
+    adjoints of the host-side blocking gathers are scatter-adds.  A closed
+    custom_vjp op so higher-order autodiff never linearizes the kernel."""
+    del receivers, edge_mask
+    T = base.shape[0]
+    epb = perm.shape[0] // T
+    t = build_tp_tables(spec.tp)
+    n_atoms = h_node.shape[0]
+    send_b = senders[perm]
+    Y_b = Y[perm]
+    h_b = jnp.swapaxes(h_node[send_b], 1, 2)
+    R_b = R[perm]
+    lr = local[:, None]
+    em = valid.astype(h_b.dtype)[:, None]
+
+    # adjoint of (swapaxes -> /avg -> segment_sum over tile rows): gather
+    # the per-atom cotangent back into tile layout (trash rows read zeros)
+    gt = jnp.swapaxes(g, 1, 2) / spec.avg_num_neighbors   # [N, d_out, k]
+    gpad = jnp.concatenate(
+        [gt, jnp.zeros((spec.block_n,) + gt.shape[1:], gt.dtype)]
+    )
+    G_t = gpad[_tile_rows(base, spec.block_n)]            # [T*block_n, d_out, k]
+
+    dY_b, dh_b, dR_b = tp_bwd_pallas_raw(
+        G_t, Y_b, h_b, R_b, lr, em, spec.tp, t,
+        n_atom_tiles=T, block_n=spec.block_n, block_e=epb,
+        interpret=interpret,
+    )
+    # un-permute: valid slots are a permutation of the valid edge ids and
+    # masked slots already carry exact zeros (em gates the gather), so the
+    # scatter-add is exact — padding slots only ever add zeros to edge 0
+    dY = jnp.zeros_like(Y).at[perm].add(dY_b)
+    dR = jnp.zeros_like(R).at[perm].add(dR_b)
+    dh = jnp.swapaxes(jax.ops.segment_sum(dh_b, send_b, n_atoms), 1, 2)
+    return dY, dh, dR
+
+
+def _blocked_bwd_op_fwd(spec, interpret, *args):
+    return _blocked_bwd_op(spec, interpret, *args), args
+
+
+def _blocked_bwd_op_bwd(spec, interpret, res, ct):
+    return _interaction_bwd_second_order(spec, res, ct)
+
+
+_blocked_bwd_op.defvjp(_blocked_bwd_op_fwd, _blocked_bwd_op_bwd)
+
+
+def _blocked_backward(spec, interpret, res, g):
+    return _blocked_bwd_op(spec, interpret, g, *res)
 
 
 def _unblocked_forward(spec, interpret, Y, h_node, R, senders,
@@ -125,15 +322,57 @@ def _unblocked_forward(spec, interpret, Y, h_node, R, senders,
     )
 
 
-def _float0(a):
-    return np.zeros(a.shape, jax.dtypes.float0)
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _unblocked_bwd_op(spec, interpret, g, Y, h_node, R, senders, receivers,
+                      edge_mask):
+    """Pallas backward for the fallback path: the adjoint of the XLA
+    segment-sum is a receiver gather, then the identity-blocked TP-transpose
+    kernel, then the sender segment-sum adjoint of the edge gather."""
+    E = Y.shape[0]
+    n_atoms = h_node.shape[0]
+    gmsg = (
+        g[receivers]
+        * edge_mask.astype(g.dtype)[:, None, None]
+        / spec.avg_num_neighbors
+    )                                                     # [E, k, d_out]
+    block_e = 128
+    Y_b, h_b, R_b, E_p = _block_edge_operands(Y, h_node[senders], R, block_e)
+    n_tiles, lr, em = _identity_blocking(E_p, block_e, h_b.dtype)
+    G_t = jnp.pad(jnp.swapaxes(gmsg, 1, 2), ((0, E_p - E), (0, 0), (0, 0)))
+    dY_b, dh_b, dR_b = tp_bwd_pallas_raw(
+        G_t, Y_b, h_b, R_b, lr, em, spec.tp, build_tp_tables(spec.tp),
+        n_atom_tiles=n_tiles, block_n=block_e, block_e=block_e,
+        interpret=interpret,
+    )
+    dh = jnp.swapaxes(
+        jax.ops.segment_sum(dh_b[:E], senders, n_atoms), 1, 2
+    )
+    return dY_b[:E], dh, dR_b[:E]
 
 
-def _make_pallas_interaction_op(forward):
+def _unblocked_bwd_op_fwd(spec, interpret, *args):
+    return _unblocked_bwd_op(spec, interpret, *args), args
+
+
+def _unblocked_bwd_op_bwd(spec, interpret, res, ct):
+    return _interaction_bwd_second_order(spec, res, ct)
+
+
+_unblocked_bwd_op.defvjp(_unblocked_bwd_op_fwd, _unblocked_bwd_op_bwd)
+
+
+def _unblocked_backward(spec, interpret, res, g):
+    return _unblocked_bwd_op(spec, interpret, g, *res)
+
+
+def _make_pallas_interaction_op(forward, pallas_backward):
     """Wrap a pallas forward ``(spec, interpret, Y, h_node, R, senders,
-    receivers, edge_mask, *blocking_arrays)`` in a ``jax.custom_vjp`` whose
-    backward is the VJP of the numerically-equivalent ``interaction_fused``
-    formulation; integer/bool operands get float0 cotangents."""
+    receivers, edge_mask, *blocking_arrays)`` in a ``jax.custom_vjp``.
+
+    The backward dispatches on ``spec.bwd_impl``: ``"pallas"`` runs the
+    dedicated gather + TP-transpose kernel (``pallas_backward``); ``"xla"``
+    retains the VJP of the numerically-equivalent ``interaction_fused``
+    formulation.  Integer/bool operands get float0 cotangents either way."""
 
     @partial(jax.custom_vjp, nondiff_argnums=(0, 1))
     def op(spec, interpret, Y, h_node, R, *ints):
@@ -143,21 +382,27 @@ def _make_pallas_interaction_op(forward):
         return op(spec, interpret, Y, h_node, R, *ints), (Y, h_node, R) + ints
 
     def bwd(spec, interpret, res, g):
-        Y, h_node, R, senders, receivers, edge_mask = res[:6]
-        _, vjp = jax.vjp(
-            lambda y, h, r: interaction_fused(
-                y, h, r, senders, receivers, edge_mask, spec=spec
-            ),
-            Y, h_node, R,
-        )
-        return vjp(g) + tuple(_float0(a) for a in res[3:])
+        if spec.bwd_impl == "pallas":
+            grads = pallas_backward(spec, interpret, res, g)
+        else:
+            Y, h_node, R, senders, receivers, edge_mask = res[:6]
+            _, vjp = jax.vjp(
+                lambda y, h, r: interaction_fused(
+                    y, h, r, senders, receivers, edge_mask, spec=spec
+                ),
+                Y, h_node, R,
+            )
+            grads = vjp(g)
+        return tuple(grads) + tuple(_float0(a) for a in res[3:])
 
     op.defvjp(fwd, bwd)
     return op
 
 
-_blocked_op = _make_pallas_interaction_op(_blocked_forward)
-_unblocked_op = _make_pallas_interaction_op(_unblocked_forward)
+_blocked_op = _make_pallas_interaction_op(_blocked_forward, _blocked_backward)
+_unblocked_op = _make_pallas_interaction_op(
+    _unblocked_forward, _unblocked_backward
+)
 
 
 def interaction_pallas_op(

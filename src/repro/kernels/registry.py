@@ -35,11 +35,27 @@ Capability metadata (``platforms``, ``needs_tables``) lets callers filter:
 ``available("symcon", platform="cpu")`` returns impl names expected to run
 on the current backend (``pallas`` runs on CPU only in interpret mode and is
 tagged accordingly).
+
+Backward-pass capability: ``has_custom_bwd`` marks impls that carry a
+``jax.custom_vjp`` with a hand-written backward (the built-in pallas impls
+ship dedicated backward kernels).  ``capabilities()`` reports the full
+metadata table, ``available(..., with_custom_bwd=True)`` filters on it, the
+execution engines consult it for the shard_map ``check_rep`` gating (a
+hand-written backward traces a ``pallas_call`` in the bwd too), and
+``resolve`` *guards* the gap it would otherwise hide: differentiating a
+compiled Pallas forward that has no custom VJP raises a clear
+``NotImplementedError`` naming the impl instead of an opaque
+missing-transpose-rule failure (or a silent XLA fallthrough).  Off-platform
+(interpret-mode) bindings stay freely differentiable — interpret kernels
+are jax-traceable.
 """
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
 
 # Kernel kinds understood by the registry.  ``KIND_ALIASES`` maps shorthand
 # used by configs/CLI to the canonical kind name.
@@ -72,6 +88,10 @@ class KernelImpl:
     # impl traces a ``pallas_call`` (no shard_map replication rule: engines
     # must drop ``check_rep`` when such an impl is selected)
     uses_pallas: bool = False
+    # impl carries a jax.custom_vjp with a hand-written backward; compiled
+    # pallas impls WITHOUT one cannot be differentiated (resolve() wraps
+    # them with a clear-error guard on their native platforms)
+    has_custom_bwd: bool = False
     description: str = ""
 
     def supports(self, platform: str) -> bool:
@@ -101,6 +121,7 @@ def register(
     interpret_only_on: Tuple[str, ...] = (),
     consumes_blocking: bool = False,
     uses_pallas: bool = False,
+    has_custom_bwd: bool = False,
     description: str = "",
     overwrite: bool = False,
 ) -> Callable[[Builder], Builder]:
@@ -115,7 +136,7 @@ def register(
             kind=kind, name=name, builder=builder, needs_tables=needs_tables,
             platforms=platforms, interpret_only_on=interpret_only_on,
             consumes_blocking=consumes_blocking, uses_pallas=uses_pallas,
-            description=description,
+            has_custom_bwd=has_custom_bwd, description=description,
         )
         # a re-registration invalidates stale bindings
         for k in [k for k in _BIND_CACHE if k[0] == kind and k[1] == name]:
@@ -143,22 +164,102 @@ def get_impl(kind: str, name: str) -> KernelImpl:
         ) from None
 
 
-def available(kind: str, platform: Optional[str] = None) -> List[str]:
+def available(
+    kind: str,
+    platform: Optional[str] = None,
+    *,
+    with_custom_bwd: Optional[bool] = None,
+) -> List[str]:
+    """Impl names for ``kind``, optionally filtered by platform support and
+    by backward capability (``with_custom_bwd=True`` keeps only impls whose
+    backward is a hand-written custom VJP — the training-safe set on
+    compiled accelerators)."""
     kind = canonical_kind(kind)
     out = []
     for (k, n), impl in sorted(_REGISTRY.items()):
-        if k == kind and (platform is None or impl.supports(platform)):
-            out.append(n)
+        if k != kind:
+            continue
+        if platform is not None and not impl.supports(platform):
+            continue
+        if with_custom_bwd is not None and impl.has_custom_bwd != with_custom_bwd:
+            continue
+        out.append(n)
     return out
 
 
+def capabilities(kind: str, name: Optional[str] = None) -> Dict[str, Dict]:
+    """Capability-metadata table for ``kind``: {name: {field: value}}.
+
+    Everything a caller can filter on (``platforms``, ``interpret_only_on``,
+    ``needs_tables``, ``consumes_blocking``, ``uses_pallas``,
+    ``has_custom_bwd``, ``description``) — the builder itself is omitted.
+    Pass ``name`` to restrict to one impl (KeyError if unknown)."""
+    kind = canonical_kind(kind)
+    impls = (
+        {name: get_impl(kind, name)}
+        if name is not None
+        else {n: i for (k, n), i in sorted(_REGISTRY.items()) if k == kind}
+    )
+    return {
+        n: {
+            f.name: getattr(impl, f.name)
+            for f in dataclasses.fields(KernelImpl)
+            if f.name not in ("kind", "name", "builder")
+        }
+        for n, impl in impls.items()
+    }
+
+
+def _missing_bwd_guard(fn: Callable, impl: KernelImpl) -> Callable:
+    """Wrap a compiled-pallas binding without a custom VJP so differentiating
+    it raises a clear error (instead of an opaque Mosaic/transpose failure
+    deep inside autodiff, or a silent fall-through to an XLA formulation the
+    caller never selected).  Forward-only use is untouched."""
+    message = (
+        f"kernel {impl.kind}/{impl.name} is a compiled Pallas forward with "
+        f"no hand-written backward (has_custom_bwd=False) and cannot be "
+        f"differentiated on this platform; select an impl from "
+        f"available({impl.kind!r}, with_custom_bwd=True) for training, or "
+        f"register a custom VJP for it"
+    )
+
+    def wrapped(*args, **kwargs):
+        inner = partial(fn, **kwargs)
+
+        @jax.custom_vjp
+        def core(*a):
+            return inner(*a)
+
+        def fwd(*a):
+            return core(*a), None
+
+        def bwd(_res, _g):
+            raise NotImplementedError(message)
+
+        core.defvjp(fwd, bwd)
+        return core(*args)
+
+    return wrapped
+
+
 def resolve(kind: str, name: str, spec: Any) -> Callable:
-    """Bind impl ``name`` to ``spec``; memoised per (kind, name, spec)."""
+    """Bind impl ``name`` to ``spec``; memoised per (kind, name, spec).
+
+    Compiled-pallas impls without a custom VJP come back wrapped in a
+    differentiation guard (see ``_missing_bwd_guard``); interpret-mode
+    bindings are left bare since interpret kernels differentiate fine."""
     kind = canonical_kind(kind)
     key = (kind, name, spec)
     fn = _BIND_CACHE.get(key)
     if fn is None:
-        fn = get_impl(kind, name).builder(spec)
+        impl = get_impl(kind, name)
+        fn = impl.builder(spec)
+        if (
+            impl.uses_pallas
+            and not impl.has_custom_bwd
+            and jax.default_backend() in impl.platforms
+        ):
+            fn = _missing_bwd_guard(fn, impl)
         _BIND_CACHE[key] = fn
     return fn
 
@@ -188,15 +289,16 @@ def _tp_fused_builder(spec):
 
 
 @register(KIND_TP, "pallas", needs_tables=True, platforms=("tpu",),
-          interpret_only_on=("cpu",), uses_pallas=True,
-          description="Pallas TPU kernel (interpret mode off-TPU)")
+          interpret_only_on=("cpu",), uses_pallas=True, has_custom_bwd=True,
+          description="Pallas TPU kernel, fwd+bwd (interpret mode off-TPU)")
 def _tp_pallas_builder(spec):
     from functools import partial
 
     from repro.core.channelwise_tp import build_tp_tables
     from repro.kernels.channelwise_tp.ops import tp_pallas
 
-    return partial(tp_pallas, spec=spec, tables=build_tp_tables(spec))
+    build_tp_tables(spec)  # warm the table cache at bind time
+    return partial(tp_pallas, spec=spec)
 
 
 @register(KIND_SYMCON, "ref", description="nu-fold dense-CG chain (oracle)")
@@ -219,15 +321,16 @@ def _symcon_fused_builder(spec):
 
 
 @register(KIND_SYMCON, "pallas", needs_tables=True, platforms=("tpu",),
-          interpret_only_on=("cpu",), uses_pallas=True,
-          description="Pallas TPU kernel (interpret mode off-TPU)")
+          interpret_only_on=("cpu",), uses_pallas=True, has_custom_bwd=True,
+          description="Pallas TPU kernel, fwd+bwd (interpret mode off-TPU)")
 def _symcon_pallas_builder(spec):
     from functools import partial
 
     from repro.core.symmetric_contraction import build_symcon_tables
     from repro.kernels.symmetric_contraction.ops import symcon_pallas
 
-    return partial(symcon_pallas, spec=spec, tables=build_symcon_tables(spec))
+    build_symcon_tables(spec)  # warm the table cache at bind time
+    return partial(symcon_pallas, spec=spec)
 
 
 # --- interaction: TP + receiver scatter + neighbor norm as one op ----------
@@ -259,9 +362,11 @@ def _interaction_fused_builder(spec):
 
 @register(KIND_INTERACTION, "pallas", needs_tables=True, platforms=("tpu",),
           interpret_only_on=("cpu",), consumes_blocking=True,
-          uses_pallas=True,
-          description="fused TP+scatter kernel over pre-blocked edges "
-                      "(TP-only kernel + segment_sum when blocking absent)")
+          uses_pallas=True, has_custom_bwd=True,
+          description="fused TP+scatter kernel over pre-blocked edges, "
+                      "backward = blocked gather + TP-transpose kernel "
+                      "(TP-only kernel + segment_sum when blocking absent; "
+                      "bwd_impl knob selects the XLA backward)")
 def _interaction_pallas_builder(spec):
     from functools import partial
 

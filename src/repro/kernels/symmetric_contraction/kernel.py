@@ -17,6 +17,21 @@ TPU adaptation of the paper's CUDA design (Listing 1):
 
 Layout: A [N, d_in, k], W [N, P_total, k] (species-gathered, terms
 concatenated along the path axis), out [N, d_out, k]; k minor ( = lanes).
+
+Backward (``symcon_bwd_pallas_raw``): the paper optimizes this contraction
+*for training*, so the backward pass is a dedicated kernel too — not XLA
+tracing through the forward.  Given the upstream cotangent G = dL/dB and the
+saved ``(A_t, W_t)`` residuals, each unrolled ``(eta, M)`` group's product
+rule is another structurally-sparse FMA sweep over the same
+``[block_n, ., k]`` VMEM tiles (the CG nonzero tables are reused verbatim):
+
+    dW[., eta, :]  = G[., M, :] * sum_ents val * prod_x A[., m_x, :]
+    dA[., m_x, :] += G[., M, :] * W[., eta, :] * val * prod_{y!=x} A[., m_y, :]
+
+Both cotangents accumulate in VREG lists indexed by the (compile-time) input
+row and are written to VMEM once per tile, mirroring the forward's
+no-intermediate-HBM-traffic contract.  ``ops.py`` exposes the pair through
+``jax.custom_vjp``.
 """
 from __future__ import annotations
 
@@ -100,6 +115,121 @@ def symcon_pallas_raw(
         out_shape=jax.ShapeDtypeStruct((N, d_out, k), A_t.dtype),
         interpret=interpret,
     )(A_t, W_t)
+
+
+def symcon_xla_raw(
+    A_t: jnp.ndarray, W_t: jnp.ndarray, spec: SymConSpec, tables: SymConTables
+) -> jnp.ndarray:
+    """Pure-jnp twin of ``_symcon_kernel`` in kernel layout ([N, d, k]).
+
+    Exists for *second-order* autodiff: the backward kernel's own
+    ``custom_vjp`` routes grad-of-grad (forces inside the training loss)
+    through ``jax.vjp`` of this function — ``pallas_call`` has no JVP rule,
+    so autodiff must never be asked to linearize a kernel."""
+    groups, p_total = _group_entries(spec, tables)
+    assert W_t.shape[1] == p_total, (W_t.shape, p_total)
+    N, _, k = A_t.shape
+    cols = [None] * spec.out_spec.dim
+    for (w_idx, out_idx, nu, _, ents) in groups:
+        s = None
+        for (idx, val) in ents:
+            t = A_t[:, idx[0], :]
+            for x in range(1, nu):
+                t = t * A_t[:, idx[x], :]
+            term = t * val
+            s = term if s is None else s + term
+        c = W_t[:, w_idx, :] * s
+        cols[out_idx] = c if cols[out_idx] is None else cols[out_idx] + c
+    zeros = jnp.zeros((N, k), A_t.dtype)
+    return jnp.stack(
+        [c if c is not None else zeros for c in cols], axis=1
+    )
+
+
+def _symcon_bwd_kernel(a_ref, w_ref, g_ref, da_ref, dw_ref, *, groups):
+    """Backward tile sweep: dA and dW from (A, W, G) over the same groups.
+
+    Cotangents accumulate per compile-time row index in VREGs (``da``/``dw``
+    lists) and hit VMEM exactly once per tile.
+    """
+    d_in = a_ref.shape[1]
+    p_total = w_ref.shape[1]
+    da = [None] * d_in
+    dw = [None] * p_total
+
+    def acc(buf, i, v):
+        buf[i] = v if buf[i] is None else buf[i] + v
+
+    for (w_idx, out_idx, nu, _, ents) in groups:
+        g = g_ref[:, out_idx, :]
+        gw = g * w_ref[:, w_idx, :]
+        s = None
+        for (idx, val) in ents:
+            # forward product (re-derived from the saved A residual) -> dW
+            t = a_ref[:, idx[0], :]
+            for x in range(1, nu):
+                t = t * a_ref[:, idx[x], :]
+            term = t * val
+            s = term if s is None else s + term
+            # product rule -> dA: drop factor x, keep the other nu-1
+            for x in range(nu):
+                p = None
+                for y in range(nu):
+                    if y == x:
+                        continue
+                    ay = a_ref[:, idx[y], :]
+                    p = ay if p is None else p * ay
+                acc(da, idx[x], gw * val if p is None else gw * (p * val))
+        # several (eta, M) groups may share eta (same weight row, different
+        # output row): accumulate, don't overwrite
+        acc(dw, w_idx, g * s)
+
+    zeros = jnp.zeros((a_ref.shape[0], a_ref.shape[2]), dtype=da_ref.dtype)
+    for m in range(d_in):
+        da_ref[:, m, :] = zeros if da[m] is None else da[m]
+    for p in range(p_total):
+        dw_ref[:, p, :] = zeros if dw[p] is None else dw[p]
+
+
+def symcon_bwd_pallas_raw(
+    A_t: jnp.ndarray,          # [N, d_in, k]
+    W_t: jnp.ndarray,          # [N, P_total, k]
+    G_t: jnp.ndarray,          # [N, d_out, k]  cotangent of the output
+    spec: SymConSpec,
+    tables: SymConTables,
+    *,
+    block_n: int = 32,
+    interpret: bool | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns ``(dA_t [N, d_in, k], dW_t [N, P_total, k])``."""
+    N, d_in, k = A_t.shape
+    assert N % block_n == 0, (N, block_n)
+    groups, p_total = _group_entries(spec, tables)
+    assert W_t.shape[1] == p_total, (W_t.shape, p_total)
+    d_out = spec.out_spec.dim
+    assert G_t.shape == (N, d_out, k), (G_t.shape, (N, d_out, k))
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+
+    kern = functools.partial(_symcon_bwd_kernel, groups=groups)
+    return pl.pallas_call(
+        kern,
+        grid=(N // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, d_in, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_n, p_total, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_n, d_out, k), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, d_in, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_n, p_total, k), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, d_in, k), A_t.dtype),
+            jax.ShapeDtypeStruct((N, p_total, k), W_t.dtype),
+        ],
+        interpret=interpret,
+    )(A_t, W_t, G_t)
 
 
 def gather_weights(

@@ -3,16 +3,108 @@
 Handles layout (model uses [N, k, d]; kernel wants k minor), atom-tile
 padding, and species->weight gathering.  Drop-in replacement for
 ``symcon_fused`` / ``symcon_ref`` (same signature modulo static args).
+
+Differentiation contract
+------------------------
+``symcon_pallas`` carries a ``jax.custom_vjp`` whose backward is the
+dedicated Pallas kernel of ``kernel.symcon_bwd_pallas_raw`` — training does
+not trace autodiff through the forward ``pallas_call`` (which only works in
+interpret mode and is slow compiled).  The VJP boundary sits at the
+kernel-layout core ``(A_t, W_t) -> B_t``:
+
+* saved residuals are exactly ``(A_t, W_t)`` — the kernel's own inputs, no
+  per-group intermediates ever hit HBM (the backward re-derives the sparse
+  products from ``A_t`` in VMEM);
+* the surrounding species->weight gather, term concat, transposes and atom
+  padding are plain XLA and differentiate normally, so ``dW_t`` flows back
+  through the gather into the per-``(L, nu)`` weight dicts (a segment-add
+  over species) with no custom code.
+
+The registry advertises this as ``has_custom_bwd`` capability metadata
+(``kernels.registry``).  Second-order differentiation (forces inside the
+training loss make every training step a grad-of-grad) must never linearize
+a ``pallas_call`` — there is no JVP rule for it — so the backward kernel is
+*itself* a ``custom_vjp`` op whose derivative rule is ``jax.vjp`` of the
+pure-jnp twin ``kernel.symcon_xla_raw``: first-order backward = hand-written
+kernel, second and higher orders = the XLA formulation of the same math.
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import Dict
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.symmetric_contraction import SymConSpec, SymConTables, build_symcon_tables
 
-from .kernel import gather_weights, symcon_pallas_raw
+from .kernel import (
+    gather_weights,
+    symcon_bwd_pallas_raw,
+    symcon_pallas_raw,
+    symcon_xla_raw,
+)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _symcon_bwd_op(spec: SymConSpec, block_n: int, interpret: bool,
+                   A_t: jnp.ndarray, W_t: jnp.ndarray, G_t: jnp.ndarray):
+    """First-order backward as a closed op: the Pallas backward kernel,
+    shielded from linearization by its own custom_vjp (see module
+    docstring)."""
+    return symcon_bwd_pallas_raw(
+        A_t, W_t, G_t, spec, build_symcon_tables(spec),
+        block_n=block_n, interpret=interpret,
+    )
+
+
+def _symcon_bwd_op_fwd(spec, block_n, interpret, A_t, W_t, G_t):
+    return _symcon_bwd_op(spec, block_n, interpret, A_t, W_t, G_t), (
+        A_t, W_t, G_t,
+    )
+
+
+def _symcon_bwd_op_bwd(spec, block_n, interpret, res, ct):
+    """Second-order rule: differentiate the XLA twin of the backward (the
+    VJP of ``symcon_xla_raw``), numerically equal to the kernel."""
+    A_t, W_t, G_t = res
+    tables = build_symcon_tables(spec)
+
+    def bwd_xla(a, w, g):
+        _, vjp = jax.vjp(lambda aa, ww: symcon_xla_raw(aa, ww, spec, tables),
+                         a, w)
+        return vjp(g)
+
+    _, vjp2 = jax.vjp(bwd_xla, A_t, W_t, G_t)
+    return vjp2(tuple(ct))
+
+
+_symcon_bwd_op.defvjp(_symcon_bwd_op_fwd, _symcon_bwd_op_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _symcon_op(spec: SymConSpec, block_n: int, interpret: bool,
+               A_t: jnp.ndarray, W_t: jnp.ndarray) -> jnp.ndarray:
+    """Kernel-layout core op: ``(A_t [N,d_in,k], W_t [N,P,k]) -> B_t``.
+
+    Always binds the canonical ``build_symcon_tables(spec)`` (lru-cached, so
+    this is the same object every impl shares)."""
+    return symcon_pallas_raw(
+        A_t, W_t, spec, build_symcon_tables(spec),
+        block_n=block_n, interpret=interpret,
+    )
+
+
+def _symcon_op_fwd(spec, block_n, interpret, A_t, W_t):
+    return _symcon_op(spec, block_n, interpret, A_t, W_t), (A_t, W_t)
+
+
+def _symcon_op_bwd(spec, block_n, interpret, res, g):
+    A_t, W_t = res
+    return _symcon_bwd_op(spec, block_n, interpret, A_t, W_t, g)
+
+
+_symcon_op.defvjp(_symcon_op_fwd, _symcon_op_bwd)
 
 
 def symcon_pallas(
@@ -25,7 +117,16 @@ def symcon_pallas(
     block_n: int = 32,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    t = tables or build_symcon_tables(spec)
+    # the custom_vjp core always binds the canonical lru-cached tables, and
+    # the weight gather's term order must match the kernel's group order —
+    # reject a non-canonical substitute instead of mixing layouts silently
+    t = build_symcon_tables(spec)
+    if tables is not None and tables is not t:
+        raise ValueError(
+            "symcon_pallas cannot bind non-canonical SymConTables; pass "
+            "tables=None (build_symcon_tables(spec) is lru-cached and used "
+            "internally)"
+        )
     N, k, d_in = A.shape
     pad = (-N) % block_n
     Wg = gather_weights(weights, species, spec, t)  # [N, k, P]
@@ -36,9 +137,10 @@ def symcon_pallas(
         A_t = jnp.pad(A_t, ((0, pad), (0, 0), (0, 0)))
         W_t = jnp.pad(W_t, ((0, pad), (0, 0), (0, 0)))
 
-    B_t = symcon_pallas_raw(
-        A_t, W_t, spec, t, block_n=block_n, interpret=interpret
-    )                                               # [N+pad, d_out, k]
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    B_t = _symcon_op(spec, block_n, bool(interpret), A_t, W_t)
+    # [N+pad, d_out, k]
     if pad:
         B_t = B_t[:N]
     return jnp.swapaxes(B_t, 1, 2)                  # [N, k, d_out]

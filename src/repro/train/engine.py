@@ -68,11 +68,33 @@ is the same code path run inline), and tests/test_engine.py's equivalence
 harness proves prefetched training bit-streams the same batches and reaches
 allclose params vs. the non-prefetched sequential oracle.
 
+Kernel backward passes
+----------------------
+Since the engine step is value-and-grad, ~2/3 of its FLOPs are backward.
+The registered Pallas impls carry hand-written backward kernels via
+``jax.custom_vjp`` (registry capability ``has_custom_bwd``): the symmetric
+contraction saves only its own ``(A_t, W_t)`` kernel inputs as residuals
+and re-derives the sparse products on-chip, and the fused interaction saves
+``(Y, h_node, R)`` plus the integer operands and blocking arrays — never a
+per-edge ``[E, k, d_out]`` message tensor or any blocked copy (the backward
+re-gathers blocked operands from the residuals exactly like the forward
+does).  ``MaceConfig.interaction_bwd_impl`` / ``TrainerConfig.
+interaction_bwd_impl`` select ``"pallas"`` (the dedicated backward kernel,
+default) or ``"xla"`` (the fused formulation's VJP — the fallback for
+capability-gated platforms and for second-order autodiff on compiled
+backends).  The shard_map ``check_rep`` gating consults both
+``uses_pallas`` and ``has_custom_bwd`` (a hand-written backward traces a
+``pallas_call`` inside the grad).
+
 Telemetry
 ---------
 Each engine records a ``RankTelemetry``: per-step per-rank wall seconds
 (sequential; shard_map reports the lock-step wall time) and per-rank loads
-(real atoms per bin).  ``RankTelemetry.straggler_matrix()`` feeds
+(real atoms per bin).  Telemetry is per engine *generation*: an elastic
+rescale closes the engine and its telemetry with it, so the trainer keeps
+the closed generations and ``RankTelemetry.merged(*generations)``
+(``Trainer.telemetry``) provides the whole-run view — ``bench_scaling
+--measure-steps`` calibration spans rescale events through it.  ``RankTelemetry.straggler_matrix()`` feeds
 ``core.binpack.balance_metrics(..., measured_work=...)`` so the straggler
 ratio in the scaling benchmarks comes from *measured* numbers, not just the
 token-count proxy; pass ``skip=1`` to drop the jit-compiling first step.
@@ -86,7 +108,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from functools import partial
-from typing import Any, Callable, Dict, List, Sequence
+from typing import Any, Callable, Dict, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -256,6 +278,109 @@ class RankTelemetry:
         preprocessing in scaling reports)."""
         return float(np.asarray(self.host_block[skip:], np.float64).sum())
 
+    # --------------------- multi-generation merging ------------------------
+
+    @classmethod
+    def merged(cls, *generations: "RankTelemetry") -> "MergedTelemetry":
+        """Multi-generation view over the telemetry of several engine
+        *generations* (one per elastic-rescale segment, oldest first).
+
+        Rank counts may differ across generations, so the per-generation
+        time matrices stay separate (``work_matrices`` /
+        ``straggler_matrices``) while every scalar summary — ``c_token``,
+        ``measured_straggler``, host overlap/blocking totals, rescale
+        seconds — aggregates over the whole run.  ``skip`` applies *per
+        generation*: every rescale rebuilds mesh+engine and re-pays the jit
+        compile on its first step, so each generation's warmup is dropped.
+        This is what lets ``bench_scaling --measure-steps`` calibration span
+        rescale events instead of reading only the newest engine's matrix.
+        """
+        if not generations:
+            raise ValueError("merged() needs at least one generation")
+        return MergedTelemetry(tuple(generations))
+
+
+@dataclasses.dataclass(frozen=True)
+class MergedTelemetry:
+    """Read-only aggregate over ``RankTelemetry`` generations (see
+    ``RankTelemetry.merged``).  Exposes the same summary surface minus the
+    single-matrix accessors (rank counts differ across generations)."""
+
+    generations: Tuple["RankTelemetry", ...]
+
+    @property
+    def n_generations(self) -> int:
+        return len(self.generations)
+
+    @property
+    def n_steps(self) -> int:
+        return sum(g.n_steps for g in self.generations)
+
+    def work_matrices(self, skip: int = 0) -> List[np.ndarray]:
+        """One [steps, ranks] wall-seconds matrix per generation."""
+        return [g.work_matrix(skip) for g in self.generations]
+
+    def load_matrices(self, skip: int = 0) -> List[np.ndarray]:
+        return [g.load_matrix(skip) for g in self.generations]
+
+    def straggler_matrices(self, skip: int = 0) -> List[np.ndarray]:
+        """Per-generation straggler work (feed the *matching-rank-count*
+        matrix to ``binpack.balance_metrics(measured_work=...)``)."""
+        return [g.straggler_matrix(skip) for g in self.generations]
+
+    def c_token(self, skip: int = 0) -> float:
+        """Whole-run per-token cost: generation numerators/denominators are
+        summed before dividing, so long generations weigh proportionally
+        (each generation keeps its own lockstep semantics)."""
+        num = den = 0.0
+        for g in self.generations:
+            t, l = g.work_matrix(skip), g.load_matrix(skip)
+            if t.size == 0:
+                continue
+            if g.lockstep:
+                num += float(t[:, 0].sum())
+                den += float(l.max(axis=1).sum())
+            else:
+                num += float(t.sum())
+                den += float(l.sum())
+        return num / max(den, 1.0) if num else 0.0
+
+    def measured_straggler(self, skip: int = 0) -> float:
+        """Step-weighted mean over generations of max/mean rank work."""
+        per_step = []
+        for w in self.straggler_matrices(skip):
+            if w.size:
+                per_step.append(w.max(axis=1) / np.maximum(w.mean(axis=1), 1e-12))
+        if not per_step:
+            return 1.0
+        return float(np.mean(np.concatenate(per_step)))
+
+    def host_matrix(self, skip: int = 0) -> np.ndarray:
+        """[steps, 2] (collate_s, wait_s) concatenated across generations —
+        host telemetry is per-step scalar, so generations stack cleanly."""
+        mats = [g.host_matrix(skip) for g in self.generations]
+        mats = [m for m in mats if m.size]
+        return np.concatenate(mats, axis=0) if mats else np.zeros((0, 2))
+
+    def overlap_seconds(self, skip: int = 0) -> float:
+        return float(sum(g.overlap_seconds(skip) for g in self.generations))
+
+    def overlap_fraction(self, skip: int = 0) -> float:
+        h = self.host_matrix(skip)
+        total = float(h[:, 0].sum()) if h.size else 0.0
+        return self.overlap_seconds(skip) / total if total > 0 else 0.0
+
+    def blocking_seconds(self, skip: int = 0) -> float:
+        return float(sum(g.blocking_seconds(skip) for g in self.generations))
+
+    def rescale_seconds(self) -> tuple:
+        """(total repack seconds, total engine-rebuild seconds)."""
+        rs = [g.rescale_seconds() for g in self.generations]
+        return (
+            float(sum(r for r, _ in rs)),
+            float(sum(b for _, b in rs)),
+        )
+
 
 # ---------------------------------------------------------------------------
 # shared pieces
@@ -317,8 +442,11 @@ def interaction_consumes_blocking(mace_cfg: MaceConfig) -> bool:
 def _uses_pallas(mace_cfg: MaceConfig) -> bool:
     """True when the step function can contain a ``pallas_call`` (which has
     no shard_map replication rule, forcing ``check_rep=False``) — driven by
-    the registry's ``uses_pallas`` capability flag so third-party
-    Pallas-backed impls under any name are covered."""
+    the registry's ``uses_pallas`` AND ``has_custom_bwd`` capability flags:
+    an impl with a hand-written backward traces a ``pallas_call`` in the
+    *backward* too (even if its forward were XLA), and the engine's step is
+    value-and-grad, so either flag disables the replication check.
+    Third-party Pallas-backed impls under any name are covered."""
     selected = (
         ("channelwise_tp", mace_cfg.impl),
         ("symcon", mace_cfg.impl),
@@ -326,10 +454,11 @@ def _uses_pallas(mace_cfg: MaceConfig) -> bool:
     )
     for kind, name in selected:
         try:
-            if registry.get_impl(kind, name).uses_pallas:
-                return True
+            impl = registry.get_impl(kind, name)
         except KeyError:
             continue
+        if impl.uses_pallas or impl.has_custom_bwd:
+            return True
     return False
 
 

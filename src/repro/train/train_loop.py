@@ -58,7 +58,7 @@ from repro.data.molecules import SyntheticCFMDataset
 from repro.data.prefetch import PrefetchPipeline
 from repro.data.sampler import BalancedBatchSampler, FixedCountSampler, SamplerState
 from .checkpoint import latest_step, read_meta, restore_checkpoint, save_checkpoint
-from .engine import make_engine
+from .engine import RankTelemetry, make_engine
 from .optimizer import EMA, adamw, chain, clip_by_global_norm
 
 
@@ -81,6 +81,9 @@ class TrainerConfig:
     # overrides MaceConfig.interaction_impl when set ("ref" | "fused" |
     # "pallas" | registered); None leaves the model config untouched
     interaction_impl: Optional[str] = None
+    # overrides MaceConfig.interaction_bwd_impl when set ("pallas" = the
+    # dedicated backward kernel, "xla" = fused-XLA VJP fallback)
+    interaction_bwd_impl: Optional[str] = None
     # fused-interaction edge blocking tile shape (data.blocking); block_n
     # must match MaceConfig.interaction_block_n when blocking is consumed
     block_n: int = 32
@@ -109,6 +112,10 @@ class Trainer:
         if tcfg.interaction_impl is not None:
             mace_cfg = dataclasses.replace(
                 mace_cfg, interaction_impl=tcfg.interaction_impl
+            )
+        if tcfg.interaction_bwd_impl is not None:
+            mace_cfg = dataclasses.replace(
+                mace_cfg, interaction_bwd_impl=tcfg.interaction_bwd_impl
             )
         self.mace_cfg = mace_cfg
         self.tcfg = tcfg
@@ -162,6 +169,21 @@ class Trainer:
         self.rescale_schedule: Dict[int, int] = {}
         self._lineage: List[Dict[str, int]] = []
         self.rescale_events: List[Dict[str, Any]] = []
+        # telemetry of engines closed by past rescales (oldest first); the
+        # whole-run view is ``self.telemetry``
+        self.telemetry_generations: List[Any] = []
+
+    @property
+    def telemetry(self):
+        """Whole-run telemetry: the live engine's ``RankTelemetry`` when no
+        rescale has happened, else a ``RankTelemetry.merged`` view over
+        every engine generation (closed ones + the live one) so calibration
+        spans rescale events."""
+        if not self.telemetry_generations:
+            return self.engine.telemetry
+        return RankTelemetry.merged(
+            *self.telemetry_generations, self.engine.telemetry
+        )
 
     # -------------------------- fault tolerance ---------------------------
 
@@ -264,6 +286,7 @@ class Trainer:
         repack_s = time.perf_counter() - t0
         self._lineage.append({"n_ranks": old_ranks, "cursor": cursor})
         t1 = time.perf_counter()
+        self.telemetry_generations.append(self.engine.telemetry)
         self.engine.close()
         self.tcfg = dataclasses.replace(self.tcfg, n_ranks=n_ranks)
         self.engine = make_engine(

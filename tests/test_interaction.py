@@ -72,8 +72,10 @@ def test_registry_lists_interaction_impls():
     impl = registry.get_impl("interaction", "pallas")
     assert impl.consumes_blocking and "cpu" in impl.interpret_only_on
     assert impl.uses_pallas  # drives the engine's shard_map check_rep gate
+    assert impl.has_custom_bwd  # dedicated backward kernel (PR 5)
     fused = registry.get_impl("interaction", "fused")
     assert not fused.consumes_blocking and not fused.uses_pallas
+    assert not fused.has_custom_bwd
     # alias: the paper's "TP + scatter" fusion name
     assert registry.canonical_kind("tp_scatter") == "interaction"
 
@@ -102,8 +104,10 @@ def test_interaction_impls_agree_masked_and_empty(edge_keep):
 
 
 def test_interaction_grads_agree_through_pallas_custom_vjp():
-    """d/d(Y, h, R) of the blocked pallas op equals the ref op's grads (the
-    custom_vjp backward is the fused formulation's VJP)."""
+    """d/d(Y, h, R) of the blocked pallas op equals the ref op's grads —
+    through the *dedicated backward kernel* (``bwd_impl="pallas"`` is the
+    spec default; tests/test_backward.py sweeps the bwd_impl matrix)."""
+    assert SPEC.bwd_impl == "pallas"
     E, n_atoms, k = 48, 13, 4
     Y, h, R, senders, receivers, edge_mask = _inputs(
         jax.random.PRNGKey(1), E, n_atoms, k
