@@ -45,7 +45,7 @@ from repro.core.irreps import lspec, sh_spec
 from repro.core.symmetric_contraction import SymConSpec, init_symcon_weights
 from repro.core.channelwise_tp import TPSpec
 from repro.data.blocking import block_edges, blocking_to_batch
-from repro.kernels.registry import capabilities, resolve
+from repro.kernels.registry import KINDS, capabilities, get_impl, resolve
 from repro.roofline.hlo import jaxpr_out_shapes
 
 REPO_ROOT = Path(__file__).resolve().parent.parent
@@ -167,25 +167,32 @@ def _rows_for(kind, impl, params, t_fwd, t_both):
     return rows
 
 
-def bench_matrix(grad=False, quick=False, impls=("ref", "fused", "pallas"),
-                 repeats=5):
-    """Time every (kind, impl) in fwd mode and — with ``grad`` — through
-    ``jax.value_and_grad`` of a scalar loss (the training-shaped fwd+bwd
-    path; pallas impls exercise their hand-written backward kernels).
+def time_impl(kind, impl, *, grad=False, repeats=5, N=None, E=None, k=None,
+              nu=2, block_n=None, block_e=None):
+    """Time one (kind, impl) config at an explicit shape; returns trajectory
+    row dicts.  This is the single timing entry point shared by
+    ``bench_matrix`` (the fixed quick/full tiers) and the autotuner's
+    bounded on-device search (``repro.kernels.autotune.tune``), so every
+    row in ``BENCH_kernels.json`` is produced by the same harness.
 
-    ``quick`` shrinks problem sizes so interpret-mode pallas rows stay
-    cheap (the CI tier).  Returns a list of machine-readable row dicts.
+    ``block_n``/``block_e`` select the tile geometry for blocking-consuming
+    impls (recorded in the row params; ignored otherwise).  For impls with
+    a hand-written backward, ``grad`` additionally times the XLA-twin
+    backward (``params["bwd_impl"] = "xla"``) next to the dedicated kernel
+    (``"pallas"``) — the trajectory carries the tuner's bwd_impl choice.
     """
-    rows = []
+    import dataclasses
 
-    # --- symmetric contraction (Algorithm 3) ---
-    N, k = (64, 8) if quick else (512, 32)
-    spec = SymConSpec(lspec(0, 1, 2, 3), lspec(0, 1), 2)
-    key = jax.random.PRNGKey(0)
-    A = jax.random.normal(key, (N, k, spec.in_spec.dim))
-    species = jax.random.randint(key, (N,), 0, 4)
-    W = init_symcon_weights(key, spec, 4, k)
-    for impl in impls:
+    k = int(k if k is not None else 8)
+    caps = capabilities(kind).get(impl, {})
+
+    if kind in ("symcon", "symmetric_contraction"):
+        N = int(N if N is not None else 64)
+        spec = SymConSpec(lspec(0, 1, 2, 3), lspec(0, 1), int(nu))
+        key = jax.random.PRNGKey(0)
+        A = jax.random.normal(key, (N, k, spec.in_spec.dim))
+        species = jax.random.randint(key, (N,), 0, 4)
+        W = init_symcon_weights(key, spec, 4, k)
         fn = resolve("symcon", impl, spec)
         fwd = jax.jit(lambda A, W, fn=fn: fn(A, species, W))
         vg = None
@@ -197,17 +204,16 @@ def bench_matrix(grad=False, quick=False, impls=("ref", "fused", "pallas"),
         t_fwd, t_both = _time_pair(
             partial(fwd, A, W), partial(vg, A, W) if vg else None, repeats
         )
-        rows += _rows_for("symcon", impl, {"N": N, "k": k, "nu": 2},
-                          t_fwd, t_both)
+        return _rows_for("symcon", impl, {"N": N, "k": k, "nu": int(nu)},
+                         t_fwd, t_both)
 
-    # --- channelwise TP (Algorithm 2) ---
-    E, k = (256, 8) if quick else (2048, 32)
-    tspec = TPSpec(sh_spec(3), lspec(0, 1), lspec(0, 1, 2, 3))
-    key = jax.random.PRNGKey(1)
-    Y = jax.random.normal(key, (E, tspec.y_spec.dim))
-    h = jax.random.normal(key, (E, k, tspec.h_spec.dim))
-    R = jax.random.normal(key, (E, tspec.n_paths, k))
-    for impl in impls:
+    if kind in ("channelwise_tp", "tp"):
+        E = int(E if E is not None else 256)
+        tspec = TPSpec(sh_spec(3), lspec(0, 1), lspec(0, 1, 2, 3))
+        key = jax.random.PRNGKey(1)
+        Y = jax.random.normal(key, (E, tspec.y_spec.dim))
+        h = jax.random.normal(key, (E, k, tspec.h_spec.dim))
+        R = jax.random.normal(key, (E, tspec.n_paths, k))
         fn = resolve("channelwise_tp", impl, tspec)
         fwd = jax.jit(fn)
         vg = None
@@ -220,69 +226,141 @@ def bench_matrix(grad=False, quick=False, impls=("ref", "fused", "pallas"),
             partial(fwd, Y, h, R), partial(vg, Y, h, R) if vg else None,
             repeats,
         )
-        rows += _rows_for("channelwise_tp", impl, {"E": E, "k": k},
-                          t_fwd, t_both)
+        return _rows_for("channelwise_tp", impl, {"E": E, "k": k},
+                         t_fwd, t_both)
 
-    # --- interaction (TP + scatter + /avg, the fused-kernel target) ---
-    E, N, k = (256, 64, 8) if quick else (4096, 512, 32)
-    ispec = InteractionSpec(
-        TPSpec(sh_spec(3), lspec(0, 1), lspec(0, 1, 2, 3)),
-        avg_num_neighbors=12.0,
-    )
-    args = interaction_inputs(E, N, k, ispec)
-    blocking_arrays = None
-    caps = capabilities("interaction")
-    for impl in impls:
-        fn = resolve("interaction", impl, ispec)
-        kwargs = {}
-        if caps.get(impl, {}).get("consumes_blocking"):
-            if blocking_arrays is None:
-                b = block_edges(
-                    np.asarray(args[4]), np.asarray(args[5]), N,
-                    block_n=ispec.block_n,
-                )
-                flat = blocking_to_batch(b)
-                blocking_arrays = {
-                    "perm": jnp.asarray(flat["blk_perm"]),
-                    "valid": jnp.asarray(flat["blk_valid"]),
-                    "local": jnp.asarray(flat["blk_local"]),
-                    "base": jnp.asarray(flat["blk_base"]),
-                }
-            kwargs["blocking"] = blocking_arrays
+    if kind in ("interaction", "tp_scatter"):
+        E = int(E if E is not None else 256)
+        N = int(N if N is not None else 64)
+        blocked = bool(caps.get("consumes_blocking"))
+        bn = int(block_n) if (blocked and block_n) else 32
+        be = int(block_e) if (blocked and block_e) else 128
+        base_spec = InteractionSpec(
+            TPSpec(sh_spec(3), lspec(0, 1), lspec(0, 1, 2, 3)),
+            avg_num_neighbors=12.0, block_n=bn,
+        )
+        args = interaction_inputs(E, N, k, base_spec)
         senders, receivers, edge_mask = args[3], args[4], args[5]
-        fwd = jax.jit(lambda Y, h, R, fn=fn, kw=kwargs: fn(
-            Y, h, R, senders, receivers, edge_mask, **kw))
-        vg = None
-        if grad:
-            vg = jax.jit(jax.value_and_grad(
-                lambda Y, h, R, fn=fn, kw=kwargs: jnp.sum(
-                    fn(Y, h, R, senders, receivers, edge_mask, **kw) ** 2
-                ),
-                argnums=(0, 1, 2),
-            ))
+        kwargs = {}
+        params = {"E": E, "N": N, "k": k, "blocked": blocked}
+        if blocked:
+            b = block_edges(
+                np.asarray(receivers), np.asarray(edge_mask), N,
+                block_n=bn, block_e=be,
+            )
+            flat = blocking_to_batch(b)
+            kwargs["blocking"] = {
+                "perm": jnp.asarray(flat["blk_perm"]),
+                "valid": jnp.asarray(flat["blk_valid"]),
+                "local": jnp.asarray(flat["blk_local"]),
+                "base": jnp.asarray(flat["blk_base"]),
+            }
+            params.update(block_n=bn, block_e=be)
+
+        def build(spec):
+            fn = resolve("interaction", impl, spec)
+            fwd = jax.jit(lambda Y, h, R, fn=fn, kw=kwargs: fn(
+                Y, h, R, senders, receivers, edge_mask, **kw))
+            vg = None
+            if grad:
+                vg = jax.jit(jax.value_and_grad(
+                    lambda Y, h, R, fn=fn, kw=kwargs: jnp.sum(
+                        fn(Y, h, R, senders, receivers, edge_mask, **kw) ** 2
+                    ),
+                    argnums=(0, 1, 2),
+                ))
+            return fwd, vg
+
+        fwd, vg = build(base_spec)
         t_fwd, t_both = _time_pair(
             partial(fwd, *args[:3]),
             partial(vg, *args[:3]) if vg else None, repeats,
         )
-        rows += _rows_for(
-            "interaction", impl,
-            {"E": E, "N": N, "k": k,
-             "blocked": bool(kwargs.get("blocking") is not None)},
+        if not (grad and caps.get("has_custom_bwd")):
+            return _rows_for("interaction", impl, params, t_fwd, t_both)
+        # custom-bwd impl: one fwd row, one fwd_bwd row per bwd_impl choice
+        rows = _rows_for("interaction", impl, params, t_fwd, None)
+        rows += [r for r in _rows_for(
+            "interaction", impl, {**params, "bwd_impl": base_spec.bwd_impl},
             t_fwd, t_both,
-        )
+        ) if r["mode"] == "fwd_bwd"]
+        for alt in ("xla",):
+            _, vg_alt = build(dataclasses.replace(base_spec, bwd_impl=alt))
+            _, t_alt = _time_pair(
+                partial(fwd, *args[:3]), partial(vg_alt, *args[:3]), repeats
+            )
+            rows += [r for r in _rows_for(
+                "interaction", impl, {**params, "bwd_impl": alt},
+                t_fwd, t_alt,
+            ) if r["mode"] == "fwd_bwd"]
+        return rows
+
+    raise KeyError(f"unknown kernel kind {kind!r}")
+
+
+# quick (CI interpret-mode tier) and full benchmark shapes per kind
+MATRIX_SIZES = {
+    "symcon": {True: {"N": 64, "k": 8, "nu": 2},
+               False: {"N": 512, "k": 32, "nu": 2}},
+    "channelwise_tp": {True: {"E": 256, "k": 8}, False: {"E": 2048, "k": 32}},
+    "interaction": {True: {"E": 256, "N": 64, "k": 8},
+                    False: {"E": 4096, "N": 512, "k": 32}},
+}
+
+
+def bench_matrix(grad=False, quick=False, impls=("ref", "fused", "pallas"),
+                 repeats=5):
+    """Time every (kind, impl) in fwd mode and — with ``grad`` — through
+    ``jax.value_and_grad`` of a scalar loss (the training-shaped fwd+bwd
+    path; pallas impls exercise their hand-written backward kernels).
+
+    ``quick`` shrinks problem sizes so interpret-mode pallas rows stay
+    cheap (the CI tier).  Returns a list of machine-readable row dicts.
+    """
+    rows = []
+    for kind in ("symcon", "channelwise_tp", "interaction"):
+        sizes = MATRIX_SIZES[kind][bool(quick)]
+        for impl in impls:
+            rows += time_impl(kind, impl, grad=grad, repeats=repeats, **sizes)
     return rows
 
 
 MAX_TRAJECTORY_RUNS = 50
+KEEP_PER_KEY = 8
 
 
-def write_bench_json(rows, path, *, grad, quick):
+def _run_key(run):
+    """Retention bucket: runs are interchangeable evidence only within the
+    same (backend, quick-tier, grad) combination."""
+    return (run.get("backend"), bool(run.get("quick")), bool(run.get("grad")))
+
+
+def prune_runs(runs, *, max_runs=MAX_TRAJECTORY_RUNS, keep_per_key=KEEP_PER_KEY):
+    """Bound the trajectory: keep the newest ``keep_per_key`` runs per
+    ``(backend, quick, grad)`` key, then the newest ``max_runs`` overall,
+    preserving chronological (oldest-first) order.  Per-key retention means
+    a burst of quick CPU runs can never evict the one full-size run (or a
+    rare on-device TPU run) that anchors the autotuner's measured scores."""
+    counts = {}
+    kept_rev = []
+    for run in reversed(runs):  # newest first
+        key = _run_key(run)
+        if counts.get(key, 0) >= keep_per_key:
+            continue
+        counts[key] = counts.get(key, 0) + 1
+        kept_rev.append(run)
+    return list(reversed(kept_rev[:max_runs]))
+
+
+def write_bench_json(rows, path, *, grad, quick,
+                     max_runs=MAX_TRAJECTORY_RUNS, keep_per_key=KEEP_PER_KEY):
     """Append this run to the machine-readable perf-trajectory artifact.
 
     The file holds ``{"schema": 1, "runs": [run, ...]}`` — one entry per
-    benchmark invocation, oldest first, capped at ``MAX_TRAJECTORY_RUNS``
-    so the committed artifact stays bounded.  A corrupt/legacy file is
-    replaced rather than crashing the benchmark."""
+    benchmark invocation, oldest first, bounded by :func:`prune_runs`
+    (``keep_per_key`` newest per ``(backend, quick, grad)``, ``max_runs``
+    total) so the committed artifact stays small and diffable.  A
+    corrupt/legacy file is replaced rather than crashing the benchmark."""
     run = {
         "unix_time": int(time.time()),
         "backend": jax.default_backend(),
@@ -300,7 +378,8 @@ def write_bench_json(rows, path, *, grad, quick):
                 runs = list(prior.get("runs", []))
         except (ValueError, AttributeError):
             runs = []
-    runs = (runs + [run])[-MAX_TRAJECTORY_RUNS:]
+    runs = prune_runs(runs + [run], max_runs=max_runs,
+                      keep_per_key=keep_per_key)
     payload = {
         "schema": 1,
         "generated_by": "benchmarks/bench_kernels.py",
@@ -329,7 +408,20 @@ def main(argv=()):
     ap.add_argument("--no-json", action="store_true",
                     help="skip writing the JSON artifact")
     ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--max-runs", type=int, default=MAX_TRAJECTORY_RUNS,
+                    help="total run cap for the JSON trajectory")
+    ap.add_argument("--keep-per-key", type=int, default=KEEP_PER_KEY,
+                    help="newest runs kept per (backend, quick, grad) key")
+    ap.add_argument("--capabilities", action="store_true",
+                    help="print the kernel registry capability matrix "
+                         "(incl. per-platform compiled/interpret modes) as "
+                         "JSON and exit without benchmarking")
     args = ap.parse_args(list(argv))
+
+    if args.capabilities:
+        print(json.dumps({kind: capabilities(kind) for kind in KINDS},
+                         indent=1))
+        return []
 
     rows = []
     # the legacy full-size CSV sweep (nu=3 tables take minutes to build)
@@ -376,7 +468,9 @@ def main(argv=()):
             ",".join(f"{k}={v}" for k, v in r["params"].items()),
         ))
     if not args.no_json:
-        write_bench_json(matrix, args.json, grad=args.grad, quick=args.quick)
+        write_bench_json(matrix, args.json, grad=args.grad, quick=args.quick,
+                         max_runs=args.max_runs,
+                         keep_per_key=args.keep_per_key)
         rows.append(f"bench_json,written={args.json},rows={len(matrix)}")
     for r in rows:
         print(r)

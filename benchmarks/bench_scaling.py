@@ -56,6 +56,7 @@ def calibrate_with_engine(
     n_graphs: int = 96,
     capacity: int = 128,
     prefetch: int = 1,
+    impl: str = "fused",
     interaction_impl: str = "auto",
     interaction_bwd_impl: str = "pallas",
     rescale_at: str = "",
@@ -87,7 +88,7 @@ def calibrate_with_engine(
 
     mcfg = MaceConfig(
         n_species=10, channels=8, hidden_ls=(0, 1), sh_lmax=2, a_ls=(0, 1, 2),
-        correlation=2, n_interactions=2, avg_num_neighbors=8.0, impl="fused",
+        correlation=2, n_interactions=2, avg_num_neighbors=8.0, impl=impl,
         interaction_impl=interaction_impl,
         interaction_bwd_impl=interaction_bwd_impl,
     )
@@ -121,11 +122,21 @@ def calibrate_with_engine(
         measured_work=tr.engine.telemetry.straggler_matrix(skip=1),
     )
     host = tel.host_matrix(skip=1)
+    # one row per autotune decision: which impl/tile/bwd the "auto"
+    # sentinels resolved to, and from which evidence source (the Trainer
+    # resolved them against TUNING_TABLE.json before building its engine)
     rows = [
+        f"fig7_autotune,kind={d.kind},impl={d.impl},"
+        f"block_n={d.block_n},block_e={d.block_e},bwd={d.bwd_impl},"
+        f"source={d.source},bucket={d.bucket},platform={d.platform}"
+        for d in tr.autotune_decisions.values()
+    ]
+    rows += [
         f"fig7_calibration,engine={engine},ranks={n_ranks_now},"
         f"steps={tel.n_steps - n_gens},generations={n_gens},"
-        f"interaction={mcfg.interaction_impl_name},"
-        f"bwd={mcfg.interaction_bwd_impl},"
+        f"impl={tr.mace_cfg.impl},"
+        f"interaction={tr.mace_cfg.interaction_impl_name},"
+        f"bwd={tr.mace_cfg.interaction_bwd_impl},"
         f"c_token_s={c_tok:.3e},straggler_proxy={proxy.straggler_ratio:.3f},"
         f"straggler_measured={measured.straggler_ratio:.3f},"
         f"prefetch={prefetch},host_collate_s={float(host[:, 0].sum()):.3e},"
@@ -206,9 +217,15 @@ if __name__ == "__main__":
     ap.add_argument("--prefetch", type=int, default=1,
                     help="async collate lookahead depth for the measured "
                          "run (0 = inline)")
+    ap.add_argument("--impl", default="fused",
+                    help="symcon + channelwise_tp contraction impl for the "
+                         "measured run; 'auto' resolves from the committed "
+                         "tuning table (reported as fig7_autotune rows)")
     ap.add_argument("--interaction-impl", default="auto",
                     help="interaction impl for the measured run (pallas "
-                         "adds host edge blocking, reported as host_block_s)")
+                         "adds host edge blocking, reported as "
+                         "host_block_s); 'auto' resolves impl + tile "
+                         "geometry + bwd from the committed tuning table")
     ap.add_argument("--bwd-impl", choices=["pallas", "xla"], default="pallas",
                     help="backward impl for custom-VJP interaction kernels "
                          "(pallas = dedicated backward kernel, xla = fused-"
@@ -230,7 +247,8 @@ if __name__ == "__main__":
     if args.measure_steps:
         c_tok, extra = calibrate_with_engine(
             engine=args.engine, n_ranks=args.ranks, steps=args.measure_steps,
-            prefetch=args.prefetch, interaction_impl=args.interaction_impl,
+            prefetch=args.prefetch, impl=args.impl,
+            interaction_impl=args.interaction_impl,
             interaction_bwd_impl=args.bwd_impl,
             rescale_at=args.rescale_at,
         )

@@ -23,9 +23,14 @@ The final telemetry line reports how much collate time was hidden
 
 Kernel selection: ``--impl`` picks the contraction kernels from
 ``kernels.registry`` and ``--interaction-impl`` the TP+scatter interaction
-op (``auto`` follows --impl; ``pallas`` consumes the data pipeline's
-pre-blocked edges — collation then emits the ``blk_*`` arrays and the
-telemetry line attributes the host blocking seconds):
+op.  ``auto`` (the interaction default) resolves the impl — plus tile
+geometry and backward impl — from the committed tuning table
+(``TUNING_TABLE.json``, built by ``kernels.autotune`` from measured
+``BENCH_kernels.json`` rows with a roofline-model fallback) for this run's
+shape bucket; the resolved decisions are printed as ``autotune:`` lines.
+``pallas`` consumes the data pipeline's pre-blocked edges — collation then
+emits the ``blk_*`` arrays and the telemetry line attributes the host
+blocking seconds:
 
     PYTHONPATH=src python examples/train_mace_cfm.py \
         --steps 20 --interaction-impl pallas
@@ -60,15 +65,18 @@ def main():
     ap.add_argument("--sampler", choices=["balanced", "fixed"], default="balanced")
     ap.add_argument("--impl", default="fused",
                     help="kernel impl name from kernels.registry "
-                         "(ref | fused | pallas | registered)")
+                         "(ref | fused | pallas | registered), or 'auto' to "
+                         "resolve from the committed tuning table "
+                         "(TUNING_TABLE.json via kernels.autotune)")
     ap.add_argument("--bwd-impl", choices=["pallas", "xla"], default="pallas",
                     help="backward impl for custom-VJP interaction kernels: "
                          "pallas = dedicated blocked-gather + TP-transpose "
                          "backward kernel, xla = fused-XLA VJP fallback")
     ap.add_argument("--interaction-impl", default="auto",
-                    help="interaction (TP+scatter) impl from kernels.registry "
-                         "(auto = follow --impl; pallas consumes pre-blocked "
-                         "edges from collation)")
+                    help="interaction (TP+scatter) impl from kernels.registry; "
+                         "'auto' resolves impl + tile geometry + bwd from the "
+                         "tuning table for this run's shape bucket (pallas "
+                         "consumes pre-blocked edges from collation)")
     ap.add_argument("--engine", choices=["sequential", "shard_map"],
                     default="sequential")
     ap.add_argument("--n-ranks", type=int, default=0,
@@ -137,9 +145,12 @@ def main():
         f"params={param_count(tr.params):,} graphs={len(ds)} "
         f"steps/epoch={tr.sampler.steps_per_epoch()} sampler={args.sampler} "
         f"engine={args.engine} ranks={tcfg.n_ranks} prefetch={tcfg.prefetch} "
-        f"impl={args.impl} interaction={cfg.interaction_impl_name} "
-        f"bwd={cfg.interaction_bwd_impl}"
+        f"impl={tr.mace_cfg.impl} "
+        f"interaction={tr.mace_cfg.interaction_impl_name} "
+        f"bwd={tr.mace_cfg.interaction_bwd_impl}"
     )
+    for d in tr.autotune_decisions.values():
+        print(f"autotune: {d.describe()}")
 
     t0 = time.perf_counter()
     out = tr.train(n_epochs=1_000_000, max_steps=args.steps)

@@ -81,8 +81,17 @@ class MaceConfig:
     radial_mlp: Tuple[int, ...] = (64, 64, 64)
     readout_mlp: int = 16
     avg_num_neighbors: float = 12.0
-    impl: str = "fused"                   # any name in kernels.registry ("ref" | "fused" | "pallas" | registered)
-    # interaction (TP+scatter) impl; "auto" follows ``impl``.  Selecting
+    # contraction impl for symcon + channelwise_tp: any name in
+    # kernels.registry ("ref" | "fused" | "pallas" | registered), or the
+    # "auto" sentinel — resolved against the committed tuning table by the
+    # engine/Trainer build path (``kernels.autotune.resolve_mace_config``)
+    # before the model is instantiated; a raw ``init_mace``/``mace_apply``
+    # caller must pass a concrete name.
+    impl: str = "fused"
+    # interaction (TP+scatter) impl; "auto" follows ``impl`` at the raw
+    # model level (legacy behavior, see ``interaction_impl_name``), but the
+    # engine/Trainer build path intercepts it first and resolves it from
+    # the tuning table (impl + tile geometry + bwd_impl).  Selecting
     # "pallas" consumes the data pipeline's blk_* batch arrays when present
     # and falls back to TP-kernel + segment_sum when absent.
     interaction_impl: str = "auto"

@@ -84,6 +84,31 @@ def static_n_tiles(
     return -(-max_nodes // block_n) + max_edges // block_e
 
 
+def block_size_candidates(max_nodes: int, max_edges: int):
+    """Valid ``(block_n, block_e)`` tile geometries for a batch shape — the
+    kernel autotuner's search space (``kernels.autotune``).
+
+    Shape-stability rule: the blocking arrays are a pure function of
+    ``(BinShape, block_n, block_e)``, so any candidate pair is shape-stable
+    per bin — but it must (a) keep the TPU tile layout legal (``block_n`` a
+    multiple of 8 sublanes, ``block_e`` of 128 lanes), (b) not exceed the
+    batch dims, and (c) keep the static worst-case tile count positive and
+    sane.  The default geometry is always first so deterministic tie-breaks
+    land on it."""
+    cands = []
+    for bn in (DEFAULT_BLOCK_N, 8, 16, 64):
+        if bn > max_nodes or bn % 8:
+            continue
+        for be in (DEFAULT_BLOCK_E, 256, 512):
+            if be > max_edges or be % 128:
+                continue
+            if (bn, be) not in cands and static_n_tiles(
+                max_edges, max_nodes, bn, be
+            ) > 0:
+                cands.append((bn, be))
+    return cands or [(min(DEFAULT_BLOCK_N, max_nodes), max_edges)]
+
+
 def block_edges(
     receivers: np.ndarray,
     edge_mask: np.ndarray,

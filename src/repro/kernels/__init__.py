@@ -1,9 +1,41 @@
-"""Optimized kernels + the dispatch registry.
+"""Optimized kernels + the dispatch registry + the autotuner.
 
 ``registry`` is the single name->implementation table for the paper's two
-custom contractions (channelwise TP, symmetric contraction).  Sub-packages
-hold the Pallas TPU kernels; additional backends (.cu, Triton, ...) should
-register themselves via ``registry.register``.
+custom contractions (channelwise TP, symmetric contraction) and the fused
+TP+scatter interaction op.  Sub-packages hold the Pallas TPU kernels;
+additional backends (.cu, Triton, ...) should register themselves via
+``registry.register`` with honest capability metadata (``platforms``,
+``interpret_only_on``, ``has_custom_bwd``, ``consumes_blocking``) — the
+autotuner prunes candidates from exactly those flags.
+
+``autotune`` selects, per ``(kind, shape bucket, platform, mode)``, the
+impl, tile geometry (``block_n``/``block_e``) and backward impl, caching
+decisions in the committed ``TUNING_TABLE.json`` at the repo root:
+
+* **Schema** (``schema`` = 1): ``{"schema", "generated_by", "entries"}``
+  where each entry carries ``kind/platform/mode/bucket/dims/impl/
+  block_n/block_e/bwd_impl/source/score_us`` and ``source`` is
+  ``"measured"`` (a ``BENCH_kernels.json`` row within the bucket distance)
+  or ``"roofline"`` (the analytic model ranked the candidates).
+* **Bucketing rule**: shape dims (N/E/k) round UP to the next power of
+  two; ``nu`` matches exactly.  Queries accept the nearest entry within
+  ``max |log2 ratio| <= 2`` per dim — close enough shapes share a
+  decision, distant ones fall back to the roofline ranking.
+* **Regeneration** (after new measurements or on new hardware)::
+
+      PYTHONPATH=src python -m benchmarks.bench_kernels --grad [--quick]
+      PYTHONPATH=src python -m repro.kernels.autotune --tune 60 --write
+      PYTHONPATH=src python -m repro.kernels.autotune --check
+
+  CI's ``tune-smoke`` runs the quick bench + ``--check`` and fails when
+  the committed table is schema-invalid, incomplete, or stale against the
+  fresh trajectory.
+
+Configs opt in with the ``"auto"`` sentinel (``MaceConfig.impl`` /
+``interaction_impl``); the Trainer and ``make_engine`` call
+``autotune.resolve_mace_config`` at build time.  ``autotune`` is imported
+lazily by its consumers (not re-exported here) to keep ``import
+repro.kernels`` light.
 """
 from .registry import (  # noqa: F401
     KernelImpl,

@@ -1,0 +1,892 @@
+"""Cost-model-driven kernel autotuner: pick impl + tile sizes per shape.
+
+The paper's kernel speedups come from matching the contraction strategy to
+the problem shape (§4; cf. arXiv 2211.13853's shape-matched GNN kernels and
+arXiv 2406.12909's per-platform portability).  The registry makes every
+strategy *selectable* — this module makes the selection *automatic*, closing
+the loop between three data sources:
+
+1. **Measured trajectory** (``BENCH_kernels.json``, written by
+   ``benchmarks/bench_kernels.py``): real fwd / fwd+bwd timings per
+   ``(kind, impl, shape)``.  When a row exists for a matching — or
+   near-matching — shape bucket, measurement wins.
+2. **Analytic roofline model** (``roofline.analytic.kernel_cell_cost``):
+   FLOP/byte cells per ``(kind, impl, shape)`` against per-platform peak
+   rates.  Ranks candidates for shapes (and platforms) nobody has measured
+   yet; also the only signal for tile-size candidates before a ``tune()``
+   run has timed them.
+3. **Bounded on-device search** (``tune(shapes, budget_s)``): times the
+   candidate matrix through the ``bench_kernels`` harness until the budget
+   runs out, appending rows to the trajectory — so the next ``build_table``
+   call decides from measurement instead of the model.
+
+Decisions are cached in a committed, human-diffable **tuning table**
+(``TUNING_TABLE.json`` at the repo root) that ``train.engine.make_engine`` /
+``train_loop.Trainer`` consult at build time whenever a config carries the
+``"auto"`` sentinel (``MaceConfig.impl`` / ``interaction_impl``,
+``TrainerConfig.impl`` / ``interaction_impl``, ``--impl`` /
+``--interaction-impl`` in the example and benchmarks) — a training run on
+any platform automatically gets the best *known* kernel configuration, and
+falls back to the roofline ranking when the table has no matching entry.
+
+Tuning-table schema (``schema`` = 1)::
+
+    {"schema": 1, "generated_by": "repro.kernels.autotune",
+     "entries": [
+       {"kind": "interaction", "platform": "tpu", "mode": "fwd_bwd",
+        "bucket": "E4096-N512-k32", "dims": {"E": 4096, "N": 512, "k": 32},
+        "impl": "pallas", "block_n": 32, "block_e": 128,
+        "bwd_impl": "pallas", "source": "measured", "score_us": 812.4}]}
+
+Shape bucketing (the near-match rule): every dim (N/E/k) is rounded up to
+the next power of two; a query matches the entry (or trajectory row) with
+the smallest bucket distance ``max_dim |log2(a/b)|``, accepted up to
+``NEAR_MATCH_MAX_DIST`` (so a 512-atom bucket can answer for 300 atoms, but
+a 64-atom quick-tier bucket cannot answer for 4096).  ``nu`` must match
+exactly for ``symcon``.
+
+Candidate validity is pruned *before* scoring through the registry's
+capability metadata: ``compiled_only`` platform filtering (an interpret-mode
+pallas binding is correct but never a performance candidate),
+``has_custom_bwd`` for ``fwd_bwd`` mode on compiled platforms, and
+``consumes_blocking`` to decide whether tile-size candidates
+(``data.blocking.block_size_candidates`` — the shape-stability-respecting
+grid) apply.  Ties within ``TIE_RTOL`` break deterministically: preference
+order ``fused > pallas > ref``, then name, then default-first tile order.
+
+Regenerating on new hardware::
+
+    PYTHONPATH=src python -m benchmarks.bench_kernels --grad [--quick]
+    PYTHONPATH=src python -m repro.kernels.autotune --tune 60 --write
+    PYTHONPATH=src python -m repro.kernels.autotune --check
+
+CI runs the quick variant and ``--check`` (fails on a stale or
+schema-invalid table for the CPU platform).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import logging
+import math
+import os
+import sys
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.kernels import registry
+
+log = logging.getLogger("repro.autotune")
+
+SCHEMA = 1
+AUTO = "auto"
+MODES = ("fwd", "fwd_bwd")
+KINDS = registry.KINDS
+
+REPO_ROOT = Path(__file__).resolve().parents[3]
+DEFAULT_TABLE_PATH = Path(
+    os.environ.get("REPRO_TUNING_TABLE", REPO_ROOT / "TUNING_TABLE.json")
+)
+DEFAULT_TRAJECTORY_PATH = Path(
+    os.environ.get("REPRO_BENCH_KERNELS", REPO_ROOT / "BENCH_kernels.json")
+)
+
+# measured scores within this relative band are "tied" and fall through to
+# the deterministic preference order below
+TIE_RTOL = 0.02
+PREFERENCE = ("fused", "pallas", "ref")
+# max per-dim |log2 ratio| between query bucket and row/entry bucket
+NEAR_MATCH_MAX_DIST = 2.0
+# check-mode staleness: a committed decision whose measured score is worse
+# than STALE_FACTOR x the current best measured candidate fails --check
+STALE_FACTOR = 2.0
+
+# (peak FLOP/s, peak HBM bytes/s) per platform — deliberately coarse; used
+# ONLY to *rank* candidates (roofline time = max(compute, memory) term), so
+# absolute accuracy does not matter, relative plausibility does.
+ROOFLINE_PEAKS = {
+    "cpu": (5.0e10, 2.0e10),
+    "gpu": (5.0e13, 1.5e12),
+    "tpu": (1.8e14, 1.2e12),
+}
+# hand-waved penalty for running a custom-VJP impl's backward through the
+# XLA-twin VJP instead of the dedicated backward kernel (extra HBM traffic
+# for the re-materialized adjoint); makes bwd_impl="pallas" win by default
+# on compiled platforms until someone measures otherwise
+XLA_BWD_BYTE_PENALTY = 1.3
+
+
+# ---------------------------------------------------------------------------
+# decisions + shape buckets
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """One autotuner verdict for (kind, shape bucket, platform, mode)."""
+
+    kind: str
+    impl: str
+    platform: str
+    mode: str
+    bucket: str
+    source: str                       # "measured" | "roofline"
+    score_us: Optional[float] = None
+    block_n: Optional[int] = None     # set iff the impl consumes blocking
+    block_e: Optional[int] = None
+    bwd_impl: Optional[str] = None    # set iff the impl has a custom bwd
+
+    def describe(self) -> str:
+        bits = [f"{self.kind}[{self.bucket},{self.platform},{self.mode}]",
+                f"-> {self.impl}"]
+        if self.block_n is not None:
+            bits.append(f"block {self.block_n}x{self.block_e}")
+        if self.bwd_impl is not None:
+            bits.append(f"bwd={self.bwd_impl}")
+        score = f"{self.score_us:.1f}us" if self.score_us else "unscored"
+        bits.append(f"({self.source}, {score})")
+        return " ".join(bits)
+
+
+def _pow2ceil(x: int) -> int:
+    return 1 << max(0, math.ceil(math.log2(max(1, int(x)))))
+
+
+_KIND_DIMS = {
+    "symcon": ("N", "k"),
+    "channelwise_tp": ("E", "k"),
+    "interaction": ("E", "N", "k"),
+}
+
+
+def bucket_dims(kind: str, params: Dict[str, Any]) -> Dict[str, int]:
+    """Pow2-rounded shape bucket for a trajectory row / query shape."""
+    kind = registry.canonical_kind(kind)
+    dims = {d: _pow2ceil(params[d]) for d in _KIND_DIMS[kind] if d in params}
+    if kind == "symcon" and "nu" in params:
+        dims["nu"] = int(params["nu"])  # exact: tables differ structurally
+    return dims
+
+
+def bucket_key(kind: str, params: Dict[str, Any]) -> str:
+    dims = bucket_dims(kind, params)
+    return "-".join(f"{d}{dims[d]}" for d in sorted(dims))
+
+
+def bucket_distance(a: Dict[str, int], b: Dict[str, int]) -> float:
+    """max per-dim |log2 ratio|; inf on dim-set mismatch or nu mismatch."""
+    if set(a) != set(b):
+        return math.inf
+    dist = 0.0
+    for d in a:
+        if d == "nu":
+            if a[d] != b[d]:
+                return math.inf
+            continue
+        dist = max(dist, abs(math.log2(a[d] / b[d])))
+    return dist
+
+
+# ---------------------------------------------------------------------------
+# candidates
+# ---------------------------------------------------------------------------
+
+
+def viable_candidates(kind: str, platform: str, mode: str) -> List[str]:
+    """Registry-pruned candidate impls: natively compiled on ``platform``
+    (interpret-mode bindings are correct but never performance candidates)
+    and — for ``fwd_bwd`` — differentiable there (a compiled pallas forward
+    without a hand-written backward cannot train)."""
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    out = []
+    for name in registry.available(kind, platform=platform, compiled_only=True):
+        impl = registry.get_impl(kind, name)
+        if mode == "fwd_bwd" and impl.uses_pallas and not impl.has_custom_bwd:
+            continue
+        out.append(name)
+    return out
+
+
+def _pref_index(name: str) -> int:
+    try:
+        return PREFERENCE.index(name)
+    except ValueError:
+        return len(PREFERENCE)
+
+
+def _block_candidates_for(
+    kind: str,
+    name: str,
+    params: Dict[str, Any],
+    block_candidates: Optional[Sequence[Tuple[int, int]]],
+) -> List[Tuple[Optional[int], Optional[int]]]:
+    impl = registry.get_impl(kind, name)
+    if not impl.consumes_blocking:
+        return [(None, None)]
+    if block_candidates:
+        return [tuple(c) for c in block_candidates]
+    from repro.data.blocking import block_size_candidates
+
+    return block_size_candidates(int(params["N"]), int(params["E"]))
+
+
+def _bwd_candidates_for(kind: str, name: str, mode: str) -> List[Optional[str]]:
+    impl = registry.get_impl(kind, name)
+    if mode != "fwd_bwd" or not impl.has_custom_bwd:
+        return [None]
+    return ["pallas", "xla"]
+
+
+# ---------------------------------------------------------------------------
+# measured-trajectory scoring
+# ---------------------------------------------------------------------------
+
+
+def load_trajectory(path: Optional[Path] = None) -> List[Dict]:
+    """Runs list from the bench trajectory; a missing / corrupt / stale-
+    schema file yields ``[]`` (the roofline fallback takes over)."""
+    path = Path(path) if path is not None else DEFAULT_TRAJECTORY_PATH
+    try:
+        payload = json.loads(path.read_text())
+    except (OSError, ValueError):
+        return []
+    if not isinstance(payload, dict) or payload.get("schema") != SCHEMA:
+        return []
+    runs = payload.get("runs", [])
+    return runs if isinstance(runs, list) else []
+
+
+def _row_config_key(kind: str, row: Dict) -> Tuple:
+    """(impl, block_n, block_e, bwd_impl) identity for a trajectory row,
+    normalising legacy rows: a ``blocked`` interaction row without explicit
+    tile sizes ran the defaults; a pallas-family row without an explicit
+    ``bwd_impl`` ran the hand-written backward."""
+    p = row.get("params", {})
+    impl = row.get("impl")
+    bn = be = None
+    try:
+        reg = registry.get_impl(kind, impl)
+    except KeyError:
+        reg = None
+    if reg is not None and reg.consumes_blocking and p.get("blocked"):
+        from repro.data.blocking import DEFAULT_BLOCK_E, DEFAULT_BLOCK_N
+
+        bn = int(p.get("block_n") or DEFAULT_BLOCK_N)
+        be = int(p.get("block_e") or DEFAULT_BLOCK_E)
+    bwd = None
+    if reg is not None and reg.has_custom_bwd and row.get("mode") == "fwd_bwd":
+        bwd = p.get("bwd_impl", "pallas")
+    return (impl, bn, be, bwd)
+
+
+def measured_scores(
+    runs: Sequence[Dict],
+    kind: str,
+    platform: str,
+    mode: str,
+    params: Dict[str, Any],
+    *,
+    max_dist: float = NEAR_MATCH_MAX_DIST,
+) -> Dict[Tuple, Tuple[float, float]]:
+    """Newest measured ``{(impl, block_n, block_e, bwd_impl): (us, dist)}``
+    per candidate config on ``platform``, nearest shape bucket winning
+    (newest row wins ties at equal distance)."""
+    kind = registry.canonical_kind(kind)
+    query = bucket_dims(kind, params)
+    best: Dict[Tuple, Tuple[float, float]] = {}
+    for run in reversed(runs):  # newest first
+        if run.get("backend") != platform:
+            continue
+        for row in run.get("rows", []):
+            if row.get("kind") != kind or row.get("mode") != mode:
+                continue
+            us = row.get("us")
+            if not isinstance(us, (int, float)) or us <= 0:
+                continue
+            dist = bucket_distance(query, bucket_dims(kind, row.get("params", {})))
+            if dist > max_dist:
+                continue
+            key = _row_config_key(kind, row)
+            if key not in best or dist < best[key][1]:
+                best[key] = (float(us), dist)
+    return best
+
+
+# ---------------------------------------------------------------------------
+# roofline fallback scoring
+# ---------------------------------------------------------------------------
+
+
+def roofline_score_us(
+    kind: str,
+    impl: str,
+    params: Dict[str, Any],
+    platform: str,
+    mode: str,
+    *,
+    block_n: Optional[int] = None,
+    block_e: Optional[int] = None,
+    bwd_impl: Optional[str] = None,
+    spec: Any = None,
+) -> float:
+    """Modelled microseconds: max(compute term, memory term) against the
+    coarse per-platform peaks — a *ranking* signal, not a prediction."""
+    from repro.roofline.analytic import kernel_cell_cost
+
+    shape = dict(params)
+    if block_n is not None:
+        shape["block_n"], shape["block_e"] = block_n, block_e
+    cell = kernel_cell_cost(kind, impl, shape, mode=mode, spec=spec)
+    peak_f, peak_b = ROOFLINE_PEAKS.get(platform, ROOFLINE_PEAKS["cpu"])
+    bytes_ = cell["hbm_bytes"]
+    if bwd_impl == "xla":
+        bytes_ *= XLA_BWD_BYTE_PENALTY
+    return max(cell["flops"] / peak_f, bytes_ / peak_b) * 1e6
+
+
+# ---------------------------------------------------------------------------
+# deciding
+# ---------------------------------------------------------------------------
+
+
+def candidate_scores(
+    kind: str,
+    params: Dict[str, Any],
+    platform: str,
+    mode: str,
+    *,
+    runs: Optional[Sequence[Dict]] = None,
+    block_candidates: Optional[Sequence[Tuple[int, int]]] = None,
+    spec: Any = None,
+) -> Tuple[Dict[Tuple, float], str]:
+    """Score every pruned candidate config.  Returns ``({(impl, bn, be,
+    bwd): us}, source)``: when *any* candidate config has a measured row
+    within the near-match distance, measurement is authoritative and
+    unmeasured configs are dropped (never mix measured and modelled
+    numbers); otherwise every config is roofline-scored."""
+    kind = registry.canonical_kind(kind)
+    names = viable_candidates(kind, platform, mode)
+    if not names:
+        raise LookupError(
+            f"no compiled candidate impls for {kind!r} on {platform!r} "
+            f"(mode={mode}); registry: {registry.available(kind)}"
+        )
+    configs: List[Tuple] = []
+    for name in names:
+        for bn, be in _block_candidates_for(kind, name, params, block_candidates):
+            for bwd in _bwd_candidates_for(kind, name, mode):
+                configs.append((name, bn, be, bwd))
+    measured = measured_scores(runs or [], kind, platform, mode, params)
+    picked = {c: measured[c][0] for c in configs if c in measured}
+    if picked:
+        return picked, "measured"
+    return {
+        (name, bn, be, bwd): roofline_score_us(
+            kind, name, params, platform, mode,
+            block_n=bn, block_e=be, bwd_impl=bwd, spec=spec,
+        )
+        for (name, bn, be, bwd) in configs
+    }, "roofline"
+
+
+def _pick(scored: Dict[Tuple, float]) -> Tuple[Tuple, float]:
+    """Deterministic winner: best score, ties within TIE_RTOL broken by
+    impl preference order, then name, then default-first tile geometry."""
+    best_us = min(scored.values())
+    tied = [c for c, us in scored.items() if us <= best_us * (1.0 + TIE_RTOL)]
+
+    from repro.data.blocking import DEFAULT_BLOCK_E, DEFAULT_BLOCK_N
+
+    def order(cfg):
+        name, bn, be, bwd = cfg
+        return (
+            _pref_index(name), name,
+            (bn, be) != (None, None) and (bn, be) != (DEFAULT_BLOCK_N,
+                                                      DEFAULT_BLOCK_E),
+            bn or 0, be or 0, bwd or "",
+        )
+
+    winner = sorted(tied, key=order)[0]
+    return winner, scored[winner]
+
+
+def decide(
+    kind: str,
+    params: Dict[str, Any],
+    platform: str,
+    mode: str,
+    *,
+    runs: Optional[Sequence[Dict]] = None,
+    block_candidates: Optional[Sequence[Tuple[int, int]]] = None,
+    spec: Any = None,
+) -> Decision:
+    """Full decision for one (kind, shape, platform, mode): measured rows
+    when any exist in-bucket, analytic roofline ranking otherwise."""
+    scored, source = candidate_scores(
+        kind, params, platform, mode,
+        runs=runs, block_candidates=block_candidates, spec=spec,
+    )
+    (name, bn, be, bwd), us = _pick(scored)
+    return Decision(
+        kind=registry.canonical_kind(kind), impl=name, platform=platform,
+        mode=mode, bucket=bucket_key(kind, params), source=source,
+        score_us=float(us), block_n=bn, block_e=be, bwd_impl=bwd,
+    )
+
+
+# ---------------------------------------------------------------------------
+# the committed tuning table
+# ---------------------------------------------------------------------------
+
+# canonical shapes every table covers even with an empty trajectory: the
+# bench_kernels quick + full tiers plus the trainer-default bin geometry
+CANONICAL_SHAPES: Dict[str, List[Dict[str, int]]] = {
+    "symcon": [
+        {"N": 64, "k": 8, "nu": 2},
+        {"N": 512, "k": 32, "nu": 2},
+    ],
+    "channelwise_tp": [
+        {"E": 256, "k": 8},
+        {"E": 2048, "k": 32},
+    ],
+    "interaction": [
+        {"E": 256, "N": 64, "k": 8},
+        {"E": 4096, "N": 512, "k": 32},
+        {"E": 24576, "N": 512, "k": 32},   # capacity 512 x edge_factor 48
+    ],
+}
+
+
+def _observed_shapes(runs: Sequence[Dict], kind: str) -> List[Dict[str, int]]:
+    seen: Dict[str, Dict[str, int]] = {}
+    for run in runs:
+        for row in run.get("rows", []):
+            if row.get("kind") != kind:
+                continue
+            p = row.get("params", {})
+            dims = {d: int(p[d]) for d in _KIND_DIMS[kind] if d in p}
+            if kind == "symcon" and "nu" in p:
+                dims["nu"] = int(p["nu"])
+            if len(dims) < len(_KIND_DIMS[kind]):
+                continue
+            seen.setdefault(bucket_key(kind, dims), dims)
+    return list(seen.values())
+
+
+def entry_from_decision(d: Decision, dims: Dict[str, int]) -> Dict[str, Any]:
+    return {
+        "kind": d.kind, "platform": d.platform, "mode": d.mode,
+        "bucket": d.bucket, "dims": {k: int(v) for k, v in dims.items()},
+        "impl": d.impl, "block_n": d.block_n, "block_e": d.block_e,
+        "bwd_impl": d.bwd_impl, "source": d.source,
+        "score_us": round(d.score_us, 2) if d.score_us is not None else None,
+    }
+
+
+def build_table(
+    *,
+    platforms: Optional[Sequence[str]] = None,
+    trajectory_path: Optional[Path] = None,
+    extra_shapes: Optional[Dict[str, List[Dict[str, int]]]] = None,
+) -> Dict[str, Any]:
+    """Recompute every table entry from the current trajectory + roofline.
+
+    ``platforms`` defaults to every backend observed in the trajectory plus
+    ``cpu`` and ``tpu`` (the latter gets roofline-sourced entries until an
+    on-device ``tune`` run feeds the trajectory there)."""
+    runs = load_trajectory(trajectory_path)
+    if platforms is None:
+        seen = {r.get("backend") for r in runs if r.get("backend")}
+        platforms = sorted(seen | {"cpu", "tpu"})
+    entries = []
+    for platform in platforms:
+        for kind in KINDS:
+            shapes: Dict[str, Dict[str, int]] = {}
+            for dims in CANONICAL_SHAPES[kind] + _observed_shapes(runs, kind) \
+                    + (extra_shapes or {}).get(kind, []):
+                shapes.setdefault(bucket_key(kind, dims), dict(dims))
+            for bkey in sorted(shapes):
+                dims = shapes[bkey]
+                for mode in MODES:
+                    d = decide(kind, dims, platform, mode, runs=runs)
+                    entries.append(entry_from_decision(d, bucket_dims(kind, dims)))
+    entries.sort(key=lambda e: (e["platform"], e["kind"], e["mode"], e["bucket"]))
+    return {
+        "schema": SCHEMA,
+        "generated_by": "repro.kernels.autotune",
+        "entries": entries,
+    }
+
+
+def write_table(payload: Dict[str, Any], path: Optional[Path] = None) -> Path:
+    path = Path(path) if path is not None else DEFAULT_TABLE_PATH
+    path.write_text(json.dumps(payload, indent=1, sort_keys=False) + "\n")
+    return path
+
+
+_TABLE_CACHE: Dict[Tuple[str, float], Optional[Dict]] = {}
+
+
+def load_table(path: Optional[Path] = None) -> Optional[Dict[str, Any]]:
+    """Schema-checked table payload, or None when absent/invalid.  Cached
+    per (path, mtime) so per-engine-build consultation stays free."""
+    path = Path(path) if path is not None else DEFAULT_TABLE_PATH
+    try:
+        mtime = path.stat().st_mtime
+    except OSError:
+        return None
+    key = (str(path), mtime)
+    if key not in _TABLE_CACHE:
+        try:
+            payload = json.loads(path.read_text())
+        except (OSError, ValueError):
+            payload = None
+        if not isinstance(payload, dict) or payload.get("schema") != SCHEMA \
+                or not isinstance(payload.get("entries"), list):
+            payload = None
+        _TABLE_CACHE[key] = payload
+    return _TABLE_CACHE[key]
+
+
+def lookup(
+    table: Dict[str, Any],
+    kind: str,
+    params: Dict[str, Any],
+    platform: str,
+    mode: str,
+    *,
+    max_dist: float = NEAR_MATCH_MAX_DIST,
+) -> Optional[Decision]:
+    """Nearest-bucket table entry as a Decision (None when nothing within
+    the near-match distance, or the entry's impl is no longer a viable
+    registry candidate — a renamed/unregistered impl must not resurrect)."""
+    kind = registry.canonical_kind(kind)
+    query = bucket_dims(kind, params)
+    best = None
+    for e in table.get("entries", []):
+        if (e.get("kind"), e.get("platform"), e.get("mode")) != (
+            kind, platform, mode,
+        ):
+            continue
+        dist = bucket_distance(query, e.get("dims", {}))
+        if dist > max_dist:
+            continue
+        rank = (dist, e.get("bucket", ""))
+        if best is None or rank < best[0]:
+            best = (rank, e)
+    if best is None:
+        return None
+    e = best[1]
+    if e.get("impl") not in viable_candidates(kind, platform, mode):
+        return None
+    return Decision(
+        kind=kind, impl=e["impl"], platform=platform, mode=mode,
+        bucket=e.get("bucket", bucket_key(kind, params)),
+        source=e.get("source", "measured"), score_us=e.get("score_us"),
+        block_n=e.get("block_n"), block_e=e.get("block_e"),
+        bwd_impl=e.get("bwd_impl"),
+    )
+
+
+def check_table(
+    platform: str,
+    *,
+    table_path: Optional[Path] = None,
+    trajectory_path: Optional[Path] = None,
+) -> List[str]:
+    """CI check mode: problems list (empty = healthy) for ``platform``.
+
+    Fails on: missing/corrupt/wrong-schema table, malformed entries,
+    missing fwd_bwd coverage for a kernel kind on the platform, entries
+    naming impls that are no longer viable registry candidates, and
+    *staleness* — a committed decision whose own measured score in the
+    current trajectory is worse than ``STALE_FACTOR`` x the best measured
+    candidate for the same bucket (timing noise between close candidates
+    deliberately does not fail the check)."""
+    path = Path(table_path) if table_path is not None else DEFAULT_TABLE_PATH
+    if not path.exists():
+        return [f"tuning table missing: {path}"]
+    table = load_table(path)
+    if table is None:
+        return [f"tuning table unreadable or schema != {SCHEMA}: {path}"]
+    problems = []
+    covered = set()
+    runs = load_trajectory(trajectory_path)
+    for i, e in enumerate(table["entries"]):
+        missing = [f for f in ("kind", "platform", "mode", "bucket", "dims",
+                               "impl", "source") if f not in e]
+        if missing:
+            problems.append(f"entry {i} missing fields {missing}")
+            continue
+        if e["kind"] not in KINDS or e["mode"] not in MODES:
+            problems.append(
+                f"entry {i} has unknown kind/mode {e['kind']}/{e['mode']}"
+            )
+            continue
+        if e["platform"] != platform:
+            continue
+        covered.add((e["kind"], e["mode"]))
+        viable = viable_candidates(e["kind"], platform, e["mode"])
+        if e["impl"] not in viable:
+            problems.append(
+                f"{e['kind']}[{e['bucket']},{platform},{e['mode']}]: impl "
+                f"{e['impl']!r} is not a viable compiled candidate "
+                f"(viable: {viable})"
+            )
+            continue
+        scores = measured_scores(runs, e["kind"], platform, e["mode"],
+                                 e["dims"], max_dist=0.0)
+        # prune to viable candidates: an interpret-mode pallas row in the
+        # trajectory must not set the staleness baseline
+        scores = {c: v for c, v in scores.items() if c[0] in viable}
+        if not scores:
+            continue
+        best = min(us for us, _ in scores.values())
+        mine = [us for (impl, *_), (us, _) in scores.items()
+                if impl == e["impl"]]
+        if mine and min(mine) > STALE_FACTOR * best:
+            problems.append(
+                f"{e['kind']}[{e['bucket']},{platform},{e['mode']}]: stale — "
+                f"committed impl {e['impl']!r} measures {min(mine):.1f}us vs "
+                f"best {best:.1f}us (> {STALE_FACTOR}x)"
+            )
+    for kind in KINDS:
+        if (kind, "fwd_bwd") not in covered:
+            problems.append(
+                f"no fwd_bwd entry for kind {kind!r} on platform {platform!r}"
+            )
+    return problems
+
+
+# ---------------------------------------------------------------------------
+# bounded on-device search
+# ---------------------------------------------------------------------------
+
+
+def tune(
+    shapes: Dict[str, List[Dict[str, int]]],
+    budget_s: float,
+    *,
+    platform: Optional[str] = None,
+    mode: str = "fwd_bwd",
+    repeats: int = 3,
+    trajectory_path: Optional[Path] = None,
+    quick: bool = False,
+) -> List[Dict]:
+    """Bounded on-device search: time candidate configs for ``shapes``
+    through the ``bench_kernels`` harness until ``budget_s`` wall seconds
+    are spent, append the rows to the trajectory, and return them.
+
+    The candidate matrix is registry-pruned exactly like ``decide`` —
+    compiled-only, training-safe — and iterated shape-major so an exhausted
+    budget still leaves *complete* candidate sets for the shapes it reached
+    (a partial set would bias the next ``build_table`` run).
+    """
+    import jax
+
+    from benchmarks.bench_kernels import time_impl, write_bench_json
+
+    platform = platform or jax.default_backend()
+    grad = mode == "fwd_bwd"
+    t0 = time.perf_counter()
+    rows: List[Dict] = []
+    done = False
+    for kind, shape_list in shapes.items():
+        if done:
+            break
+        for params in shape_list:
+            configs = []
+            for name in viable_candidates(kind, platform, mode):
+                for bn, be in _block_candidates_for(kind, name, params, None):
+                    configs.append((name, bn, be))
+            if time.perf_counter() - t0 > budget_s:
+                log.info("tune: budget %.1fs exhausted before %s %s",
+                         budget_s, kind, params)
+                done = True
+                break
+            for name, bn, be in configs:
+                rows.extend(time_impl(
+                    kind, name, grad=grad, repeats=repeats,
+                    block_n=bn, block_e=be, **params,
+                ))
+    if rows:
+        write_bench_json(
+            rows,
+            trajectory_path or DEFAULT_TRAJECTORY_PATH,
+            grad=grad, quick=quick,
+        )
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# "auto" resolution for model/trainer configs
+# ---------------------------------------------------------------------------
+
+
+def needs_resolution(mace_cfg) -> bool:
+    return AUTO in (mace_cfg.impl, mace_cfg.interaction_impl)
+
+
+def _decision_for(
+    kind: str,
+    params: Dict[str, Any],
+    platform: str,
+    mode: str,
+    table: Optional[Dict],
+    block_candidates,
+) -> Decision:
+    if table is not None:
+        d = lookup(table, kind, params, platform, mode)
+        if d is not None:
+            return d
+    # no table / no matching entry: rank with the roofline model on the
+    # fly (never measure at engine-build time — that is tune()'s job)
+    return decide(kind, params, platform, mode, runs=[],
+                  block_candidates=block_candidates)
+
+
+def resolve_mace_config(
+    mace_cfg,
+    *,
+    capacity: int,
+    edge_factor: int,
+    platform: Optional[str] = None,
+    mode: str = "fwd_bwd",
+    table: Optional[Dict[str, Any]] = None,
+    table_path: Optional[Path] = None,
+    block_candidates: Optional[Sequence[Tuple[int, int]]] = None,
+) -> Tuple[Any, Dict[str, Decision]]:
+    """Replace ``"auto"`` impl sentinels in a :class:`MaceConfig` with the
+    tuning table's decisions for the run's shape bucket.
+
+    * ``impl="auto"`` resolves the contraction impl shared by ``symcon``
+      and ``channelwise_tp`` (one config field feeds both kinds: when the
+      per-kind winners disagree, the summed score decides, then the
+      preference order).
+    * ``interaction_impl="auto"`` resolves the interaction impl *plus* its
+      tile geometry (``interaction_block_n`` is updated so the model-side
+      static matches; callers owning a BinShape must adopt the decision's
+      ``block_n``/``block_e`` — the Trainer does) and its ``bwd_impl``.
+
+    Returns ``(resolved_cfg, {kind: Decision})``; a config with no
+    ``"auto"`` sentinel is returned unchanged with no decisions.
+    """
+    if not needs_resolution(mace_cfg):
+        return mace_cfg, {}
+    import jax
+
+    platform = platform or jax.default_backend()
+    if table is None:
+        table = load_table(table_path)
+    N = int(capacity)
+    E = int(capacity) * int(edge_factor)
+    k = int(mace_cfg.channels)
+    decisions: Dict[str, Decision] = {}
+
+    if mace_cfg.impl == AUTO:
+        sc_params = {"N": N, "k": k, "nu": int(mace_cfg.correlation)}
+        tp_params = {"E": E, "k": k}
+        d_sc = _decision_for("symcon", sc_params, platform, mode, table, None)
+        d_tp = _decision_for("channelwise_tp", tp_params, platform, mode,
+                             table, None)
+        if d_sc.impl == d_tp.impl:
+            name = d_sc.impl
+        else:
+            totals = {}
+            for d in (d_sc, d_tp):
+                totals[d.impl] = totals.get(d.impl, 0.0) + (d.score_us or 0.0)
+            name = sorted(totals, key=lambda n: (totals[n], _pref_index(n), n))[0]
+            # re-bind both kinds to the shared winner for honest reporting
+            d_sc = dataclasses.replace(d_sc, impl=name) \
+                if d_sc.impl != name else d_sc
+            d_tp = dataclasses.replace(d_tp, impl=name) \
+                if d_tp.impl != name else d_tp
+        decisions["symcon"], decisions["channelwise_tp"] = d_sc, d_tp
+        mace_cfg = dataclasses.replace(mace_cfg, impl=name)
+
+    if mace_cfg.interaction_impl == AUTO:
+        d = _decision_for(
+            "interaction", {"E": E, "N": N, "k": k}, platform, mode, table,
+            block_candidates,
+        )
+        repl: Dict[str, Any] = {"interaction_impl": d.impl}
+        if d.block_n is not None:
+            repl["interaction_block_n"] = int(d.block_n)
+        if d.bwd_impl is not None:
+            repl["interaction_bwd_impl"] = d.bwd_impl
+        decisions["interaction"] = d
+        mace_cfg = dataclasses.replace(mace_cfg, **repl)
+
+    for d in decisions.values():
+        log.info("autotune: %s", d.describe())
+    return mace_cfg, decisions
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def main(argv: Sequence[str] = ()) -> int:
+    ap = argparse.ArgumentParser(
+        description="kernel autotuner: build/check the committed tuning "
+                    "table, optionally after a bounded on-device search"
+    )
+    ap.add_argument("--write", action="store_true",
+                    help="recompute the table from the trajectory + "
+                         "roofline and write it")
+    ap.add_argument("--check", action="store_true",
+                    help="check mode (CI): exit 1 when the table is "
+                         "missing, schema-invalid, incomplete, or stale "
+                         "for --platform")
+    ap.add_argument("--tune", type=float, default=0.0, metavar="BUDGET_S",
+                    help="bounded on-device search: time candidate configs "
+                         "for the canonical shapes until the budget runs "
+                         "out, appending rows to the trajectory first")
+    ap.add_argument("--platform", default=None,
+                    help="platform key (default: jax.default_backend())")
+    ap.add_argument("--table", default=None, help="tuning-table path")
+    ap.add_argument("--trajectory", default=None,
+                    help="BENCH_kernels.json path")
+    ap.add_argument("--quick", action="store_true",
+                    help="mark tune() trajectory rows as quick-tier")
+    args = ap.parse_args(list(argv))
+
+    logging.basicConfig(level=logging.INFO, format="%(message)s")
+    platform = args.platform
+    if platform is None:
+        import jax
+
+        platform = jax.default_backend()
+    table_path = Path(args.table) if args.table else DEFAULT_TABLE_PATH
+    traj_path = Path(args.trajectory) if args.trajectory \
+        else DEFAULT_TRAJECTORY_PATH
+
+    if args.tune > 0:
+        rows = tune(CANONICAL_SHAPES, args.tune, platform=platform,
+                    trajectory_path=traj_path, quick=args.quick)
+        print(f"tune: appended {len(rows)} rows to {traj_path}")
+    if args.write:
+        payload = build_table(trajectory_path=traj_path)
+        path = write_table(payload, table_path)
+        n_meas = sum(e["source"] == "measured" for e in payload["entries"])
+        print(f"wrote {len(payload['entries'])} entries "
+              f"({n_meas} measured) to {path}")
+    if args.check:
+        problems = check_table(platform, table_path=table_path,
+                               trajectory_path=traj_path)
+        if problems:
+            for p in problems:
+                print(f"STALE/INVALID: {p}")
+            return 1
+        print(f"tuning table OK for platform {platform!r} ({table_path})")
+    if not (args.write or args.check or args.tune > 0):
+        ap.print_help()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -97,6 +97,26 @@ class KernelImpl:
     def supports(self, platform: str) -> bool:
         return platform in self.platforms or platform in self.interpret_only_on
 
+    def compiled_on(self, platform: str) -> bool:
+        """True when the impl runs *natively compiled* on ``platform`` —
+        the only mode with meaningful performance.  A pallas impl listed in
+        ``interpret_only_on`` for this platform runs, but emulated."""
+        return platform in self.platforms
+
+    def interpret_on(self, platform: str) -> bool:
+        return platform in self.interpret_only_on
+
+    def platform_mode(self, platform: str) -> Optional[str]:
+        """Validity of this impl on ``platform``: ``"compiled"`` (native,
+        performance-meaningful), ``"interpret"`` (emulated — correct but
+        never a performance candidate), or ``None`` (unsupported).  The
+        autotuner prunes everything but ``"compiled"`` before scoring."""
+        if self.compiled_on(platform):
+            return "compiled"
+        if self.interpret_on(platform):
+            return "interpret"
+        return None
+
 
 _REGISTRY: Dict[Tuple[str, str], KernelImpl] = {}
 # (kind, name, spec) -> bound callable; specs are frozen dataclasses of
@@ -169,17 +189,28 @@ def available(
     platform: Optional[str] = None,
     *,
     with_custom_bwd: Optional[bool] = None,
+    compiled_only: bool = False,
 ) -> List[str]:
     """Impl names for ``kind``, optionally filtered by platform support and
     by backward capability (``with_custom_bwd=True`` keeps only impls whose
     backward is a hand-written custom VJP — the training-safe set on
-    compiled accelerators)."""
+    compiled accelerators).
+
+    ``compiled_only=True`` (requires ``platform``) additionally drops impls
+    that only run *emulated* on the platform (``interpret_only_on``) — e.g.
+    pallas on CPU.  This is the autotuner's candidate filter: an
+    interpret-mode impl is correct but never a performance choice, so it
+    must not be selectable by measured-trajectory or roofline scoring."""
     kind = canonical_kind(kind)
+    if compiled_only and platform is None:
+        raise ValueError("compiled_only=True needs an explicit platform")
     out = []
     for (k, n), impl in sorted(_REGISTRY.items()):
         if k != kind:
             continue
         if platform is not None and not impl.supports(platform):
+            continue
+        if compiled_only and not impl.compiled_on(platform):
             continue
         if with_custom_bwd is not None and impl.has_custom_bwd != with_custom_bwd:
             continue
@@ -193,6 +224,10 @@ def capabilities(kind: str, name: Optional[str] = None) -> Dict[str, Dict]:
     Everything a caller can filter on (``platforms``, ``interpret_only_on``,
     ``needs_tables``, ``consumes_blocking``, ``uses_pallas``,
     ``has_custom_bwd``, ``description``) — the builder itself is omitted.
+    A computed ``platform_modes`` entry reports per-platform validity
+    ({platform: "compiled" | "interpret" | None} over cpu/gpu/tpu) so
+    callers — the autotuner foremost — can tell a natively-compiled
+    binding from an emulated one without re-deriving the rule.
     Pass ``name`` to restrict to one impl (KeyError if unknown)."""
     kind = canonical_kind(kind)
     impls = (
@@ -200,14 +235,18 @@ def capabilities(kind: str, name: Optional[str] = None) -> Dict[str, Dict]:
         if name is not None
         else {n: i for (k, n), i in sorted(_REGISTRY.items()) if k == kind}
     )
-    return {
-        n: {
+    out = {}
+    for n, impl in impls.items():
+        row = {
             f.name: getattr(impl, f.name)
             for f in dataclasses.fields(KernelImpl)
             if f.name not in ("kind", "name", "builder")
         }
-        for n, impl in impls.items()
-    }
+        row["platform_modes"] = {
+            p: impl.platform_mode(p) for p in ("cpu", "gpu", "tpu")
+        }
+        out[n] = row
+    return out
 
 
 def _missing_bwd_guard(fn: Callable, impl: KernelImpl) -> Callable:

@@ -1,3 +1,3 @@
 from .hlo import collective_bytes_from_hlo, compiled_cost_analysis  # noqa: F401
-from .analytic import lm_cell_cost, mace_cell_cost  # noqa: F401
+from .analytic import kernel_cell_cost, lm_cell_cost, mace_cell_cost  # noqa: F401
 from .analysis import roofline_terms, HW  # noqa: F401

@@ -706,13 +706,32 @@ def make_engine(
     *,
     mesh=None,
 ):
-    """Engine factory: ``name`` in {"sequential", "shard_map"}."""
+    """Engine factory: ``name`` in {"sequential", "shard_map"}.
+
+    A ``mace_cfg`` still carrying an ``"auto"`` impl sentinel is resolved
+    here against the committed tuning table (``kernels.autotune``) as a
+    safety net for callers that build engines directly.  The tile-geometry
+    search space is pinned to ``(tcfg.block_n, tcfg.block_e)`` — the
+    collation contract is already fixed at this layer, so the decision may
+    pick impl/bwd but must not diverge from the batch's blocking shapes
+    (the Trainer resolves *before* building its BinShape and can adopt the
+    decision's geometry instead).
+    """
     try:
         cls = ENGINES[name]
     except KeyError:
         raise KeyError(
             f"unknown engine {name!r}; available: {sorted(ENGINES)}"
         ) from None
+    from repro.kernels import autotune
+
+    if autotune.needs_resolution(mace_cfg):
+        mace_cfg, _ = autotune.resolve_mace_config(
+            mace_cfg,
+            capacity=tcfg.capacity,
+            edge_factor=tcfg.edge_factor,
+            block_candidates=[(tcfg.block_n, tcfg.block_e)],
+        )
     if cls is ShardMapEngine:
         return cls(mace_cfg, tcfg, optimizer, n_graphs, mesh=mesh)
     return cls(mace_cfg, tcfg, optimizer, n_graphs)

@@ -54,6 +54,7 @@ import jax.numpy as jnp
 
 from repro.core.mace import MaceConfig, init_mace
 from repro.data.collate import BinShape
+from repro.kernels import autotune
 from repro.data.molecules import SyntheticCFMDataset
 from repro.data.prefetch import PrefetchPipeline
 from repro.data.sampler import BalancedBatchSampler, FixedCountSampler, SamplerState
@@ -78,8 +79,14 @@ class TrainerConfig:
     compress_grads: bool = False
     engine: str = "sequential"       # "sequential" | "shard_map" (train.engine)
     prefetch: int = 0                # async collate lookahead depth (0 = inline)
+    # overrides MaceConfig.impl (symcon + channelwise_tp contraction) when
+    # set; "auto" resolves from the committed tuning table at build time
+    impl: Optional[str] = None
     # overrides MaceConfig.interaction_impl when set ("ref" | "fused" |
-    # "pallas" | registered); None leaves the model config untouched
+    # "pallas" | "auto" | registered); None leaves the model config
+    # untouched.  "auto" resolves impl + tile geometry + bwd_impl from the
+    # tuning table (kernels.autotune) — block_n/block_e below are then
+    # adopted from the decision so collation and kernel stay in lockstep.
     interaction_impl: Optional[str] = None
     # overrides MaceConfig.interaction_bwd_impl when set ("pallas" = the
     # dedicated backward kernel, "xla" = fused-XLA VJP fallback)
@@ -109,6 +116,8 @@ class Trainer:
         seed: int = 0,
         mesh=None,
     ):
+        if tcfg.impl is not None:
+            mace_cfg = dataclasses.replace(mace_cfg, impl=tcfg.impl)
         if tcfg.interaction_impl is not None:
             mace_cfg = dataclasses.replace(
                 mace_cfg, interaction_impl=tcfg.interaction_impl
@@ -117,6 +126,21 @@ class Trainer:
             mace_cfg = dataclasses.replace(
                 mace_cfg, interaction_bwd_impl=tcfg.interaction_bwd_impl
             )
+        # "auto" sentinels resolve against the committed tuning table (or
+        # the roofline fallback) for THIS run's shape bucket — before the
+        # BinShape is built, so an interaction decision's tile geometry can
+        # flow into the collation contract (blk_* arrays + block_n check
+        # below stay consistent by construction)
+        self.autotune_decisions: Dict[str, "autotune.Decision"] = {}
+        if autotune.needs_resolution(mace_cfg):
+            mace_cfg, self.autotune_decisions = autotune.resolve_mace_config(
+                mace_cfg, capacity=tcfg.capacity, edge_factor=tcfg.edge_factor
+            )
+            d = self.autotune_decisions.get("interaction")
+            if d is not None and d.block_n is not None:
+                tcfg = dataclasses.replace(
+                    tcfg, block_n=int(d.block_n), block_e=int(d.block_e)
+                )
         self.mace_cfg = mace_cfg
         self.tcfg = tcfg
         self.dataset = dataset

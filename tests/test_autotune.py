@@ -1,0 +1,423 @@
+"""Kernel autotuner decision logic (``repro.kernels.autotune``).
+
+Covers the tuner's evidence hierarchy on *synthetic* trajectories (no
+timing in this file): a measured winner is honored, a missing shape falls
+back to the roofline ranking, tied rows break deterministically, a
+stale-schema trajectory is ignored, and interpret-mode (non-viable) rows
+can never win.  Plus the committed-table lifecycle (build / lookup /
+check) and the ``impl="auto"`` resolution the Trainer and ``make_engine``
+call at build time — including the hypothesis property that resolution is
+a pure function of (config, shape, platform, table).
+"""
+import dataclasses
+import json
+
+import pytest
+
+from repro.core.mace import MaceConfig
+from repro.kernels import autotune as at
+from repro.kernels import registry
+
+from tests.hypothesis_support import given, settings, st
+
+
+def _row(kind, impl, mode, us, **params):
+    return {
+        "kind": kind, "impl": impl, "mode": mode,
+        "seconds": us / 1e6, "us": us, "params": params,
+    }
+
+
+def _run(rows, backend="cpu", quick=True, grad=True):
+    return {
+        "unix_time": 1_000, "backend": backend,
+        "interpret_pallas": backend == "cpu",
+        "grad": grad, "quick": quick, "rows": rows,
+    }
+
+
+Q_INT = {"E": 256, "N": 64, "k": 8}
+Q_SC = {"N": 64, "k": 8, "nu": 2}
+
+
+# ---------------------------------------------------------------------------
+# bucketing
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_rounds_up_to_pow2():
+    assert at.bucket_key("interaction", {"E": 4096, "N": 300, "k": 32}) == \
+        "E4096-N512-k32"
+    assert at.bucket_dims("symcon", {"N": 65, "k": 8, "nu": 2}) == \
+        {"N": 128, "k": 8, "nu": 2}
+
+
+def test_bucket_distance_is_max_log2_ratio():
+    assert at.bucket_distance({"N": 512, "k": 32}, {"N": 512, "k": 32}) == 0.0
+    assert at.bucket_distance({"N": 512, "k": 32}, {"N": 128, "k": 32}) == 2.0
+    # nu is structural: any mismatch is out of range entirely
+    a = {"N": 64, "k": 8, "nu": 2}
+    assert at.bucket_distance(a, {"N": 64, "k": 8, "nu": 3}) == float("inf")
+    assert at.bucket_distance(a, {"N": 64, "k": 8}) == float("inf")
+
+
+# ---------------------------------------------------------------------------
+# decide(): measured rows
+# ---------------------------------------------------------------------------
+
+
+def test_decide_honors_clear_measured_winner():
+    runs = [_run([
+        _row("interaction", "ref", "fwd_bwd", 300.0, blocked=False, **Q_INT),
+        _row("interaction", "fused", "fwd_bwd", 100.0, blocked=False, **Q_INT),
+    ])]
+    d = at.decide("interaction", Q_INT, "cpu", "fwd_bwd", runs=runs)
+    assert (d.impl, d.source) == ("fused", "measured")
+    assert d.score_us == pytest.approx(100.0)
+    # non-blocking winner pins no tile geometry
+    assert d.block_n is None and d.block_e is None
+
+
+def test_decide_newest_row_wins_per_config():
+    old = _run([
+        _row("interaction", "fused", "fwd_bwd", 10.0, blocked=False, **Q_INT),
+        _row("interaction", "ref", "fwd_bwd", 500.0, blocked=False, **Q_INT),
+    ])
+    new = _run([
+        _row("interaction", "fused", "fwd_bwd", 400.0, blocked=False, **Q_INT),
+        _row("interaction", "ref", "fwd_bwd", 200.0, blocked=False, **Q_INT),
+    ])
+    d = at.decide("interaction", Q_INT, "cpu", "fwd_bwd", runs=[old, new])
+    assert (d.impl, d.score_us) == ("ref", pytest.approx(200.0))
+
+
+def test_decide_tied_rows_break_to_preference_order():
+    # within TIE_RTOL the preference order (fused first) decides, so reruns
+    # with timing jitter inside the band cannot flip the committed table
+    runs = [_run([
+        _row("interaction", "ref", "fwd_bwd", 100.0, blocked=False, **Q_INT),
+        _row("interaction", "fused", "fwd_bwd", 100.9, blocked=False, **Q_INT),
+    ])]
+    d = at.decide("interaction", Q_INT, "cpu", "fwd_bwd", runs=runs)
+    assert d.impl == "fused"
+
+
+def test_decide_ignores_other_platform_and_mode_rows():
+    runs = [_run([
+        _row("interaction", "ref", "fwd_bwd", 1.0, blocked=False, **Q_INT),
+    ], backend="tpu")]
+    d = at.decide("interaction", Q_INT, "cpu", "fwd_bwd", runs=runs)
+    assert d.source == "roofline"  # the tpu row is not cpu evidence
+
+
+def test_decide_interpret_mode_rows_cannot_win():
+    # pallas rows exist in CPU trajectories (interpret mode, CI tier); even
+    # when fastest they are pruned by registry capabilities before scoring
+    runs = [_run([
+        _row("interaction", "pallas", "fwd_bwd", 1.0, blocked=True, **Q_INT),
+        _row("interaction", "fused", "fwd_bwd", 100.0, blocked=False, **Q_INT),
+        _row("interaction", "ref", "fwd_bwd", 150.0, blocked=False, **Q_INT),
+    ])]
+    d = at.decide("interaction", Q_INT, "cpu", "fwd_bwd", runs=runs)
+    assert d.impl == "fused"
+    assert "pallas" not in at.viable_candidates("interaction", "cpu", "fwd_bwd")
+    assert "pallas" in at.viable_candidates("interaction", "tpu", "fwd_bwd")
+
+
+def test_decide_near_match_bucket_answers_for_unmeasured_shape():
+    runs = [_run([
+        _row("interaction", "ref", "fwd_bwd", 300.0, blocked=False, **Q_INT),
+        _row("interaction", "fused", "fwd_bwd", 100.0, blocked=False, **Q_INT),
+    ])]
+    near = {"E": 512, "N": 128, "k": 8}  # within 2 pow2 steps per dim
+    d = at.decide("interaction", near, "cpu", "fwd_bwd", runs=runs)
+    assert (d.impl, d.source) == ("fused", "measured")
+
+
+def test_decide_missing_shape_falls_back_to_roofline():
+    runs = [_run([
+        _row("interaction", "fused", "fwd_bwd", 100.0, blocked=False, **Q_INT),
+    ])]
+    far = {"E": 65536, "N": 4096, "k": 128}  # > NEAR_MATCH_MAX_DIST away
+    d = at.decide("interaction", far, "cpu", "fwd_bwd", runs=runs)
+    assert d.source == "roofline"
+    assert d.impl in at.viable_candidates("interaction", "cpu", "fwd_bwd")
+    assert d.score_us > 0
+
+
+def test_stale_schema_trajectory_is_ignored(tmp_path):
+    p = tmp_path / "BENCH_kernels.json"
+    p.write_text(json.dumps({"schema": 99, "runs": [
+        _run([_row("symcon", "ref", "fwd_bwd", 1.0, **Q_SC)])
+    ]}))
+    assert at.load_trajectory(p) == []
+    d = at.decide("symcon", Q_SC, "cpu", "fwd_bwd", runs=at.load_trajectory(p))
+    assert d.source == "roofline"
+
+
+def test_legacy_blocked_rows_normalize_to_default_tiles():
+    # PR-5-era interaction rows carry blocked=True without explicit tile
+    # sizes; they must count as evidence for the default 32x128 geometry
+    row = _row("interaction", "pallas", "fwd_bwd", 50.0, blocked=True, **Q_INT)
+    scores = at.measured_scores([_run([row], backend="tpu")],
+                                "interaction", "tpu", "fwd_bwd", Q_INT)
+    assert ("pallas", 32, 128, "pallas") in scores
+
+
+# ---------------------------------------------------------------------------
+# the committed table: build / lookup / check
+# ---------------------------------------------------------------------------
+
+
+def _cpu_runs():
+    return [_run([
+        _row("symcon", "ref", "fwd_bwd", 220.0, **Q_SC),
+        _row("symcon", "fused", "fwd_bwd", 120.0, **Q_SC),
+        _row("symcon", "ref", "fwd", 80.0, **Q_SC),
+        _row("symcon", "fused", "fwd", 60.0, **Q_SC),
+        _row("channelwise_tp", "ref", "fwd_bwd", 400.0, E=256, k=8),
+        _row("channelwise_tp", "fused", "fwd_bwd", 150.0, E=256, k=8),
+        _row("channelwise_tp", "ref", "fwd", 90.0, E=256, k=8),
+        _row("channelwise_tp", "fused", "fwd", 70.0, E=256, k=8),
+        _row("interaction", "ref", "fwd_bwd", 500.0, blocked=False, **Q_INT),
+        _row("interaction", "fused", "fwd_bwd", 200.0, blocked=False, **Q_INT),
+        _row("interaction", "ref", "fwd", 100.0, blocked=False, **Q_INT),
+        _row("interaction", "fused", "fwd", 90.0, blocked=False, **Q_INT),
+    ])]
+
+
+def _write_trajectory(tmp_path, runs):
+    p = tmp_path / "BENCH_kernels.json"
+    p.write_text(json.dumps({"schema": 1, "runs": runs}))
+    return p
+
+
+def test_build_write_load_lookup_roundtrip(tmp_path):
+    traj = _write_trajectory(tmp_path, _cpu_runs())
+    payload = at.build_table(platforms=["cpu"], trajectory_path=traj)
+    path = at.write_table(payload, tmp_path / "TUNING_TABLE.json")
+    table = at.load_table(path)
+    assert table is not None and table["schema"] == at.SCHEMA
+    d = at.lookup(table, "interaction", Q_INT, "cpu", "fwd_bwd")
+    assert d is not None and (d.impl, d.source) == ("fused", "measured")
+    # near-match query resolves through the same entry
+    d2 = at.lookup(table, "interaction", {"E": 300, "N": 100, "k": 8},
+                   "cpu", "fwd_bwd")
+    assert d2 is not None and d2.impl == "fused"
+    # entries are sorted for stable human-readable diffs
+    keys = [(e["platform"], e["kind"], e["mode"], e["bucket"])
+            for e in table["entries"]]
+    assert keys == sorted(keys)
+
+
+def test_lookup_rejects_no_longer_viable_impl():
+    table = {"schema": 1, "entries": [{
+        "kind": "interaction", "platform": "cpu", "mode": "fwd_bwd",
+        "bucket": "E256-N64-k8", "dims": {"E": 256, "N": 64, "k": 8},
+        "impl": "pallas", "block_n": 32, "block_e": 128,
+        "bwd_impl": "pallas", "source": "measured", "score_us": 1.0,
+    }]}
+    assert at.lookup(table, "interaction", Q_INT, "cpu", "fwd_bwd") is None
+
+
+def test_check_table_healthy_and_failure_modes(tmp_path):
+    traj = _write_trajectory(tmp_path, _cpu_runs())
+    tpath = at.write_table(
+        at.build_table(platforms=["cpu"], trajectory_path=traj),
+        tmp_path / "TUNING_TABLE.json",
+    )
+    assert at.check_table("cpu", table_path=tpath, trajectory_path=traj) == []
+
+    # missing file
+    assert at.check_table("cpu", table_path=tmp_path / "nope.json",
+                          trajectory_path=traj)
+    # wrong schema
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"schema": 0, "entries": []}))
+    assert at.check_table("cpu", table_path=bad, trajectory_path=traj)
+    # missing fwd_bwd coverage for a kind
+    table = json.loads(tpath.read_text())
+    partial = {"schema": 1, "entries": [
+        e for e in table["entries"] if e["kind"] != "symcon"
+    ]}
+    p = tmp_path / "partial.json"
+    p.write_text(json.dumps(partial))
+    problems = at.check_table("cpu", table_path=p, trajectory_path=traj)
+    assert any("symcon" in msg for msg in problems)
+
+
+def test_check_table_flags_stale_decision(tmp_path):
+    traj = _write_trajectory(tmp_path, _cpu_runs())
+    table = at.build_table(platforms=["cpu"], trajectory_path=traj)
+    # newer evidence flips the interaction winner by > STALE_FACTOR
+    flipped = _run([
+        _row("interaction", "ref", "fwd_bwd", 100.0, blocked=False, **Q_INT),
+        _row("interaction", "fused", "fwd_bwd", 500.0, blocked=False, **Q_INT),
+    ])
+    traj2 = tmp_path / "traj2.json"
+    traj2.write_text(json.dumps({"schema": 1,
+                                 "runs": _cpu_runs() + [flipped]}))
+    tpath = at.write_table(table, tmp_path / "TUNING_TABLE.json")
+    problems = at.check_table("cpu", table_path=tpath, trajectory_path=traj2)
+    assert any("stale" in msg for msg in problems)
+    # regenerating from the same trajectory clears it
+    tpath = at.write_table(
+        at.build_table(platforms=["cpu"], trajectory_path=traj2), tpath
+    )
+    assert at.check_table("cpu", table_path=tpath,
+                          trajectory_path=traj2) == []
+
+
+def test_committed_table_is_valid_for_cpu():
+    """The repo's own TUNING_TABLE.json must pass CI's check mode."""
+    assert at.DEFAULT_TABLE_PATH.exists(), "TUNING_TABLE.json not committed"
+    assert at.check_table("cpu") == []
+
+
+# ---------------------------------------------------------------------------
+# impl="auto" resolution
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_replaces_auto_sentinels(tmp_path):
+    traj = _write_trajectory(tmp_path, _cpu_runs())
+    table = at.build_table(platforms=["cpu"], trajectory_path=traj)
+    cfg = MaceConfig(channels=8, impl="auto", interaction_impl="auto")
+    assert at.needs_resolution(cfg)
+    resolved, decisions = at.resolve_mace_config(
+        cfg, capacity=64, edge_factor=4, platform="cpu", table=table
+    )
+    assert resolved.impl != "auto" and resolved.interaction_impl != "auto"
+    assert set(decisions) == {"symcon", "channelwise_tp", "interaction"}
+    assert decisions["interaction"].impl == resolved.interaction_impl
+    # symcon and channelwise_tp share one config field -> one shared impl
+    assert decisions["symcon"].impl == decisions["channelwise_tp"].impl \
+        == resolved.impl
+    # measured evidence at this bucket says fused for all kinds
+    assert resolved.impl == "fused"
+    assert resolved.interaction_impl == "fused"
+
+
+def test_resolve_without_auto_is_identity():
+    cfg = MaceConfig(impl="fused", interaction_impl="ref")
+    assert not at.needs_resolution(cfg)
+    resolved, decisions = at.resolve_mace_config(
+        cfg, capacity=64, edge_factor=4, platform="cpu", table=None
+    )
+    assert resolved is cfg and decisions == {}
+
+
+def test_resolve_adopts_tile_geometry_on_tpu():
+    table = {"schema": 1, "entries": [{
+        "kind": "interaction", "platform": "tpu", "mode": "fwd_bwd",
+        "bucket": "E256-N64-k8", "dims": {"E": 256, "N": 64, "k": 8},
+        "impl": "pallas", "block_n": 16, "block_e": 256,
+        "bwd_impl": "xla", "source": "measured", "score_us": 5.0,
+    }]}
+    cfg = MaceConfig(channels=8, impl="fused", interaction_impl="auto")
+    resolved, decisions = at.resolve_mace_config(
+        cfg, capacity=64, edge_factor=4, platform="tpu", table=table
+    )
+    assert resolved.interaction_impl == "pallas"
+    assert resolved.interaction_block_n == 16
+    assert resolved.interaction_bwd_impl == "xla"
+    assert decisions["interaction"].block_e == 256
+
+
+def test_resolve_no_table_uses_roofline(tmp_path):
+    cfg = MaceConfig(channels=8, interaction_impl="auto")
+    resolved, decisions = at.resolve_mace_config(
+        cfg, capacity=64, edge_factor=4, platform="cpu",
+        table_path=tmp_path / "missing.json",
+    )
+    assert resolved.interaction_impl in \
+        at.viable_candidates("interaction", "cpu", "fwd_bwd")
+    assert decisions["interaction"].source == "roofline"
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    capacity=st.sampled_from([32, 64, 128, 256, 512]),
+    edge_factor=st.sampled_from([4, 16, 48]),
+    channels=st.sampled_from([4, 8, 32]),
+    platform=st.sampled_from(["cpu", "tpu"]),
+)
+def test_resolution_is_deterministic_for_fixed_table(
+    capacity, edge_factor, channels, platform
+):
+    """impl="auto" resolution is a pure function of (config, shape bucket,
+    platform, table): two identical calls agree exactly — the property that
+    makes a committed table reproducible across engine rebuilds."""
+    table = at.load_table()  # the committed repo table
+    cfg = MaceConfig(channels=channels, impl="auto", interaction_impl="auto")
+    a = at.resolve_mace_config(cfg, capacity=capacity,
+                               edge_factor=edge_factor,
+                               platform=platform, table=table)
+    b = at.resolve_mace_config(cfg, capacity=capacity,
+                               edge_factor=edge_factor,
+                               platform=platform, table=table)
+    assert a[0] == b[0]
+    assert a[1] == b[1]
+    assert a[0].impl != "auto" and a[0].interaction_impl != "auto"
+
+
+# ---------------------------------------------------------------------------
+# trajectory retention (bench_kernels --max-runs / --keep-per-key)
+# ---------------------------------------------------------------------------
+
+
+def test_prune_runs_keeps_newest_per_key_and_caps_total():
+    from benchmarks.bench_kernels import prune_runs
+
+    runs = []
+    for i in range(12):
+        runs.append({**_run([], quick=True), "unix_time": i})
+    runs.append({**_run([], quick=False), "unix_time": 100})  # full-size run
+    kept = prune_runs(runs, max_runs=50, keep_per_key=3)
+    # 3 newest quick runs + the lone full-size run, chronological order
+    assert [r["unix_time"] for r in kept] == [9, 10, 11, 100]
+    # the total cap still applies after per-key retention
+    assert len(prune_runs(runs, max_runs=2, keep_per_key=3)) == 2
+
+
+def test_write_bench_json_applies_retention(tmp_path):
+    from benchmarks.bench_kernels import write_bench_json
+
+    path = tmp_path / "BENCH_kernels.json"
+    for _ in range(5):
+        write_bench_json([], path, grad=True, quick=True, keep_per_key=2)
+    runs = json.loads(path.read_text())["runs"]
+    assert len(runs) == 2
+
+
+def test_bench_kernels_capabilities_flag(capsys):
+    from benchmarks.bench_kernels import main
+
+    assert main(["--capabilities"]) == []
+    dump = json.loads(capsys.readouterr().out)
+    assert set(dump) == set(registry.KINDS)
+    assert dump["interaction"]["pallas"]["platform_modes"]["cpu"] == "interpret"
+    assert dump["interaction"]["pallas"]["platform_modes"]["tpu"] == "compiled"
+
+
+# ---------------------------------------------------------------------------
+# registry capability additions backing the tuner
+# ---------------------------------------------------------------------------
+
+
+def test_available_compiled_only_filter():
+    assert "pallas" not in registry.available(
+        "interaction", platform="cpu", compiled_only=True
+    )
+    assert "pallas" in registry.available(
+        "interaction", platform="tpu", compiled_only=True
+    )
+    with pytest.raises(ValueError):
+        registry.available("interaction", compiled_only=True)
+
+
+def test_platform_mode_reporting():
+    impl = registry.get_impl("interaction", "pallas")
+    assert impl.platform_mode("tpu") == "compiled"
+    assert impl.platform_mode("cpu") == "interpret"
+    assert impl.platform_mode("gpu") is None

@@ -322,7 +322,7 @@ EQUIV_VARIANTS = [
 SCRIPT = r"""
 import os, sys
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
-import json
+import dataclasses, json
 import numpy as np, jax
 from repro.core.mace import MaceConfig
 from repro.data.molecules import SyntheticCFMDataset
@@ -376,6 +376,10 @@ for engine, depth in cfg["variants"]:
         "overlap_s": tel.overlap_seconds(skip=1),
         "block_s": tel.blocking_seconds(),
         "ef_live": bool(compress) and ef_live(tr),
+        "resolved_impl": tr.mace_cfg.impl,
+        "resolved_interaction": tr.mace_cfg.interaction_impl,
+        "autotune": {k: dataclasses.asdict(d)
+                     for k, d in tr.autotune_decisions.items()},
     }
 print("RESULT " + json.dumps(out))
 """
@@ -490,3 +494,43 @@ def test_engine_matrix_all_pallas_kernels_fwd_and_bwd():
     )
     assert set(out["variants"]) == {f"{e}_p{d}" for e, d in variants}
     assert all(rec["block_s"] > 0.0 for rec in out["variants"].values())
+
+
+@pytest.mark.slow
+def test_engine_matrix_autotuned_impl_matches_ref_oracle():
+    """Acceptance proof for ``impl="auto"`` end-to-end: the engine matrix
+    (sequential/shard_map x prefetch 0/1) trained with BOTH impl sentinels
+    on "auto" — so the Trainer resolves symcon/channelwise_tp AND the
+    interaction (impl + tile geometry + bwd) from the committed tuning
+    table / roofline fallback before building its engine — is allclose to
+    the ref-impl non-prefetched SequentialEngine oracle on the forced
+    2-device mesh.  Every variant must report the concrete decisions it
+    trained with, they must agree across variants (resolution is a pure
+    function of config + shape + table), and no "auto" may survive to the
+    model config.  Cross-impl tolerances as in the pallas matrices: the
+    impls reassociate float32 sums."""
+    variants = [("sequential", 0), ("sequential", 1),
+                ("shard_map", 0), ("shard_map", 1)]
+    out = run_equivalence_matrix(
+        compress=False, variants=variants, steps=3,
+        mace={"impl": "auto", "interaction_impl": "auto"},
+        oracle_mace={"impl": "fused", "interaction_impl": "ref"},
+        tcfg={"edge_factor": 16},
+        loss_rtol=2e-4, rtol=1e-3, atol=1e-5,
+    )
+    assert set(out["variants"]) == {f"{e}_p{d}" for e, d in variants}
+    recs = list(out["variants"].values())
+    for rec in recs:
+        assert rec["resolved_impl"] not in ("auto", None)
+        assert rec["resolved_interaction"] not in ("auto", None)
+        assert set(rec["autotune"]) == {
+            "symcon", "channelwise_tp", "interaction"
+        }
+        for d in rec["autotune"].values():
+            assert d["impl"] not in ("auto", None)
+            assert d["source"] in ("measured", "roofline")
+            assert d["mode"] == "fwd_bwd" and d["platform"] == "cpu"
+    # deterministic: every variant resolved to the same decisions
+    assert all(rec["autotune"] == recs[0]["autotune"] for rec in recs[1:])
+    assert all(rec["resolved_impl"] == recs[0]["resolved_impl"]
+               for rec in recs[1:])
