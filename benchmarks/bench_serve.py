@@ -1,0 +1,199 @@
+"""Serving load test: skewed-size request mix through the graph server.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve --quick --json BENCH_serve.json
+
+Drives ``repro.serve.GraphServer`` with the workload the bucket ladder
+exists for: a skewed size distribution mixing *hub* molecules (large
+graphs near the top bucket's capacity — the liquid-water/zeolite tail of
+the paper's Table 3 mixture) with waves of small ones.  Emits a
+machine-readable ``BENCH_serve.json`` run with
+
+* throughput (graphs/s over the load window),
+* p50/p99/mean request latency (submit -> result),
+* per-bucket batching evidence (bins/graphs per bucket),
+* the **bucket jit-cache census** — the acceptance criterion: after the
+  warm start, at most ONE compiled program per ``BinShape`` bucket, no
+  matter how ragged the request tail was (``census_ok``); ``--check``
+  makes a violated census a non-zero exit for CI.
+
+Same trajectory-file contract as ``bench_kernels``: one run appended per
+invocation, ``{"schema": 1, "runs": [...]}``, oldest first.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import random
+import time
+from pathlib import Path
+
+import jax
+
+from repro.core.mace import MaceConfig, init_mace
+from repro.data.molecules import SyntheticCFMDataset
+from repro.serve import GraphServer, ServeConfig
+
+MAX_TRAJECTORY_RUNS = 40
+
+
+def quick_mace_config(channels: int = 8) -> MaceConfig:
+    """Small-but-real MACE for CPU serving runs (same family the kernel
+    benchmarks use at quick tier)."""
+    return MaceConfig(
+        n_species=10, channels=channels, hidden_ls=(0, 1), sh_lmax=2,
+        a_ls=(0, 1, 2), correlation=2, n_interactions=2,
+        avg_num_neighbors=10.0, impl="fused", interaction_impl="auto",
+    )
+
+
+def skewed_requests(
+    dataset: SyntheticCFMDataset,
+    n_requests: int,
+    hub_frac: float,
+    max_nodes: int,
+    seed: int = 0,
+):
+    """Request stream with a skewed size mix: ``hub_frac`` of requests come
+    from the largest graphs in the dataset (hub molecules), the rest from
+    the small end — shuffled so hubs arrive interleaved with small waves."""
+    sizes = dataset.sizes
+    fit = [i for i in range(len(dataset)) if sizes[i] <= max_nodes]
+    by_size = sorted(fit, key=lambda i: int(sizes[i]))
+    n_hub_pool = max(1, len(by_size) // 5)
+    hub_pool = by_size[-n_hub_pool:]
+    small_pool = by_size[: len(by_size) - n_hub_pool]
+    rng = random.Random(seed)
+    n_hub = int(round(n_requests * hub_frac))
+    picks = [rng.choice(hub_pool) for _ in range(n_hub)] + [
+        rng.choice(small_pool) for _ in range(n_requests - n_hub)
+    ]
+    rng.shuffle(picks)
+    return [dataset.get(i) for i in picks]
+
+
+def run_load(args) -> dict:
+    cfg = quick_mace_config(args.channels)
+    params = init_mace(jax.random.PRNGKey(0), cfg)
+    capacities = tuple(int(c) for c in args.capacities.split(","))
+    dataset = SyntheticCFMDataset(
+        args.dataset_size, seed=1, max_atoms=max(capacities)
+    )
+    scfg = ServeConfig(
+        capacities=capacities,
+        edge_factor=args.edge_factor,
+        n_workers=args.workers,
+        max_wait_s=args.max_wait_s,
+    )
+
+    t0 = time.perf_counter()
+    server = GraphServer(cfg, params, scfg)
+    warmup_s = time.perf_counter() - t0
+    mols = skewed_requests(
+        dataset, args.requests, args.hub_frac, max(capacities), seed=2
+    )
+    futures = [server.submit(m, timeout=30.0) for m in mols]
+    results = [f.result(timeout=args.timeout_s) for f in futures]
+    stats = server.stats()
+    server.close()
+
+    census = stats["compile_census"]
+    census_ok = all(v == 1 for v in census.values())
+    row = {
+        "row": "serve_load",
+        "unix_time": int(time.time()),
+        "backend": jax.default_backend(),
+        "quick": bool(args.quick),
+        "n_requests": len(results),
+        "hub_frac": args.hub_frac,
+        "n_workers": args.workers,
+        "capacities": list(capacities),
+        "warmup_s": warmup_s,
+        "graphs_per_s": stats["graphs_per_s"],
+        "latency_p50_ms": stats["latency_p50_ms"],
+        "latency_p99_ms": stats["latency_p99_ms"],
+        "latency_mean_ms": stats["latency_mean_ms"],
+        "bucket_bins": stats["bucket_bins"],
+        "bucket_graphs": stats["bucket_graphs"],
+        "compile_census": census,
+        "census_ok": census_ok,
+        "failed": stats["failed"],
+        "rebuilds": stats["rebuilds"],
+    }
+    return row
+
+
+def write_bench_json(row: dict, path) -> dict:
+    path = Path(path)
+    runs = []
+    if path.exists():
+        try:
+            prior = json.loads(path.read_text())
+            if prior.get("schema") == 1:
+                runs = list(prior.get("runs", []))
+        except (ValueError, AttributeError):
+            runs = []
+    runs = (runs + [row])[-MAX_TRAJECTORY_RUNS:]
+    payload = {
+        "schema": 1,
+        "generated_by": "benchmarks/bench_serve.py",
+        "runs": runs,
+    }
+    path.write_text(json.dumps(payload, indent=1) + "\n")
+    return payload
+
+
+def main(argv=()):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--requests", type=int, default=None,
+                    help="number of requests in the load test")
+    ap.add_argument("--hub-frac", type=float, default=0.15,
+                    help="fraction of requests that are hub molecules")
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--capacities", default=None,
+                    help="comma-separated bucket ladder (atoms)")
+    ap.add_argument("--edge-factor", type=int, default=48)
+    ap.add_argument("--channels", type=int, default=8)
+    ap.add_argument("--dataset-size", type=int, default=None)
+    ap.add_argument("--max-wait-s", type=float, default=0.01,
+                    help="batching window")
+    ap.add_argument("--timeout-s", type=float, default=300.0)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI tier: small ladder, few requests")
+    ap.add_argument("--json", default=None, help="trajectory file to append")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero if the bucket census shows a "
+                         "retrace (any bucket compiled more than once)")
+    args = ap.parse_args(argv or None)
+    if args.requests is None:
+        args.requests = 48 if args.quick else 256
+    if args.capacities is None:
+        args.capacities = "64,128" if args.quick else "64,256,512"
+    if args.dataset_size is None:
+        args.dataset_size = 128 if args.quick else 512
+
+    row = run_load(args)
+    print(
+        f"[serve] {row['n_requests']} requests "
+        f"(hub_frac={row['hub_frac']}, workers={row['n_workers']}, "
+        f"buckets={row['capacities']}): "
+        f"{row['graphs_per_s']:.1f} graphs/s  "
+        f"p50={row['latency_p50_ms']:.0f}ms p99={row['latency_p99_ms']:.0f}ms"
+    )
+    print(f"[serve] bucket bins: {row['bucket_bins']}")
+    print(f"[serve] compile census: {row['compile_census']} "
+          f"(ok={row['census_ok']})")
+    if args.json:
+        write_bench_json(row, args.json)
+        print(f"[serve] appended to {args.json}")
+    if args.check and not row["census_ok"]:
+        print("[serve] FAIL: a bucket compiled more than once "
+              "(tail-shape retrace)")
+        return 1
+    if args.check and row["failed"]:
+        print(f"[serve] FAIL: {row['failed']} requests failed")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -31,7 +31,13 @@ is that overlap as a first-class subsystem:
   (``train_loop.Trainer.rescale`` reports the discard count per event).
 * **Exception propagation** — a producer-side error (bad molecule, collate
   overflow, ...) is captured and re-raised in the *consumer* at the step
-  where it would have surfaced in the inline loop.
+  where it would have surfaced in the inline loop.  An in-flight producer
+  exception that the consumer never reaches (early exit: rescale drain,
+  ``max_steps``) is *not* silently discarded by ``close()``: it is kept on
+  :attr:`error` and logged, and callers that drain deliberately
+  (``Trainer.run_epoch``'s rescale/max_steps exits) re-raise it via
+  :meth:`raise_pending` so a real collate failure can never be masked by
+  the shutdown path.
 * **Telemetry** — every yielded :class:`PrefetchItem` carries ``collate_s``
   (host wall seconds spent building the batch) and ``wait_s`` (seconds the
   consumer blocked waiting for it).  ``overlap_s = max(collate_s - wait_s,
@@ -42,6 +48,7 @@ is that overlap as a first-class subsystem:
 from __future__ import annotations
 
 import dataclasses
+import logging
 import queue
 import threading
 import time
@@ -52,6 +59,8 @@ __all__ = ["PrefetchItem", "PrefetchPipeline"]
 
 # producer poll period for stop-flag re-checks while the queue is full
 _PUT_POLL_S = 0.05
+
+_log = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass
@@ -146,6 +155,10 @@ class PrefetchPipeline:
         #: finished batches thrown away by close() — in-flight work a
         #: drain-and-rebuild (elastic rescale, early exit) chose not to use
         self.discarded = 0
+        #: a producer exception (captured when the consumer raises it, or
+        #: when close() finds one still in flight) — never silently lost
+        self.error: Optional[BaseException] = None
+        self._error_delivered = False
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self._queue: Optional["queue.Queue"] = None
@@ -196,6 +209,8 @@ class PrefetchPipeline:
             self.close()
             raise StopIteration
         if isinstance(payload, BaseException):
+            self.error = payload
+            self._error_delivered = True
             self.close()
             if isinstance(payload, StopIteration):
                 # a StopIteration leaked out of fetch on the producer side;
@@ -215,20 +230,53 @@ class PrefetchPipeline:
         the producer's put loop re-checks the stop flag, and the queue is
         drained here so a blocked put always unblocks.  Finished batches
         still in flight are discarded (counted in :attr:`discarded`) — the
-        drain half of the rescale path's drain-and-rebuild."""
+        drain half of the rescale path's drain-and-rebuild.  An in-flight
+        producer *exception* is never discarded with them: it is captured
+        on :attr:`error` and logged, so deliberate early exits can surface
+        it via :meth:`raise_pending`."""
         self._stop.set()
         if self._thread is None:
             return
         while self._thread.is_alive():
-            if self._queue is not None:
-                try:
-                    while True:
-                        if isinstance(self._queue.get_nowait(), PrefetchItem):
-                            self.discarded += 1
-                except queue.Empty:
-                    pass
+            self._drain_queue()
             self._thread.join(timeout=_PUT_POLL_S)
         self._thread = None
+        # the producer may have finished BEFORE close() was called (e.g. it
+        # enqueued its exception and exited): the queue still needs one
+        # final drain or that error would sit there unobserved
+        self._drain_queue()
+
+    def _drain_queue(self) -> None:
+        if self._queue is None:
+            return
+        try:
+            while True:
+                payload = self._queue.get_nowait()
+                if isinstance(payload, PrefetchItem):
+                    self.discarded += 1
+                elif isinstance(payload, BaseException):
+                    # a real collate failure raced the shutdown; a plain
+                    # drain would mask it (the original bug)
+                    if self.error is None:
+                        self.error = payload
+                    _log.warning(
+                        "prefetch close() drained an undelivered "
+                        "producer exception: %r", payload,
+                    )
+        except queue.Empty:
+            pass
+
+    def raise_pending(self) -> None:
+        """Re-raise a producer exception that the consumer never received
+        (one drained by :meth:`close` during an early exit).  No-op when the
+        stream ended cleanly or the error already surfaced in ``__next__``."""
+        if self.error is not None and not self._error_delivered:
+            self._error_delivered = True
+            if isinstance(self.error, StopIteration):
+                raise RuntimeError(
+                    "prefetch fetch raised StopIteration"
+                ) from self.error
+            raise self.error
 
     def __enter__(self) -> "PrefetchPipeline":
         return self

@@ -45,6 +45,16 @@ def main() -> None:
     while pending:
         batch = pending[: args.batch]
         pending = pending[args.batch :]
+        n_real = len(batch)
+        if n_real < args.batch:
+            # pad the tail batch to the full batch shape: a smaller leading
+            # dim would be a brand-new jit signature (one extra compile for
+            # prefill AND every decode step) just to serve the remainder;
+            # masked dummy slots keep exactly one compiled program per shape
+            batch = batch + [
+                np.zeros(args.prompt_len, np.int32)
+                for _ in range(args.batch - n_real)
+            ]
         prompts = jnp.asarray(np.stack(batch))
         logits, state = prefill(params, prompts)
         tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
@@ -53,9 +63,12 @@ def main() -> None:
                 params, state, tok, jnp.asarray(args.prompt_len + i, jnp.int32)
             )
             tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        done += len(batch)
+        done += n_real
         print(f"served {done}/{args.requests} "
               f"({done * args.max_new / (time.perf_counter() - t0):.1f} tok/s)")
+    assert prefill._cache_size() == 1 and step._cache_size() == 1, (
+        "serve loop retraced: tail batch hit a new shape"
+    )
     print("OK")
 
 

@@ -1,0 +1,75 @@
+"""Continuous-batching MACE graph-serving engine.
+
+The production-inference twin of the training stack: the paper's
+Algorithm-1 bin packer — built to balance variable-size molecular graphs
+across training ranks — is exactly what an inference server needs to batch
+heterogeneous requests without per-shape recompiles.  This package is that
+server, in three layers with a narrow contract between each:
+
+**Queue** (``server.GraphServer.submit``)
+    A *bounded* request queue of variable-size molecular graphs.
+    ``submit(mol)`` returns a ``concurrent.futures.Future`` of a
+    :class:`~repro.serve.server.ServeResult` (energy, per-atom forces,
+    latency, batching evidence).  Backpressure is the queue filling up —
+    ``ServerSaturated`` after the submit timeout — never unbounded
+    buffering; graphs too large for any bucket are rejected at the door
+    (``RequestTooLarge``).
+
+**Buckets** (``buckets``)
+    A batcher thread gathers request waves and packs them with Algorithm 1
+    (``core.binpack.create_balanced_batches``) at the largest bucket's
+    capacity, then deals each packed bin into the smallest fitting
+    :class:`~repro.data.collate.BinShape` from a small fixed **ladder**.
+    Every batch therefore collates to one of ``len(ladder)`` static
+    shapes: the jit cache is bounded, compiles are warm-started at
+    startup, and partial bins are *padding inside a known shape* — never a
+    new leading dim, never a tail-shape retrace
+    (``ServeEngine.compile_census`` proves at most one compiled program
+    per bucket; asserted in tests and recorded in ``BENCH_serve.json``).
+
+**Workers** (``server`` fleet + ``engine.ServeEngine``)
+    N worker threads pull packed bins, collate to the bucket shape —
+    host-side edge blocking included when the registry-resolved
+    (autotuned, ``impl="auto"``) kernel consumes it — run the
+    warm-compiled forward, and route per-graph energies/forces back to
+    their futures.  Per-worker healthcheck + latency/throughput telemetry
+    ride on the fleet; a dead worker triggers **drain-and-rebuild**
+    reusing the PR-4 ``engine.close()`` / factory machinery: survivors
+    stop at a bin boundary, in-flight bins are requeued (zero dropped
+    requests), the engine is rebuilt warm, and a full fleet restarts.
+
+Entry points: ``examples/serve_mace.py`` (demo client + skewed-size load
+test) and ``benchmarks/bench_serve.py`` (``BENCH_serve.json``:
+graphs/s + p50/p99 latency + the bucket census).
+"""
+from .buckets import (  # noqa: F401
+    RequestTooLarge,
+    bucket_key,
+    bucket_ladder,
+    pack_requests,
+    select_bucket,
+)
+from .engine import ServeEngine, make_serve_engine, resolve_serve_config  # noqa: F401
+from .server import (  # noqa: F401
+    GraphServer,
+    ServeConfig,
+    ServeResult,
+    ServerClosed,
+    ServerSaturated,
+)
+
+__all__ = [
+    "GraphServer",
+    "ServeConfig",
+    "ServeResult",
+    "ServeEngine",
+    "ServerClosed",
+    "ServerSaturated",
+    "RequestTooLarge",
+    "bucket_ladder",
+    "bucket_key",
+    "pack_requests",
+    "select_bucket",
+    "make_serve_engine",
+    "resolve_serve_config",
+]

@@ -67,6 +67,21 @@ def _unflatten(template: PyTree, flat: Dict[str, np.ndarray]) -> PyTree:
     return jax.tree_util.tree_unflatten(paths_leaves[1], leaves)
 
 
+def _fsync_dir(path: str) -> None:
+    """fsync a directory so its entries (renames, new files) are durable.
+    Best-effort on platforms whose filesystems reject directory fds."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
 def save_checkpoint(
     directory: str,
     step: int,
@@ -83,30 +98,60 @@ def save_checkpoint(
         shutil.rmtree(tmp)
     os.makedirs(tmp)
 
+    # Durability contract: every payload byte must be on disk BEFORE the
+    # COMMITTED marker exists — a marker that can outlive its payload after
+    # a crash would surface a "committed" checkpoint with truncated shards.
     flat = _flatten(state)
-    np.savez(os.path.join(tmp, f"arrays.{process_index}.npz"), **flat)
+    with open(os.path.join(tmp, f"arrays.{process_index}.npz"), "wb") as f:
+        np.savez(f, **flat)
+        f.flush()
+        os.fsync(f.fileno())
     with open(os.path.join(tmp, "meta.json"), "w") as f:
         json.dump({"step": step, **(meta or {})}, f)
+        f.flush()
+        os.fsync(f.fileno())
     # commit marker last, then atomic rename
     with open(os.path.join(tmp, "COMMITTED"), "w") as f:
         f.write("ok")
         f.flush()
         os.fsync(f.fileno())
+    # the tmp dir's entries (payload + marker) must be durable before the
+    # rename publishes them under the committed name
+    _fsync_dir(tmp)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
+    # the rename itself lives in the parent directory's entries
+    _fsync_dir(directory)
 
-    _gc(directory, keep)
+    _gc(directory, keep, process_index=process_index)
     return final
 
 
-def _gc(directory: str, keep: int) -> None:
+def _gc(directory: str, keep: int, *, process_index: int = 0) -> None:
     steps = sorted(_committed_steps(directory))
     for s in steps[:-keep] if keep > 0 else []:
         shutil.rmtree(os.path.join(directory, f"step_{s:010d}"), ignore_errors=True)
-    # clean stale tmp dirs (crashed writers)
+    # Clean stale tmp dirs from OUR OWN crashed writes only.  In the
+    # multi-host layout every process writes ``tmp.<step>.<proc>`` into the
+    # same directory, so rmtree'ing every ``tmp.*`` entry would destroy the
+    # in-progress write of a concurrent peer.  Scope to this process_index
+    # and to steps strictly older than the newest commit (a tmp at or past
+    # the newest commit may be a writer that is still mid-commit).
+    newest = steps[-1] if steps else None
     for name in os.listdir(directory):
-        if name.startswith("tmp."):
+        if not name.startswith("tmp."):
+            continue
+        parts = name.split(".")
+        if len(parts) != 3:
+            continue  # unrecognised layout: leave it for a human
+        try:
+            tmp_step, tmp_proc = int(parts[1]), int(parts[2])
+        except ValueError:
+            continue
+        if tmp_proc != process_index:
+            continue  # a concurrent writer's directory — never ours to GC
+        if newest is not None and tmp_step < newest:
             shutil.rmtree(os.path.join(directory, name), ignore_errors=True)
 
 

@@ -368,6 +368,7 @@ class Trainer:
         boundary re-applies the rescale it was about to do.  Returns True
         when ``max_steps`` was reached (the run should stop)."""
         pipeline = None
+        stop = False
         while True:
             if self.global_step in self.rescale_schedule:
                 # either the loop just drained the pipeline for this entry,
@@ -417,7 +418,15 @@ class Trainer:
                     if self.global_step in self.rescale_schedule:
                         break  # leave the with-block: drain, fire at loop top
                     if max_steps and self.global_step >= max_steps:
-                        return True
+                        stop = True
+                        break
+            # the drain above (rescale boundary or max_steps) discards
+            # in-flight batches but must never discard an in-flight producer
+            # exception — a masked collate error would resurface steps later
+            # (or never); surface it at the boundary instead
+            pipeline.raise_pending()
+            if stop:
+                return True
             if self.global_step not in self.rescale_schedule:
                 return False  # epoch stream exhausted, nothing pending
 

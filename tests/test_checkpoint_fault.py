@@ -1,0 +1,169 @@
+"""Checkpoint fault-path tests: durability ordering, crash-mid-commit
+recovery, and multi-host tmp garbage collection.
+
+Complements tests/test_train.py's happy-path roundtrip/retention tests with
+the failure half of the atomic-commit contract:
+
+* every payload byte is fsynced BEFORE the COMMITTED marker is written
+  (a crash can truncate payloads but never leave a marker without them);
+* a crash between payload write and publish leaves the previous committed
+  step as the restore target, and the next successful save garbage-collects
+  the stale tmp directory it left behind;
+* GC never touches a concurrent writer's ``tmp.<step>.<proc>`` directory
+  (multi-host: every process writes into the same checkpoint dir).
+"""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import checkpoint
+from repro.train.checkpoint import (
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+
+def _state(v: float):
+    return {"w": jnp.full((3,), v), "b": jnp.asarray(v)}
+
+
+# ---------------------------------------------------------------------------
+# durability ordering: payload fsync happens-before the marker
+# ---------------------------------------------------------------------------
+
+
+def test_payloads_fsynced_before_marker(tmp_path, monkeypatch):
+    """Record the fsync order by resolving each fd through /proc: the array
+    shard and meta.json must both be durable before the COMMITTED marker is
+    even written, and the parent directory is fsynced after the rename."""
+    fsynced = []
+    real_fsync = os.fsync
+
+    def spy_fsync(fd):
+        try:
+            fsynced.append(os.readlink(f"/proc/self/fd/{fd}"))
+        except OSError:
+            fsynced.append("<unknown>")
+        return real_fsync(fd)
+
+    monkeypatch.setattr(checkpoint.os, "fsync", spy_fsync)
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 1, _state(1.0))
+
+    def first(suffix):
+        hits = [i for i, p in enumerate(fsynced) if p.endswith(suffix)]
+        assert hits, f"nothing matching {suffix!r} was fsynced: {fsynced}"
+        return hits[0]
+
+    assert first("arrays.0.npz") < first("COMMITTED")
+    assert first("meta.json") < first("COMMITTED")
+    # rename durability: the tmp dir's entries before publish, the parent's
+    # entries (the rename itself) after
+    assert first("tmp.1.0") < first("/ckpt")
+    assert first("COMMITTED") < first("/ckpt")
+
+
+# ---------------------------------------------------------------------------
+# crash mid-commit
+# ---------------------------------------------------------------------------
+
+
+def test_crash_before_publish_restores_previous_step(tmp_path, monkeypatch):
+    """Kill the writer between payload write and publish: the previous
+    committed step stays the restore target and no half-written state is
+    visible as committed."""
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 1, _state(1.0))
+
+    def boom(src, dst):
+        raise OSError("simulated crash at publish")
+
+    monkeypatch.setattr(checkpoint.os, "rename", boom)
+    with pytest.raises(OSError, match="simulated crash"):
+        save_checkpoint(d, 2, _state(2.0))
+
+    # restore picks the previous committed step, values intact
+    assert latest_step(d) == 1
+    step, restored, _ = restore_checkpoint(d, _state(0.0))
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.full((3,), 1.0))
+    # the crashed write's tmp dir is still on disk (never silently lost)
+    assert os.path.isdir(os.path.join(d, "tmp.2.0"))
+
+
+def test_recovery_save_gcs_own_stale_tmp(tmp_path, monkeypatch):
+    """After a crash the next successful save cleans up this process's
+    stale tmp dir (its step is now older than the newest commit)."""
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 1, _state(1.0))
+    with monkeypatch.context() as m:
+        m.setattr(checkpoint.os, "rename",
+                  lambda s, t: (_ for _ in ()).throw(OSError("crash")))
+        with pytest.raises(OSError):
+            save_checkpoint(d, 2, _state(2.0))
+    assert os.path.isdir(os.path.join(d, "tmp.2.0"))
+
+    save_checkpoint(d, 3, _state(3.0))
+    assert latest_step(d) == 3
+    assert not os.path.exists(os.path.join(d, "tmp.2.0"))
+
+
+def test_marker_required_for_commit(tmp_path):
+    """A published dir without COMMITTED (crash between rename halves on a
+    non-atomic filesystem) is ignored by restore."""
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 1, _state(1.0))
+    fake = os.path.join(d, "step_0000000002")
+    os.makedirs(fake)
+    with open(os.path.join(fake, "meta.json"), "w") as f:
+        f.write("{}")
+    assert latest_step(d) == 1
+
+
+# ---------------------------------------------------------------------------
+# multi-host tmp GC scoping
+# ---------------------------------------------------------------------------
+
+
+def test_gc_preserves_concurrent_writer_tmp(tmp_path):
+    """GC only removes OUR stale tmp dirs: a peer process's in-progress
+    ``tmp.<step>.<other_proc>`` must survive our save, as must anything
+    with an unrecognised name."""
+    d = str(tmp_path / "ckpt")
+    os.makedirs(d)
+    # a concurrent peer (process 1) mid-write at step 5
+    peer = os.path.join(d, "tmp.5.1")
+    os.makedirs(peer)
+    # our own crashed write at step 5 (process 0)
+    ours = os.path.join(d, "tmp.5.0")
+    os.makedirs(ours)
+    # legacy/unrecognised layout: never auto-deleted
+    weird = os.path.join(d, "tmp.oops")
+    os.makedirs(weird)
+
+    save_checkpoint(d, 6, _state(6.0), process_index=0)
+
+    assert os.path.isdir(peer), "GC destroyed a concurrent writer's tmp dir"
+    assert os.path.isdir(weird), "GC deleted an unrecognised tmp entry"
+    assert not os.path.exists(ours), "our own stale tmp should be GC'd"
+
+
+def test_gc_keeps_tmp_at_or_past_newest_commit(tmp_path):
+    """A tmp dir at (or newer than) the newest committed step may belong to
+    a writer that is still mid-commit — never GC it."""
+    d = str(tmp_path / "ckpt")
+    os.makedirs(d)
+    current = os.path.join(d, "tmp.7.0")
+    future = os.path.join(d, "tmp.9.0")
+    os.makedirs(current)
+    os.makedirs(future)
+
+    save_checkpoint(d, 7, _state(7.0), process_index=0)
+    # step 7 just committed: tmp.7.0 was consumed by the rename?  No — the
+    # save wrote its own tmp.7.0 (replacing ours) and renamed it away, so
+    # neither entry may linger below the newest step
+    assert not os.path.exists(current)
+    assert os.path.isdir(future), "tmp newer than the latest commit was GC'd"

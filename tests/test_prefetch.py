@@ -157,6 +157,75 @@ def test_fetch_stopiteration_surfaces_as_error(depth):
     assert got == [0, 1]
 
 
+def test_close_captures_inflight_producer_exception():
+    """An exception raced by close() is captured, not silently drained: a
+    deliberate early exit (rescale drain, max_steps) used to swallow a real
+    collate failure sitting in the queue.  close() must preserve it on
+    ``.error`` and ``raise_pending()`` must surface it."""
+    def fetch(x):
+        if x == 1:
+            raise ValueError("corrupt shard")
+        return x
+
+    pipe = PrefetchPipeline(range(6), fetch, depth=3)
+    first = next(pipe)
+    assert first.batch == 0
+    # the producer dies right after enqueueing the exception — wait for the
+    # thread to finish so the error is deterministically in flight
+    t0 = time.perf_counter()
+    while pipe._thread.is_alive():
+        assert time.perf_counter() - t0 < 10.0, "producer never finished"
+        time.sleep(0.005)
+    pipe.close()
+    assert isinstance(pipe.error, ValueError)
+    with pytest.raises(ValueError, match="corrupt shard"):
+        pipe.raise_pending()
+    # one delivery only: a second call must not re-raise
+    pipe.raise_pending()
+
+
+def test_raise_pending_noop_after_delivery_and_on_clean_close():
+    # delivered through __next__: raise_pending must not double-raise
+    def fetch(x):
+        if x == 0:
+            raise ValueError("boom")
+        return x
+
+    pipe = PrefetchPipeline(range(3), fetch, depth=2)
+    with pytest.raises(ValueError):
+        next(pipe)
+    assert pipe.error is not None
+    pipe.raise_pending()  # already delivered: no-op
+
+    # clean stream, early close: nothing pending
+    clean = PrefetchPipeline(range(3), lambda x: x, depth=2)
+    next(clean)
+    clean.close()
+    assert clean.error is None
+    clean.raise_pending()
+
+
+def test_close_captures_inflight_stopiteration_as_runtimeerror():
+    """A leaked StopIteration drained by close() surfaces via
+    raise_pending() as a RuntimeError (PEP-479), same as the __next__
+    delivery path."""
+    def fetch(x):
+        if x == 1:
+            raise StopIteration("leaked")
+        return x
+
+    pipe = PrefetchPipeline(range(6), fetch, depth=3)
+    next(pipe)
+    t0 = time.perf_counter()
+    while pipe._thread.is_alive():
+        assert time.perf_counter() - t0 < 10.0
+        time.sleep(0.005)
+    pipe.close()
+    assert isinstance(pipe.error, StopIteration)
+    with pytest.raises(RuntimeError, match="StopIteration"):
+        pipe.raise_pending()
+
+
 def test_negative_depth_rejected():
     with pytest.raises(ValueError):
         PrefetchPipeline(range(3), lambda x: x, depth=-1)

@@ -1,0 +1,237 @@
+"""Graph-serving tests: bucket packing units, bucket (shape) stability via
+the jit-cache census, served-vs-direct numeric parity, and the worker fleet's
+drain-and-rebuild with zero dropped requests.
+
+The pure-host packing tests run in milliseconds.  The server tests share one
+warm-compiled :class:`GraphServer` (module fixture, tiny MACE, two small
+buckets); the fault drill builds its own single-worker server because it
+tears the fleet down mid-test.
+"""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.mace import MaceConfig, init_mace, mace_energy_forces
+from repro.data.molecules import SyntheticCFMDataset
+from repro.serve import (
+    GraphServer,
+    RequestTooLarge,
+    ServeConfig,
+    ServerClosed,
+    bucket_key,
+    bucket_ladder,
+    pack_requests,
+    select_bucket,
+)
+
+# ---------------------------------------------------------------------------
+# packing units (pure host)
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_ladder_sorted_and_deduped():
+    ladder = bucket_ladder([256, 64, 64], edge_factor=8)
+    assert [b.max_nodes for b in ladder] == sorted(
+        {b.max_nodes for b in ladder}
+    )
+    assert len(ladder) == 2
+    for b in ladder:
+        assert b.max_edges >= b.max_nodes * 8
+
+
+def test_select_bucket_smallest_fit_and_too_large():
+    ladder = bucket_ladder([64, 256], edge_factor=8)
+    small, big = ladder
+    assert select_bucket(ladder, 10, 40, 2) is small
+    # node budget pushes it up a rung even with few edges
+    assert select_bucket(ladder, small.max_nodes + 1, 40, 2) is big
+    # graph budget alone can promote a bin of tiny graphs
+    assert (
+        select_bucket(ladder, 10, 10, small.max_graphs + 1) is big
+    )
+    with pytest.raises(RequestTooLarge):
+        select_bucket(ladder, big.max_nodes + 1, 1, 1)
+
+
+def test_pack_requests_covers_each_request_once_within_budgets():
+    rng = np.random.default_rng(0)
+    sizes = rng.integers(2, 60, size=40)
+    edges = sizes * 6
+    ladder = bucket_ladder([64, 128], edge_factor=8)
+    packed = pack_requests(sizes, edges, ladder)
+    served = sorted(i for idxs, _ in packed for i in idxs)
+    assert served == list(range(40))  # exactly-once routing
+    for idxs, bucket in packed:
+        assert sum(int(sizes[i]) for i in idxs) <= bucket.max_nodes
+        assert sum(int(edges[i]) for i in idxs) <= bucket.max_edges
+        assert len(idxs) <= bucket.max_graphs
+
+
+def test_pack_requests_splits_edge_heavy_bins():
+    """Algorithm 1 bounds nodes only; a wave of edge-dense graphs must be
+    split so every emitted bin also honours the edge budget (serving can
+    never drop a trailing graph the way lossy training collation does)."""
+    sizes = [8] * 12
+    edges = [8 * 30] * 12  # dense: 30 edges/atom vs ladder factor 8
+    ladder = bucket_ladder([64], edge_factor=8)
+    packed = pack_requests(sizes, edges, ladder)
+    served = sorted(i for idxs, _ in packed for i in idxs)
+    assert served == list(range(12))
+    for idxs, bucket in packed:
+        assert sum(edges[i] for i in idxs) <= bucket.max_edges
+
+
+def test_pack_requests_rejects_oversize_request():
+    ladder = bucket_ladder([64], edge_factor=8)
+    with pytest.raises(RequestTooLarge):
+        pack_requests([65], [10], ladder)
+    with pytest.raises(RequestTooLarge):
+        pack_requests([10], [64 * 8 + 1], ladder)
+    assert pack_requests([], [], ladder) == []
+
+
+# ---------------------------------------------------------------------------
+# server end-to-end (shared warm server; tiny MACE so compiles stay cheap).
+# jit-heavy -> slow sweep per the pytest.ini contract; tier-1 (plain pytest)
+# and the CI serve-smoke job both run them.
+# ---------------------------------------------------------------------------
+
+_TINY = MaceConfig(
+    n_species=5, channels=4, hidden_ls=(0, 1), sh_lmax=1, a_ls=(0, 1),
+    correlation=2, n_interactions=1, avg_num_neighbors=10.0, impl="fused",
+    interaction_impl="auto",
+)
+
+
+@pytest.fixture(scope="module")
+def served():
+    """One skewed-size load through a warm 2-bucket server; tests share the
+    resolved results + stats so the jit work happens once per module."""
+    params = init_mace(jax.random.PRNGKey(0), _TINY)
+    ds = SyntheticCFMDataset(64, seed=3, max_atoms=48)
+    server = GraphServer(
+        _TINY, params,
+        ServeConfig(capacities=(24, 48), edge_factor=48, n_workers=2,
+                    max_wait_s=0.01),
+    )
+    by_size = sorted(range(len(ds)), key=lambda i: int(ds.sizes[i]))
+    picks = (by_size[-4:] + by_size[:12]) * 2  # hubs interleaved with small
+    mols = [ds.get(i) for i in picks]
+    futures = [server.submit(m, timeout=30.0) for m in mols]
+    results = [f.result(timeout=300.0) for f in futures]
+    stats = server.stats()
+    engine = server.engine
+    yield {
+        "server": server, "engine": engine, "mols": mols,
+        "results": results, "stats": stats,
+    }
+    server.close()
+
+
+@pytest.mark.slow
+def test_bucket_stability_census_one_compile_per_bucket(served):
+    """The acceptance criterion: after warmup + a ragged skewed load every
+    bucket's jit cache holds exactly ONE compiled program — partial bins
+    pad inside a known shape, they never present a new signature."""
+    census = served["stats"]["compile_census"]
+    assert census, "census is empty — no buckets compiled?"
+    assert set(census.values()) == {1}, f"retrace leaked in: {census}"
+    # and the census keys are exactly the ladder
+    assert set(census) == {bucket_key(b) for b in served["server"].buckets}
+
+
+@pytest.mark.slow
+def test_served_mix_used_multiple_buckets_and_copacked(served):
+    stats = served["stats"]
+    assert stats["served"] == len(served["results"])
+    assert stats["failed"] == 0
+    used = {k: v for k, v in stats["bucket_graphs"].items() if v}
+    assert used, "no bucket served anything"
+    # small graphs were batched together, not served one-per-bin
+    assert any(r.n_copacked > 1 for r in served["results"])
+
+
+@pytest.mark.slow
+def test_served_energies_forces_match_direct_forward(served):
+    """End-to-end numeric parity: each request's energy/forces routed back
+    through pack -> collate -> jitted bucket forward -> future must match a
+    direct (un-jitted) single-graph forward with the same resolved config."""
+    engine = served["engine"]
+    smallest = served["server"].buckets[0]
+    for mol, res in list(zip(served["mols"], served["results"]))[:6]:
+        bucket = (
+            smallest
+            if mol.n_atoms <= smallest.max_nodes
+            and mol.n_edges <= smallest.max_edges
+            else served["server"].buckets[-1]
+        )
+        batch, _ = engine.collate([mol], bucket)
+        e_ref, f_ref = mace_energy_forces(
+            engine.params, engine.mace_cfg, batch, int(bucket.max_graphs)
+        )
+        assert res.energy == pytest.approx(float(e_ref[0]), rel=1e-5, abs=1e-6)
+        np.testing.assert_allclose(
+            res.forces, np.asarray(f_ref[: mol.n_atoms]),
+            rtol=1e-4, atol=1e-5,
+        )
+        assert res.forces.shape == (mol.n_atoms, 3)
+
+
+@pytest.mark.slow
+def test_submit_rejects_oversize_and_closed(served):
+    server = served["server"]
+    huge = SyntheticCFMDataset(4, seed=9, max_atoms=512).get(0)
+    if huge.n_atoms > max(b.max_nodes for b in server.buckets):
+        with pytest.raises(RequestTooLarge):
+            server.submit(huge)
+    closed = GraphServer.__new__(GraphServer)
+    closed._closed = True
+    with pytest.raises(ServerClosed):
+        closed.submit(served["mols"][0])
+
+
+# ---------------------------------------------------------------------------
+# fault drill: worker death -> drain-and-rebuild, zero dropped requests
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_worker_kill_drain_and_rebuild_drops_nothing():
+    """Kill the only worker mid-load, heal synchronously, and require every
+    request to resolve: the dying worker requeues its in-flight bin, the
+    rebuild requeues anything stranded, futures survive the fleet swap."""
+    params = init_mace(jax.random.PRNGKey(0), _TINY)
+    ds = SyntheticCFMDataset(32, seed=5, max_atoms=24)
+    server = GraphServer(
+        _TINY, params,
+        ServeConfig(capacities=(24,), edge_factor=48, n_workers=1,
+                    max_wait_s=0.005, watchdog_s=0.0),  # heal by hand
+    )
+    try:
+        mols = [ds.get(i) for i in range(16)]
+        # arm the fault BEFORE submitting so the worker dies on its very
+        # first bin while the rest of the load is still queued behind it
+        server.inject_worker_fault()
+        futures = [server.submit(m, timeout=30.0) for m in mols]
+        t0 = time.perf_counter()
+        while all(w["alive"] for w in server.healthcheck()):
+            assert time.perf_counter() - t0 < 60.0, "worker never died"
+            time.sleep(0.01)
+        healed = server.check_and_heal()
+        assert healed, "dead worker not detected by check_and_heal"
+        results = [f.result(timeout=300.0) for f in futures]
+        assert len(results) == len(mols)
+        assert all(np.isfinite(r.energy) for r in results)
+        stats = server.stats()
+        assert stats["failed"] == 0, "requests were dropped by the rebuild"
+        assert stats["served"] == len(mols)
+        assert stats["rebuilds"] == 1
+        assert "dead workers" in server.rebuild_events[0]["reason"]
+        # the rebuilt engine is warm and census-clean
+        assert set(server.engine.compile_census().values()) == {1}
+        # second heal pass: healthy fleet, no-op
+        assert server.check_and_heal() is False
+    finally:
+        server.close()
