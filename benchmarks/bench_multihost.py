@@ -1,0 +1,309 @@
+"""Pod-on-one-machine benchmark: two-level packing + hierarchical reduction.
+
+    PYTHONPATH=src python -m benchmarks.bench_multihost --quick \
+        --json BENCH_multihost.json
+
+Self-spawning: the parent launches ``--nprocs`` real jax processes on this
+machine via ``repro.launch.multihost.spawn_local`` (each one node of the 2D
+``("node", "device")`` mesh, devices forced per child); every child runs
+``MultiHostEngine`` training over the hierarchical int8-EF reduction and
+process 0 reports telemetry back through a JSON handoff file.  The row
+records the two things the pod path exists for:
+
+* **per-level straggler %** — packed (token-proxy, from
+  ``core.binpack.two_level_metrics`` on the epoch's two-level packing) and
+  measured (per-rank atom loads from engine telemetry, aggregated per rank
+  and per node) — Algorithm 1 must balance *both* levels;
+* **inter-node bytes on wire** — the per-step all-reduce payload crossing
+  the node boundary: fp32 (what a plain ``pmean`` ships) vs the int8-EF
+  collective's int16 wire sum + per-leaf fp32 scale, and the savings
+  ratio.  Only the inter-node hop is compressed; the intra-node hop rides
+  fast links uncompressed — that asymmetry *is* the design, so the row
+  also reports the intra-node fp32 bytes for scale.
+
+Same trajectory-file contract as ``bench_serve``: one run appended per
+invocation, ``{"schema": 1, "runs": [...]}``, oldest first.  ``--check``
+exits non-zero when a balance or compression invariant is violated (the CI
+``multihost-smoke`` gate).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+MAX_TRAJECTORY_RUNS = 40
+
+
+# --------------------------------------------------------------------------
+# worker: one jax process = one node of the pod
+# --------------------------------------------------------------------------
+
+
+def run_worker(args) -> None:
+    from repro.launch.multihost import initialize_distributed
+
+    initialize_distributed()
+    import jax
+    import numpy as np
+
+    from repro.core.mace import MaceConfig
+    from repro.data.molecules import SyntheticCFMDataset
+    from repro.train.train_loop import Trainer, TrainerConfig
+
+    cfg = MaceConfig(
+        n_species=10, channels=args.channels, hidden_ls=(0, 1), sh_lmax=2,
+        a_ls=(0, 1, 2), correlation=2, n_interactions=2,
+        avg_num_neighbors=10.0, impl="fused",
+    )
+    ds = SyntheticCFMDataset(args.dataset_size, seed=0,
+                             max_atoms=args.capacity // 4)
+    n_nodes = jax.process_count()
+    tcfg = TrainerConfig(
+        capacity=args.capacity, edge_factor=24,
+        max_graphs=max(16, args.capacity // 8),
+        n_ranks=len(jax.devices()), n_nodes=n_nodes, engine="multihost",
+        compress_grads=True, ckpt_every=0,
+    )
+    tr = Trainer(cfg, tcfg, ds, seed=0)
+    t0 = time.perf_counter()
+    out = tr.train(n_epochs=10**9, max_steps=args.steps)
+    wall = time.perf_counter() - t0
+    if jax.process_index() == 0:
+        tel = tr.engine.telemetry
+        payload = {
+            "n_nodes": n_nodes,
+            "devices_per_node": tcfg.n_ranks // n_nodes,
+            "n_ranks": tcfg.n_ranks,
+            "steps": len(out["history"]),
+            "wall_s": wall,
+            "final_loss": out["history"][-1]["loss"],
+            "loads": tel.load_matrix().tolist(),  # [steps, R] real atoms
+            "step_walls": [row[0] for row in tel.times],
+            "param_count": int(sum(
+                int(np.prod(np.shape(p)))
+                for p in jax.tree_util.tree_leaves(tr.params)
+            )),
+            "param_leaves": len(jax.tree_util.tree_leaves(tr.params)),
+            "sizes": [int(s) for s in ds.sizes],
+        }
+        with open(args.handoff, "w") as f:
+            json.dump(payload, f)
+
+
+# --------------------------------------------------------------------------
+# parent: spawn the pod, aggregate the row
+# --------------------------------------------------------------------------
+
+
+def _straggler(work) -> float:
+    """mean over steps of (max / mean) across the work axis."""
+    import numpy as np
+
+    w = np.asarray(work, np.float64)
+    return float(np.mean(w.max(axis=1) / np.maximum(w.mean(axis=1), 1e-12)))
+
+
+def run_pod(args) -> dict:
+    from repro.core.binpack import two_level_batches, two_level_metrics
+    from repro.launch.multihost import spawn_local
+
+    import numpy as np
+
+    handoff = os.path.join(
+        tempfile.mkdtemp(prefix="bench_multihost_"), "telemetry.json"
+    )
+    cmd = [
+        sys.executable, "-m", "benchmarks.bench_multihost", "--worker",
+        "--handoff", handoff, "--steps", str(args.steps),
+        "--capacity", str(args.capacity), "--channels", str(args.channels),
+        "--dataset-size", str(args.dataset_size),
+    ]
+    # children resolve `repro` and `benchmarks` regardless of parent cwd
+    root = Path(__file__).resolve().parent.parent
+    env = {
+        "PYTHONPATH": os.pathsep.join(
+            [str(root / "src"), str(root), os.environ.get("PYTHONPATH", "")]
+        )
+    }
+    t0 = time.perf_counter()
+    res = spawn_local(
+        args.nprocs, cmd, devices_per_proc=args.devices_per_proc, env=env,
+        log_dir=args.log_dir,
+    )
+    codes = res.wait(timeout=args.timeout_s)
+    spawn_wall = time.perf_counter() - t0
+    if any(codes):
+        raise RuntimeError(
+            f"pod workers exited with {codes}; logs under {args.log_dir}"
+        )
+    with open(handoff) as f:
+        w = json.load(f)
+
+    # measured per-level straggler from the engine's per-rank atom loads
+    loads = np.asarray(w["loads"], np.float64)  # [steps, R]
+    n_nodes, dpn = w["n_nodes"], w["devices_per_node"]
+    node_loads = loads.reshape(loads.shape[0], n_nodes, dpn).sum(axis=2)
+    measured = {
+        "rank_straggler": _straggler(loads),
+        "node_straggler": _straggler(node_loads),
+    }
+    # packed (token-proxy) per-level metrics of the same two-level packing
+    tl = two_level_batches(
+        np.asarray(w["sizes"], np.int64), args.capacity, n_nodes, dpn
+    )
+    packed = {
+        level: {
+            "straggler_ratio": m.straggler_ratio,
+            "imbalance_pct": 100.0 * (m.straggler_ratio - 1.0),
+        }
+        for level, m in two_level_metrics(tl).items()
+    }
+
+    # inter-node wire payload per step (per node, all-reduce logical bytes):
+    # plain pmean ships fp32; compressed_psum_ef ships the int16 wire sum
+    # plus one fp32 pmax'd scale per pytree leaf
+    P, L = w["param_count"], w["param_leaves"]
+    bytes_fp32 = 4 * P
+    bytes_int8ef = 2 * P + 4 * L
+    wire = {
+        "param_count": P,
+        "param_leaves": L,
+        "internode_bytes_fp32": bytes_fp32,
+        "internode_bytes_int8ef": bytes_int8ef,
+        "internode_saved_bytes": bytes_fp32 - bytes_int8ef,
+        "internode_savings_ratio": bytes_fp32 / bytes_int8ef,
+        # the intra-node hop stays uncompressed fp32 by design (fast links)
+        "intranode_bytes_fp32": bytes_fp32,
+    }
+    return {
+        "row": "multihost_pod",
+        "unix_time": int(time.time()),
+        "quick": bool(args.quick),
+        "n_nodes": n_nodes,
+        "devices_per_node": dpn,
+        "n_ranks": w["n_ranks"],
+        "steps": w["steps"],
+        "capacity": args.capacity,
+        "channels": args.channels,
+        "spawn_wall_s": spawn_wall,
+        "train_wall_s": w["wall_s"],
+        "final_loss": w["final_loss"],
+        "straggler_measured": measured,
+        "straggler_packed": packed,
+        "wire": wire,
+    }
+
+
+def write_bench_json(row: dict, path) -> dict:
+    path = Path(path)
+    runs = []
+    if path.exists():
+        try:
+            prior = json.loads(path.read_text())
+            if prior.get("schema") == 1:
+                runs = list(prior.get("runs", []))
+        except (ValueError, AttributeError):
+            runs = []
+    runs = (runs + [row])[-MAX_TRAJECTORY_RUNS:]
+    payload = {
+        "schema": 1,
+        "generated_by": "benchmarks/bench_multihost.py",
+        "runs": runs,
+    }
+    path.write_text(json.dumps(payload, indent=1) + "\n")
+    return payload
+
+
+def check_row(row: dict) -> list:
+    """CI gate: balance at both levels, real compression on the wire."""
+    fails = []
+    m = row["straggler_measured"]
+    if not (1.0 <= m["rank_straggler"] < 1.5):
+        fails.append(f"rank straggler {m['rank_straggler']:.3f} out of bounds")
+    if not (1.0 <= m["node_straggler"] < 1.5):
+        fails.append(f"node straggler {m['node_straggler']:.3f} out of bounds")
+    if m["node_straggler"] > m["rank_straggler"] + 1e-9:
+        fails.append(
+            "node-level imbalance exceeds rank-level — level-2 LPT regressed"
+        )
+    if row["wire"]["internode_savings_ratio"] < 1.8:
+        fails.append(
+            f"inter-node savings ratio "
+            f"{row['wire']['internode_savings_ratio']:.2f} < 1.8"
+        )
+    return fails
+
+
+def main(argv=()):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--nprocs", type=int, default=2,
+                    help="pod nodes (jax processes) to spawn")
+    ap.add_argument("--devices-per-proc", type=int, default=2)
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--capacity", type=int, default=None)
+    ap.add_argument("--channels", type=int, default=4)
+    ap.add_argument("--dataset-size", type=int, default=None)
+    ap.add_argument("--timeout-s", type=float, default=600.0)
+    ap.add_argument("--log-dir", default=None,
+                    help="per-process worker logs (default: a tmp dir)")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI tier: tiny model, few steps")
+    ap.add_argument("--json", default=None, help="trajectory file to append")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero if a balance/compression invariant "
+                         "fails (CI multihost-smoke gate)")
+    # internal: run as a pod worker (spawned by the parent)
+    ap.add_argument("--worker", action="store_true", help=argparse.SUPPRESS)
+    ap.add_argument("--handoff", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args(argv or None)
+    if args.steps is None:
+        args.steps = 5 if args.quick else 12
+    if args.capacity is None:
+        args.capacity = 128 if args.quick else 256
+    if args.dataset_size is None:
+        args.dataset_size = 64 if args.quick else 256
+    if args.worker:
+        run_worker(args)
+        return 0
+    if args.log_dir is None:
+        args.log_dir = tempfile.mkdtemp(prefix="bench_multihost_logs_")
+
+    row = run_pod(args)
+    m, p, wire = row["straggler_measured"], row["straggler_packed"], row["wire"]
+    print(
+        f"[multihost] {row['n_nodes']} nodes x {row['devices_per_node']} "
+        f"devices, {row['steps']} steps: train {row['train_wall_s']:.1f}s "
+        f"(spawn {row['spawn_wall_s']:.1f}s), final loss "
+        f"{row['final_loss']:.4f}"
+    )
+    print(
+        f"[multihost] straggler measured: rank {m['rank_straggler']:.3f} "
+        f"node {m['node_straggler']:.3f} | packed: "
+        f"rank {p['rank']['straggler_ratio']:.3f} "
+        f"node {p['node']['straggler_ratio']:.3f}"
+    )
+    print(
+        f"[multihost] inter-node wire/step/node: fp32 "
+        f"{wire['internode_bytes_fp32']} B -> int8-EF "
+        f"{wire['internode_bytes_int8ef']} B "
+        f"({wire['internode_savings_ratio']:.2f}x saved; intra-node hop "
+        f"uncompressed by design)"
+    )
+    if args.json:
+        write_bench_json(row, args.json)
+        print(f"[multihost] appended to {args.json}")
+    if args.check:
+        fails = check_row(row)
+        for f in fails:
+            print(f"[multihost] FAIL: {f}")
+        return 1 if fails else 0
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

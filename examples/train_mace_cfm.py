@@ -14,6 +14,22 @@ per step, gradient all-reduce compiled into the step):
     PYTHONPATH=src python examples/train_mace_cfm.py \
         --engine shard_map --devices 2 --steps 50
 
+Pod-scale hierarchy on one machine (``--engine multihost``): a 2D
+``("node", "device")`` mesh with two-level Algorithm-1 packing (graphs ->
+ranks within a node, bins -> nodes) and a hierarchical reduction —
+uncompressed intra-node pmean, int8-EF all-reduce on the inter-node hop
+only (with ``--compress-grads``):
+
+    PYTHONPATH=src python examples/train_mace_cfm.py \
+        --engine multihost --devices 4 --n-nodes 2 --compress-grads --steps 50
+
+For REAL multi-process runs, launch through the pod spawner instead (one
+jax process per node; see ``repro.launch.multihost``):
+
+    PYTHONPATH=src python -m repro.launch.multihost \
+        --nprocs 2 --devices-per-proc 2 -- \
+        python -m repro.launch.train --distributed --reduced --steps 5
+
 Async host prefetch (``--prefetch N``): collation of step t+1 runs on a
 background thread while the device executes step t; N is the lookahead
 depth (default 1 = double buffering; 0 = inline collate, the pre-pipeline
@@ -77,11 +93,16 @@ def main():
                          "'auto' resolves impl + tile geometry + bwd from the "
                          "tuning table for this run's shape bucket (pallas "
                          "consumes pre-blocked edges from collation)")
-    ap.add_argument("--engine", choices=["sequential", "shard_map"],
+    ap.add_argument("--engine", choices=["sequential", "shard_map", "multihost"],
                     default="sequential")
     ap.add_argument("--n-ranks", type=int, default=0,
                     help="data-parallel ranks (bins per step); defaults to "
-                         "--devices for shard_map, else 1")
+                         "--devices for shard_map/multihost, else 1")
+    ap.add_argument("--n-nodes", type=int, default=0,
+                    help="pod nodes for the hierarchical two-level packing + "
+                         "int8-EF reduction (multihost engine's ('node', "
+                         "'device') mesh; also usable with the sequential "
+                         "oracle to emulate it). Must divide --n-ranks.")
     ap.add_argument("--devices", type=int, default=0,
                     help="force N CPU host devices "
                          "(--xla_force_host_platform_device_count)")
@@ -117,7 +138,9 @@ def main():
         parse_rescale_schedule,
     )
 
-    n_ranks = args.n_ranks or (args.devices if args.engine == "shard_map" else 1)
+    n_ranks = args.n_ranks or (
+        args.devices if args.engine in ("shard_map", "multihost") else 1
+    )
     cfg = MaceConfig(
         n_species=10, channels=args.channels, hidden_ls=(0, 1), sh_lmax=3,
         a_ls=(0, 1, 2, 3), correlation=args.correlation, n_interactions=2,
@@ -129,7 +152,8 @@ def main():
     schedule = parse_rescale_schedule(args.rescale_at)
     tcfg = TrainerConfig(
         capacity=args.capacity, edge_factor=48, max_graphs=max(16, args.capacity // 8),
-        n_ranks=max(1, n_ranks), engine=args.engine,
+        n_ranks=max(1, n_ranks), n_nodes=args.n_nodes or None,
+        engine=args.engine,
         lr=5e-3, ema_decay=0.99, ckpt_dir=args.ckpt_dir, ckpt_every=50,
         compress_grads=args.compress_grads, prefetch=args.prefetch,
         elastic=args.elastic or bool(schedule),

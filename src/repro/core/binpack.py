@@ -23,17 +23,20 @@ once per epoch (§3.2.1), at O(N log N); the measured rate is ~1M graphs/s
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
 __all__ = [
     "Bins",
+    "TwoLevelBins",
     "create_balanced_batches",
+    "two_level_batches",
     "fixed_count_batches",
     "first_fit_decreasing",
     "best_fit_decreasing",
     "balance_metrics",
+    "two_level_metrics",
     "BalanceMetrics",
 ]
 
@@ -158,6 +161,150 @@ def create_balanced_batches(
     while len(result.bins) % n_ranks != 0:
         result.bins.append([])
     return result
+
+
+# ---------------------------------------------------------------------------
+# Two-level packing: graphs -> ranks (within a node), bins -> nodes
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TwoLevelBins:
+    """Pod-topology packing: ``n_nodes`` hosts x ``ranks_per_node`` devices.
+
+    ``flat.bins`` is ordered **step-major, node-major**: the bin consumed by
+    step ``s``, node ``n``, local device ``d`` is
+    ``flat.bins[(s * n_nodes + n) * ranks_per_node + d]`` — exactly the
+    flattening order of a ``("node", "device")`` mesh's data axis, so the
+    stacked ``[R, ...]`` batch shards onto the 2D mesh with one bin per
+    device and each node's ``ranks_per_node`` bins contiguous.
+    """
+
+    flat: Bins
+    n_nodes: int
+    ranks_per_node: int
+
+    @property
+    def n_ranks(self) -> int:
+        return self.n_nodes * self.ranks_per_node
+
+    @property
+    def n_steps(self) -> int:
+        return self.flat.n_bins // self.n_ranks
+
+    def rank_loads(self) -> np.ndarray:
+        """[steps, n_nodes * ranks_per_node] tokens per device bin."""
+        return self.flat.loads().reshape(self.n_steps, self.n_ranks)
+
+    def node_loads(self) -> np.ndarray:
+        """[steps, n_nodes] tokens per node (sum over its local devices) —
+        the load the *inter-node* collective waits on each step."""
+        return self.rank_loads().reshape(
+            self.n_steps, self.n_nodes, self.ranks_per_node
+        ).sum(axis=2)
+
+    def node_bins(self) -> Bins:
+        """Node-granularity view: one merged bin per (step, node), capacity
+        scaled by ``ranks_per_node`` — feed to :func:`balance_metrics` for
+        the node-level numbers."""
+        merged = []
+        rpn = self.ranks_per_node
+        for g in range(self.flat.n_bins // rpn):
+            merged.append(
+                [i for b in self.flat.bins[g * rpn : (g + 1) * rpn] for i in b]
+            )
+        return Bins(merged, self.flat.sizes, self.flat.capacity * rpn)
+
+
+def two_level_batches(
+    sizes: Sequence[int],
+    capacity: int,
+    n_nodes: int,
+    ranks_per_node: int,
+) -> TwoLevelBins:
+    """Two-level Algorithm-1 packing for a ``("node", "device")`` mesh.
+
+    Level 1 (graphs -> ranks): :func:`create_balanced_batches` packs graphs
+    into per-device bins at the full rank count, so every device bin obeys
+    the capacity budget and per-step bins are token-balanced.
+
+    Level 2 (bins -> nodes): within each step group of ``n_nodes *
+    ranks_per_node`` bins, bins are dealt to nodes LPT-style (largest bin
+    to the currently lightest node with a free slot).  Level 1 balances the
+    *device* straggler; level 2 additionally balances the *node* totals the
+    slow inter-node hop waits on — residual bin-load spread pairs a node's
+    heavy bin with light ones instead of landing on whichever node the flat
+    order put it.
+    """
+    if n_nodes < 1 or ranks_per_node < 1:
+        raise ValueError(
+            f"need n_nodes >= 1 and ranks_per_node >= 1, got "
+            f"({n_nodes}, {ranks_per_node})"
+        )
+    n_ranks = n_nodes * ranks_per_node
+    level1 = create_balanced_batches(sizes, capacity, n_ranks)
+    if n_nodes == 1:
+        # Nothing for level 2 to balance — keep level 1's bin order so the
+        # single-node pod is bit-identical to the flat packing.
+        return TwoLevelBins(level1, n_nodes, ranks_per_node)
+    loads = level1.loads()
+    out: List[List[int]] = []
+    for s in range(level1.n_bins // n_ranks):
+        grp = list(range(s * n_ranks, (s + 1) * n_ranks))
+        # LPT deal: heaviest bin first, to the lightest node with room
+        order = sorted(grp, key=lambda j: (-int(loads[j]), j))
+        node_tot = np.zeros(n_nodes, dtype=np.int64)
+        node_members: List[List[int]] = [[] for _ in range(n_nodes)]
+        for j in order:
+            open_nodes = [
+                n for n in range(n_nodes)
+                if len(node_members[n]) < ranks_per_node
+            ]
+            tgt = min(open_nodes, key=lambda n: (int(node_tot[n]), n))
+            node_members[tgt].append(j)
+            node_tot[tgt] += int(loads[j])
+        for members in node_members:
+            out.extend(level1.bins[j] for j in members)
+    return TwoLevelBins(
+        Bins(out, level1.sizes, capacity), n_nodes, ranks_per_node
+    )
+
+
+def two_level_metrics(
+    tl: TwoLevelBins,
+    *,
+    measured_rank_work: Optional[np.ndarray] = None,
+) -> Dict[str, BalanceMetrics]:
+    """Per-level imbalance report for a two-level packing.
+
+    ``"rank"`` is the device-level view (level 1: per-bin loads against the
+    full rank count) and ``"node"`` the host-level view (level 2: per-node
+    token totals against ``n_nodes`` — what the inter-node all-reduce
+    straggles on).  ``measured_rank_work`` — an optional
+    ``[steps, n_ranks]`` matrix from engine telemetry — replaces the
+    token-count proxy at both levels (node work = sum over the node's
+    device columns), mirroring :func:`balance_metrics`.
+    """
+    rank_work = None
+    node_work = None
+    if measured_rank_work is not None:
+        rank_work = np.asarray(measured_rank_work, dtype=np.float64)
+        if rank_work.ndim != 2 or rank_work.shape[1] != tl.n_ranks:
+            raise ValueError(
+                f"measured_rank_work must be [steps, {tl.n_ranks}], "
+                f"got {rank_work.shape}"
+            )
+        node_work = rank_work.reshape(
+            rank_work.shape[0], tl.n_nodes, tl.ranks_per_node
+        ).sum(axis=2)
+    return {
+        "rank": balance_metrics(
+            tl.flat, tl.n_ranks, measured_work=rank_work
+        ),
+        "node": balance_metrics(
+            tl.node_bins(), tl.n_nodes, measured_work=node_work
+        ),
+    }
 
 
 # ---------------------------------------------------------------------------

@@ -43,7 +43,11 @@ from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.binpack import create_balanced_batches, fixed_count_batches
+from repro.core.binpack import (
+    create_balanced_batches,
+    fixed_count_batches,
+    two_level_batches,
+)
 
 
 @dataclasses.dataclass
@@ -192,6 +196,79 @@ class BalancedBatchSampler(_ElasticRescaleMixin):
         iterators from equal states are identical (tests/test_data.py)."""
         return iter(_step_slices(self.bins_for_epoch(state.epoch),
                                  self.n_ranks, state.cursor))
+
+
+class HierarchicalBalancedSampler(BalancedBatchSampler):
+    """Two-level balanced sampler for a ``("node", "device")`` pod mesh.
+
+    Same contract as :class:`BalancedBatchSampler` with ``n_ranks ==
+    n_nodes * ranks_per_node``, but each epoch's packing is
+    ``binpack.two_level_batches``: graphs -> per-device bins (level 1,
+    Algorithm 1), then bins -> nodes (level 2, LPT within every step
+    group).  The per-step rank order is **node-major** — rank ``r`` is node
+    ``r // ranks_per_node``, local device ``r % ranks_per_node`` — matching
+    the flattening of the 2D mesh's data axis, so ``step_iter`` feeds the
+    multi-host engine directly.
+
+    Epoch shuffling keeps both levels intact: step groups are permuted and
+    rank assignment rotated by *whole nodes* (a raw bin rotation would tear
+    a node's LPT group apart and undo the level-2 balance).
+
+    Elastic topology: ``with_ranks(R)`` keeps ``ranks_per_node`` when ``R``
+    divides by it (losing a host is ``n_nodes -> n_nodes - 1``) and
+    degrades to a flat single-level packing otherwise, so the
+    ``_ElasticRescaleMixin`` remap chain composes across topology changes.
+    """
+
+    def __init__(
+        self,
+        sizes: Sequence[int],
+        capacity: int,
+        n_nodes: int,
+        ranks_per_node: int,
+        seed: int = 0,
+        shuffle_bins: bool = True,
+    ):
+        super().__init__(
+            sizes, capacity, n_nodes * ranks_per_node, seed, shuffle_bins
+        )
+        self.n_nodes = n_nodes
+        self.ranks_per_node = ranks_per_node
+
+    def with_ranks(self, n_ranks: int) -> "BalancedBatchSampler":
+        """Rescale to ``n_ranks`` devices: hierarchical again when the node
+        width divides it, else a flat packing (documented degrade)."""
+        if n_ranks % self.ranks_per_node == 0:
+            return HierarchicalBalancedSampler(
+                self.sizes, self.capacity, n_ranks // self.ranks_per_node,
+                self.ranks_per_node, self.seed, self.shuffle_bins,
+            )
+        return BalancedBatchSampler(
+            self.sizes, self.capacity, n_ranks, self.seed, self.shuffle_bins
+        )
+
+    def bins_for_epoch(self, epoch: int) -> List[List[int]]:
+        if self._cache_epoch == epoch and self._cache is not None:
+            return self._cache
+        bins = self._universe_bins(
+            epoch,
+            lambda s: two_level_batches(
+                s, self.capacity, self.n_nodes, self.ranks_per_node
+            ).flat,
+        )
+        if self.shuffle_bins:
+            rng = np.random.default_rng((self.seed, epoch))
+            n_steps = len(bins) // self.n_ranks
+            order = rng.permutation(n_steps)
+            regrouped: List[List[int]] = []
+            for s in order:
+                grp = bins[s * self.n_ranks : (s + 1) * self.n_ranks]
+                # rotate by whole nodes only: node groups stay contiguous
+                rot = int(rng.integers(self.n_nodes)) * self.ranks_per_node
+                regrouped.extend(grp[rot:] + grp[:rot])
+            bins = regrouped
+        self._cache_epoch, self._cache = epoch, bins
+        return bins
 
 
 def _step_slices(

@@ -8,6 +8,7 @@ import, and smoke tests must keep seeing 1 device.
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -38,3 +39,44 @@ def make_dp_mesh(n_ranks: int):
             f"{n_ranks} before importing jax"
         )
     return jax.make_mesh((n_ranks,), ("data",))
+
+
+def make_node_device_mesh(n_nodes: int, devices_per_node: int):
+    """2D ``("node", "device")`` mesh for the hierarchical multi-host engine.
+
+    Single process: reshapes the first ``n_nodes * devices_per_node`` host
+    devices into rows (emulation mode — tests force devices via XLA_FLAGS).
+
+    Multi process (``jax.process_count() > 1``): one process per node.
+    Devices are ordered ``(process_index, id)`` so each process's local
+    devices form exactly one ``node`` row — intra-node collectives over
+    ``"device"`` never cross a process boundary, which is what makes the
+    inter-node ``"node"`` hop the only place wire bandwidth is spent.
+    """
+    if n_nodes < 1 or devices_per_node < 1:
+        raise ValueError("n_nodes and devices_per_node must be >= 1")
+    n_procs = jax.process_count()
+    devices = sorted(jax.devices(), key=lambda d: (d.process_index, d.id))
+    need = n_nodes * devices_per_node
+    if n_procs > 1:
+        if n_procs != n_nodes:
+            raise ValueError(
+                f"multi-process mesh needs one process per node: "
+                f"n_nodes={n_nodes} but process_count={n_procs}"
+            )
+        if len(devices) != need:
+            raise ValueError(
+                f"expected {need} global devices ({n_nodes} nodes x "
+                f"{devices_per_node} per node), found {len(devices)}; set "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count="
+                f"{devices_per_node} in every process before importing jax"
+            )
+    elif len(devices) < need:
+        raise ValueError(
+            f"need {need} devices for a ({n_nodes}, {devices_per_node}) "
+            f"node x device mesh, have {len(devices)}; on CPU set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need} "
+            "before importing jax"
+        )
+    grid = np.array(devices[:need]).reshape(n_nodes, devices_per_node)
+    return jax.sharding.Mesh(grid, ("node", "device"))

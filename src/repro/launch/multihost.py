@@ -1,0 +1,260 @@
+"""Multi-process bring-up: distributed init + a local subprocess launcher.
+
+Two pieces:
+
+``initialize_distributed``
+    Wraps ``jax.distributed.initialize`` with explicit
+    coordinator/num_processes/process_id plumbing (flags or
+    ``REPRO_COORDINATOR`` / ``REPRO_NUM_PROCESSES`` / ``REPRO_PROCESS_ID``
+    env vars), a pre-flight reachability probe of the coordinator, and an
+    actionable error message when configuration is missing or the
+    coordinator cannot be reached.  On CPU it also selects the ``gloo``
+    collectives backend so cross-process psum works without NCCL.
+
+``spawn_local``
+    Runs N copies of a command on *this* machine, each as its own jax
+    process with ``--xla_force_host_platform_device_count`` forced per
+    child — a pod-on-a-laptop harness for the 2D ``("node", "device")``
+    mesh.  Process 0's coordinator port is picked free at spawn time and
+    handed to every child through the env vars above, so the spawned
+    program only needs to call ``initialize_distributed()``.
+
+CLI::
+
+    PYTHONPATH=src python -m repro.launch.multihost \
+        --nprocs 2 --devices-per-proc 2 -- \
+        python -m repro.launch.train --distributed --reduced --steps 5
+"""
+from __future__ import annotations
+
+import os
+import socket
+import subprocess
+import sys
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+ENV_COORDINATOR = "REPRO_COORDINATOR"
+ENV_NUM_PROCESSES = "REPRO_NUM_PROCESSES"
+ENV_PROCESS_ID = "REPRO_PROCESS_ID"
+
+_HELP = (
+    "multi-host bring-up needs a coordinator address and a process "
+    "identity. Provide them via flags (--coordinator HOST:PORT "
+    "--num-processes N --process-id I) or env vars "
+    f"({ENV_COORDINATOR}, {ENV_NUM_PROCESSES}, {ENV_PROCESS_ID}). "
+    "For a single-machine rehearsal use "
+    "`python -m repro.launch.multihost --nprocs N -- <cmd...>`, which "
+    "sets all three for every child."
+)
+
+
+def pick_free_port() -> int:
+    with socket.socket(socket.AF_INET, socket.SOCK_STREAM) as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def coordinator_reachable(coordinator: str, timeout: float = 2.0) -> bool:
+    """TCP-probe the coordinator. Cheap pre-flight so a typo'd address
+    fails in seconds with a clear message instead of hanging in the
+    distributed runtime's own (minutes-long) connect retry loop.
+
+    Retries until ``timeout``: a refused connect returns instantly, and
+    process 0 may still be importing jax when its peers first probe."""
+    host, _, port = coordinator.rpartition(":")
+    if not host or not port.isdigit():
+        return False
+    deadline = time.monotonic() + timeout
+    while True:
+        left = deadline - time.monotonic()
+        if left <= 0:
+            return False
+        try:
+            with socket.create_connection((host, int(port)), timeout=max(left, 0.1)):
+                return True
+        except OSError:
+            time.sleep(min(0.25, max(left, 0.0)))
+
+
+def initialize_distributed(
+    coordinator: Optional[str] = None,
+    num_processes: Optional[int] = None,
+    process_id: Optional[int] = None,
+    *,
+    probe_timeout: float = 30.0,
+) -> None:
+    """``jax.distributed.initialize`` with explicit config and clear errors.
+
+    Falls back to REPRO_* env vars for any argument not given.  Raises
+    RuntimeError (not a hang) when config is missing or the coordinator
+    is unreachable, naming exactly what to set.
+    """
+    coordinator = coordinator or os.environ.get(ENV_COORDINATOR)
+    if num_processes is None and os.environ.get(ENV_NUM_PROCESSES):
+        num_processes = int(os.environ[ENV_NUM_PROCESSES])
+    if process_id is None and os.environ.get(ENV_PROCESS_ID):
+        process_id = int(os.environ[ENV_PROCESS_ID])
+
+    if coordinator is None or num_processes is None or process_id is None:
+        missing = [
+            name
+            for name, val in [
+                ("coordinator", coordinator),
+                ("num-processes", num_processes),
+                ("process-id", process_id),
+            ]
+            if val is None
+        ]
+        raise RuntimeError(f"missing {', '.join(missing)}: {_HELP}")
+
+    # Process 0 *hosts* the coordinator service, so only probe from the
+    # others (and give process 0 a head start in the spawn path).
+    if process_id != 0 and not coordinator_reachable(coordinator, probe_timeout):
+        raise RuntimeError(
+            f"coordinator {coordinator!r} is unreachable from process "
+            f"{process_id} (TCP connect failed within {probe_timeout}s). "
+            "Check that process 0 is up, the address/port match on every "
+            f"host, and no firewall blocks it. {_HELP}"
+        )
+
+    import jax
+
+    # CPU cross-process collectives need the gloo backend (default 'none'
+    # only supports single-process). Harmless no-op on TPU/GPU backends.
+    try:
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    except Exception:
+        pass
+    jax.distributed.initialize(
+        coordinator_address=coordinator,
+        num_processes=num_processes,
+        process_id=process_id,
+    )
+
+
+@dataclass
+class LocalProc:
+    """One spawned child of ``spawn_local``."""
+
+    process_id: int
+    popen: subprocess.Popen
+    log_path: Optional[str] = None
+
+
+@dataclass
+class SpawnResult:
+    procs: List[LocalProc] = field(default_factory=list)
+    coordinator: str = ""
+
+    def wait(self, timeout: Optional[float] = None) -> List[int]:
+        """Wait for all children; returns per-process return codes.
+        Kills the whole group if any child exceeds ``timeout``."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        codes: List[Optional[int]] = [None] * len(self.procs)
+        try:
+            for p in self.procs:
+                left = None if deadline is None else max(0.1, deadline - time.monotonic())
+                codes[p.process_id] = p.popen.wait(timeout=left)
+        except subprocess.TimeoutExpired:
+            self.kill()
+            raise
+        return [c if c is not None else -1 for c in codes]
+
+    def kill(self) -> None:
+        for p in self.procs:
+            if p.popen.poll() is None:
+                p.popen.kill()
+        for p in self.procs:
+            try:
+                p.popen.wait(timeout=10)
+            except Exception:
+                pass
+
+
+def spawn_local(
+    n_procs: int,
+    argv: Sequence[str],
+    *,
+    devices_per_proc: int = 1,
+    env: Optional[Dict[str, str]] = None,
+    log_dir: Optional[str] = None,
+) -> SpawnResult:
+    """Spawn ``argv`` N times on this machine as one jax process group.
+
+    Each child gets REPRO_COORDINATOR/NUM_PROCESSES/PROCESS_ID plus
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=devices_per_proc``
+    (so process i's local devices are node i's row of the 2D mesh).  With
+    ``log_dir`` set, child i's stdout+stderr stream to
+    ``{log_dir}/proc{i}.log``; otherwise output is inherited.
+    """
+    if n_procs < 1:
+        raise ValueError("n_procs must be >= 1")
+    coordinator = f"127.0.0.1:{pick_free_port()}"
+    result = SpawnResult(coordinator=coordinator)
+    for i in range(n_procs):
+        child_env = dict(os.environ)
+        if env:
+            child_env.update(env)
+        child_env[ENV_COORDINATOR] = coordinator
+        child_env[ENV_NUM_PROCESSES] = str(n_procs)
+        child_env[ENV_PROCESS_ID] = str(i)
+        xla = child_env.get("XLA_FLAGS", "")
+        # Drop any stale forced-device-count flag before adding ours.
+        xla = " ".join(
+            t for t in xla.split()
+            if not t.startswith("--xla_force_host_platform_device_count")
+        )
+        child_env["XLA_FLAGS"] = (
+            f"{xla} --xla_force_host_platform_device_count={devices_per_proc}".strip()
+        )
+        log_path = None
+        if log_dir is not None:
+            os.makedirs(log_dir, exist_ok=True)
+            log_path = os.path.join(log_dir, f"proc{i}.log")
+            out = open(log_path, "wb")
+        else:
+            out = None
+        popen = subprocess.Popen(
+            list(argv), env=child_env,
+            stdout=out, stderr=subprocess.STDOUT if out else None,
+        )
+        if out is not None:
+            out.close()  # child keeps its own fd
+        result.procs.append(LocalProc(i, popen, log_path))
+        if i == 0:
+            # Give the coordinator a moment to bind before peers probe it.
+            time.sleep(0.2)
+    return result
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="run N local jax processes as one distributed group"
+    )
+    ap.add_argument("--nprocs", type=int, default=2)
+    ap.add_argument("--devices-per-proc", type=int, default=1)
+    ap.add_argument("--log-dir", default=None)
+    ap.add_argument("--timeout", type=float, default=None)
+    ap.add_argument("cmd", nargs=argparse.REMAINDER,
+                    help="command to run (prefix with --)")
+    args = ap.parse_args()
+    cmd = args.cmd[1:] if args.cmd[:1] == ["--"] else args.cmd
+    if not cmd:
+        ap.error("no command given; usage: ... --nprocs 2 -- python -m ...")
+    res = spawn_local(
+        args.nprocs, cmd,
+        devices_per_proc=args.devices_per_proc, log_dir=args.log_dir,
+    )
+    print(f"spawned {args.nprocs} procs, coordinator {res.coordinator}")
+    codes = res.wait(timeout=args.timeout)
+    for i, c in enumerate(codes):
+        print(f"proc {i}: exit {c}")
+    sys.exit(max(abs(c) for c in codes))
+
+
+if __name__ == "__main__":
+    main()

@@ -28,14 +28,32 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--distributed", action="store_true",
-                    help="call jax.distributed.initialize() (multi-host)")
+                    help="join a multi-process group (see --coordinator)")
+    ap.add_argument("--coordinator", default=None,
+                    help="HOST:PORT of process 0 (or env REPRO_COORDINATOR)")
+    ap.add_argument("--num-processes", type=int, default=None,
+                    help="world size (or env REPRO_NUM_PROCESSES)")
+    ap.add_argument("--process-id", type=int, default=None,
+                    help="this process's rank (or env REPRO_PROCESS_ID)")
+    ap.add_argument("--engine", default=None,
+                    help="engine override (sequential|shard_map|multihost)")
+    ap.add_argument("--n-nodes", type=int, default=None,
+                    help="node count for the 2D (node, device) mesh")
+    ap.add_argument("--n-ranks", type=int, default=None,
+                    help="total data-parallel ranks (devices)")
     ap.add_argument("--compress-grads", action="store_true")
     args = ap.parse_args()
 
     if args.distributed:
+        from repro.launch.multihost import initialize_distributed
+
+        initialize_distributed(
+            args.coordinator, args.num_processes, args.process_id
+        )
         import jax
 
-        jax.distributed.initialize()
+        print(f"distributed: process {jax.process_index()}/"
+              f"{jax.process_count()}, {len(jax.devices())} global devices")
 
     if args.arch == "mace_cfm":
         from repro.configs.mace_cfm import CONFIG, REDUCED
@@ -48,10 +66,24 @@ def main() -> None:
             2000 if args.reduced else 100_000, seed=0,
             max_atoms=cap // 4 if args.reduced else None,
         )
+        extra = {}
+        if args.engine is not None:
+            extra["engine"] = args.engine
+        if args.n_ranks is not None:
+            extra["n_ranks"] = args.n_ranks
+        if args.n_nodes is not None:
+            extra["n_nodes"] = args.n_nodes
+        if args.distributed and args.engine is None:
+            import jax
+
+            if jax.process_count() > 1:
+                extra["engine"] = "multihost"
+                extra.setdefault("n_nodes", jax.process_count())
+                extra.setdefault("n_ranks", len(jax.devices()))
         tcfg = TrainerConfig(
             capacity=cap, edge_factor=32, max_graphs=max(16, cap // 8),
             ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
-            compress_grads=args.compress_grads,
+            compress_grads=args.compress_grads, **extra,
         )
         tr = Trainer(cfg, tcfg, ds, seed=0)
         if tr.maybe_restore():

@@ -26,7 +26,7 @@ from __future__ import annotations
 import json
 import os
 import shutil
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import numpy as np
@@ -82,32 +82,31 @@ def _fsync_dir(path: str) -> None:
         os.close(fd)
 
 
-def save_checkpoint(
-    directory: str,
-    step: int,
-    state: PyTree,
-    *,
-    meta: Optional[Dict[str, Any]] = None,
-    keep: int = 3,
-    process_index: int = 0,
-) -> str:
-    os.makedirs(directory, exist_ok=True)
-    tmp = os.path.join(directory, f"tmp.{step}.{process_index}")
-    final = os.path.join(directory, f"step_{step:010d}")
-    if os.path.exists(tmp):
-        shutil.rmtree(tmp)
-    os.makedirs(tmp)
-
-    # Durability contract: every payload byte must be on disk BEFORE the
-    # COMMITTED marker exists — a marker that can outlive its payload after
-    # a crash would surface a "committed" checkpoint with truncated shards.
+def _write_shard(tmp: str, process_index: int, state: PyTree) -> None:
+    """One process's array shard, fsynced before anyone may commit."""
     flat = _flatten(state)
     with open(os.path.join(tmp, f"arrays.{process_index}.npz"), "wb") as f:
         np.savez(f, **flat)
         f.flush()
         os.fsync(f.fileno())
+
+
+def _commit(
+    directory: str,
+    tmp: str,
+    final: str,
+    step: int,
+    meta: Optional[Dict[str, Any]],
+    process_count: int,
+) -> None:
+    """meta + COMMITTED marker + atomic rename.  Durability contract:
+    every payload byte must be on disk BEFORE the COMMITTED marker exists
+    — a marker that can outlive its payload after a crash would surface a
+    "committed" checkpoint with truncated shards."""
     with open(os.path.join(tmp, "meta.json"), "w") as f:
-        json.dump({"step": step, **(meta or {})}, f)
+        json.dump(
+            {"step": step, "process_count": process_count, **(meta or {})}, f
+        )
         f.flush()
         os.fsync(f.fileno())
     # commit marker last, then atomic rename
@@ -124,11 +123,68 @@ def save_checkpoint(
     # the rename itself lives in the parent directory's entries
     _fsync_dir(directory)
 
-    _gc(directory, keep, process_index=process_index)
+
+def save_checkpoint(
+    directory: str,
+    step: int,
+    state: PyTree,
+    *,
+    meta: Optional[Dict[str, Any]] = None,
+    keep: int = 3,
+    process_index: int = 0,
+    process_count: int = 1,
+    barrier: Optional[Callable[[str], None]] = None,
+) -> str:
+    """Atomic checkpoint commit; ``state`` is THIS process's shard.
+
+    Single process: stage into ``tmp.<step>.<proc>``, fsync payload,
+    write marker, rename.  Multi process (``process_count > 1``,
+    ``barrier`` required — e.g. ``MultiHostEngine.barrier``): all
+    processes stage into ONE shared ``tmp.<step>.shared`` directory, and
+    the commit is barrier'd so the marker can only appear after *every*
+    process's ``arrays.<proc>.npz`` is durable — a checkpoint can never
+    commit with a missing host shard:
+
+        proc 0 creates staging  ->  barrier  ->  all write shards
+        ->  barrier  ->  proc 0 writes meta+marker, renames  ->  barrier
+    """
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:010d}")
+    if process_count <= 1:
+        tmp = os.path.join(directory, f"tmp.{step}.{process_index}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        _write_shard(tmp, process_index, state)
+        _commit(directory, tmp, final, step, meta, process_count=1)
+        _gc(directory, keep, process_index=process_index)
+        return final
+
+    if barrier is None:
+        raise ValueError(
+            "multi-process save_checkpoint needs a barrier callable "
+            "(e.g. MultiHostEngine.barrier) to order the shared commit"
+        )
+    tmp = os.path.join(directory, f"tmp.{step}.shared")
+    if process_index == 0:
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+    barrier(f"ckpt-stage-{step}")
+    _write_shard(tmp, process_index, state)
+    barrier(f"ckpt-shards-{step}")
+    if process_index == 0:
+        _commit(directory, tmp, final, step, meta, process_count=process_count)
+        _gc(directory, keep, process_index=0, shared=True)
+    # nobody returns (and possibly starts the next step's checkpoint, or
+    # restores) until the commit is visible everywhere
+    barrier(f"ckpt-commit-{step}")
     return final
 
 
-def _gc(directory: str, keep: int, *, process_index: int = 0) -> None:
+def _gc(
+    directory: str, keep: int, *, process_index: int = 0, shared: bool = False
+) -> None:
     steps = sorted(_committed_steps(directory))
     for s in steps[:-keep] if keep > 0 else []:
         shutil.rmtree(os.path.join(directory, f"step_{s:010d}"), ignore_errors=True)
@@ -138,6 +194,9 @@ def _gc(directory: str, keep: int, *, process_index: int = 0) -> None:
     # in-progress write of a concurrent peer.  Scope to this process_index
     # and to steps strictly older than the newest commit (a tmp at or past
     # the newest commit may be a writer that is still mid-commit).
+    # ``shared=True`` (process 0 of a barrier'd multi-process save, called
+    # after its own commit) additionally owns crashed ``tmp.<step>.shared``
+    # staging dirs — still only ones older than the newest commit.
     newest = steps[-1] if steps else None
     for name in os.listdir(directory):
         if not name.startswith("tmp."):
@@ -146,11 +205,19 @@ def _gc(directory: str, keep: int, *, process_index: int = 0) -> None:
         if len(parts) != 3:
             continue  # unrecognised layout: leave it for a human
         try:
-            tmp_step, tmp_proc = int(parts[1]), int(parts[2])
+            tmp_step = int(parts[1])
         except ValueError:
             continue
-        if tmp_proc != process_index:
-            continue  # a concurrent writer's directory — never ours to GC
+        if parts[2] == "shared":
+            if not shared:
+                continue  # single-proc writers never own shared staging
+        else:
+            try:
+                tmp_proc = int(parts[2])
+            except ValueError:
+                continue
+            if tmp_proc != process_index:
+                continue  # a concurrent writer's directory — never ours to GC
         if newest is not None and tmp_step < newest:
             shutil.rmtree(os.path.join(directory, name), ignore_errors=True)
 
@@ -192,13 +259,30 @@ def restore_checkpoint(
     *,
     step: Optional[int] = None,
     process_index: int = 0,
+    expect_process_count: Optional[int] = None,
 ) -> Tuple[int, PyTree, Dict[str, Any]]:
+    """Restore this process's shard of the newest (or given) committed step.
+
+    ``expect_process_count`` validates the checkpoint's writer topology
+    before any array bytes load: a checkpoint written by N processes holds
+    N shard files with process-local EF state, so silently reading it from
+    a different world size would mis-restore — elastic readers (who re-init
+    rank-local state and read the replicated shard 0) pass ``None``.
+    """
     step = step if step is not None else latest_step(directory)
     if step is None:
         raise FileNotFoundError(f"no committed checkpoint in {directory}")
     path = os.path.join(directory, f"step_{step:010d}")
-    with np.load(os.path.join(path, f"arrays.{process_index}.npz")) as z:
-        flat = {k: z[k] for k in z.files}
     with open(os.path.join(path, "meta.json")) as f:
         meta = json.load(f)
+    ckpt_procs = int(meta.get("process_count", 1))
+    if expect_process_count is not None and ckpt_procs != expect_process_count:
+        raise ValueError(
+            f"checkpoint step {step} in {directory} was written by "
+            f"{ckpt_procs} process(es) but this reader expects "
+            f"{expect_process_count}; restore with TrainerConfig.elastic=True "
+            "to rescale across host counts (losing a host is a rescale event)"
+        )
+    with np.load(os.path.join(path, f"arrays.{process_index}.npz")) as z:
+        flat = {k: z[k] for k in z.files}
     return step, _unflatten(template, flat), meta

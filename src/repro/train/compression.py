@@ -12,12 +12,13 @@ identically (required for synchronous replicas).
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Any, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 PyTree = Any
+AxisName = Union[str, Sequence[str]]
 
 
 def int8_compress_decompress(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -48,7 +49,11 @@ def make_error_feedback():
 
 
 def compressed_psum_ef(
-    g: jnp.ndarray, e: jnp.ndarray, axis_name: str
+    g: jnp.ndarray,
+    e: jnp.ndarray,
+    axis_name: AxisName,
+    *,
+    axis_size: Optional[int] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """``compressed_psum`` with rank-local error feedback.
 
@@ -59,7 +64,18 @@ def compressed_psum_ef(
     wire sum is exact only for group sizes up to 258 (127 x g <= 32767);
     larger data-parallel groups need a hierarchical reduction before this
     collective.  Returns ``(g_hat_mean, new_e)``; the residual is
-    rank-local state and is never reduced."""
+    rank-local state and is never reduced.
+
+    ``axis_name`` may be a single mesh axis or a tuple of axes (the group
+    is their product).  Pass ``axis_size`` (the static size of the group,
+    e.g. ``mesh.shape[axis]``) to let the degenerate single-member group
+    short-circuit to the exact identity: with one participant there is no
+    wire hop, so quantising would only inject residual drift for nothing.
+    """
+    if axis_size == 1:
+        # Single-node group: the mean of one rank is the rank itself.
+        # Skip quantisation entirely — exact identity, EF residual untouched.
+        return g, e
     c = g.astype(jnp.float32) + e
     scale = jnp.max(jnp.abs(c)) / 127.0 + 1e-12
     scale = jax.lax.pmax(scale, axis_name)

@@ -55,6 +55,32 @@ sequential loop remains the reference semantics while shard_map provides the
 scaling path every later feature (elastic rescale, multi-backend kernels via
 ``kernels.registry``) plugs into.
 
+Mesh topology
+-------------
+Two mesh shapes back the SPMD engines:
+
+* **1D ``("data",)``** (``ShardMapEngine``): every device is a peer; the
+  gradient all-reduce — plain ``pmean`` or the int8 error-feedback
+  ``compressed_psum_ef`` — spans the single axis.  Right for one host,
+  where all device links are equal.
+* **2D ``("node", "device")``** (``MultiHostEngine``): rows are hosts
+  (one jax process per node in multi-process runs), columns are the
+  devices inside a host.  The reduction is *hierarchical*: gradients are
+  first ``lax.pmean``-ed over ``"device"`` — the intra-node hop rides
+  NVLink/ICI-class links where bandwidth is cheap and quantisation would
+  only cost accuracy — and only the **``"node"`` axis is compressed**
+  (``compressed_psum_ef`` over ``"node"``), because the inter-node hop
+  crosses the datacenter network where bandwidth is scarcest (the
+  HydraGNN pod-scale lesson).  Error-feedback residuals are therefore
+  keyed **per node** (``[n_nodes, ...]``, sharded ``P("node")``), not per
+  rank: every device in a row holds the same post-``pmean`` gradient, so
+  the node is the quantisation site.  The two-level Algorithm-1 packing
+  (``core.binpack.two_level_batches``) mirrors the same topology on the
+  data side — graphs -> ranks inside a node, bins -> nodes — so
+  stragglers are balanced at both levels.  A single-node mesh
+  (``n_nodes == 1``) short-circuits the compressed hop to the exact
+  identity (``axis_size=1``): no wire, no quantisation drift.
+
 Async host prefetch
 -------------------
 The ``collate``/``step`` split exists so the two can overlap: ``collate`` is
@@ -123,13 +149,15 @@ from jax.sharding import PartitionSpec as P
 from repro.core.mace import MaceConfig, weighted_loss
 from repro.data.collate import BinShape, collate_bin, collate_stacked
 from repro.kernels import registry
-from repro.launch.mesh import make_dp_mesh
+from repro.launch.mesh import make_dp_mesh, make_node_device_mesh
 from .compression import compressed_psum_ef
 from .optimizer import Transform, apply_updates
 
 Params = Any
 Batch = Dict[str, jnp.ndarray]
 DP_AXIS = "data"
+NODE_AXIS = "node"
+DEVICE_AXIS = "device"
 
 
 # ---------------------------------------------------------------------------
@@ -415,6 +443,31 @@ def _emulated_compressed_mean_ef(stacked_g, stacked_e):
     return g_hat, c - q * scale
 
 
+def _emulated_hier_compressed_mean(stacked_g, stacked_e, *, n_nodes: int):
+    """Host twin of the *hierarchical* reduction: grads stacked [R, ...]
+    are first averaged inside each node (R = n_nodes * devices_per_node,
+    node-major), then the per-node means go through the error-feedback
+    int8 compression across nodes — residuals are [n_nodes, ...], one per
+    quantisation site, exactly like ``MultiHostEngine``'s ``P("node")``
+    EF shards.  ``n_nodes == 1`` mirrors the collective's ``axis_size=1``
+    identity short-circuit (no quantisation, residual untouched).
+    Returns ``(g_hat_mean, new_stacked_e)``."""
+    R = stacked_g.shape[0]
+    dpn = R // n_nodes
+    node_g = jnp.mean(
+        stacked_g.astype(jnp.float32).reshape((n_nodes, dpn) + stacked_g.shape[1:]),
+        axis=1,
+    )
+    if n_nodes == 1:
+        return node_g[0].astype(stacked_g.dtype), stacked_e
+    c = node_g + stacked_e
+    scale = jnp.max(jnp.abs(c)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(c / scale), -127, 127)
+    total = jnp.sum(q, axis=0)
+    g_hat = (total * scale / n_nodes).astype(stacked_g.dtype)
+    return g_hat, c - q * scale
+
+
 def _init_stacked_ef(params, n_ranks: int, compress: bool):
     """Per-rank error-feedback residuals, stacked [R, ...] (empty when the
     compressed all-reduce is off)."""
@@ -482,16 +535,30 @@ class SequentialEngine:
     ):
         self.n_ranks = tcfg.n_ranks
         self.compress = tcfg.compress_grads
+        # n_nodes set -> emulate the 2D mesh's *hierarchical* reduction
+        # (intra-node mean, int8-EF across nodes, per-node residuals) so
+        # this engine stays the oracle for MultiHostEngine too
+        self.n_nodes = getattr(tcfg, "n_nodes", None)
+        if self.n_nodes and self.n_ranks % self.n_nodes:
+            raise ValueError(
+                f"n_ranks={self.n_ranks} not divisible by n_nodes={self.n_nodes}"
+            )
         self.with_blocking = interaction_consumes_blocking(mace_cfg)
         self.telemetry = RankTelemetry(self.n_ranks)
         loss_fn = make_loss_fn(mace_cfg, tcfg, n_graphs)
         self._grad_fn = jax.jit(jax.value_and_grad(loss_fn, has_aux=True))
         compress = self.compress
+        n_nodes = self.n_nodes
 
         @jax.jit
         def finalize(params, opt_state, ef, stacked_grads, stacked_metrics, step_idx):
             if compress:
-                pairs = jax.tree.map(_emulated_compressed_mean_ef, stacked_grads, ef)
+                reduce_ef = (
+                    partial(_emulated_hier_compressed_mean, n_nodes=n_nodes)
+                    if n_nodes
+                    else _emulated_compressed_mean_ef
+                )
+                pairs = jax.tree.map(reduce_ef, stacked_grads, ef)
                 is_pair = lambda x: isinstance(x, tuple)
                 grads = jax.tree.map(lambda x: x[0], pairs, is_leaf=is_pair)
                 ef = jax.tree.map(lambda x: x[1], pairs, is_leaf=is_pair)
@@ -510,8 +577,18 @@ class SequentialEngine:
         ``[R, ...]`` leading dim — they cannot survive a change of R, so a
         rescale (or a cross-R checkpoint restore) re-initialises them to
         zeros here and the compressed path restarts its residual
-        accumulation (tests/test_rescale.py asserts this contract)."""
-        return _init_stacked_ef(params, self.n_ranks, self.compress)
+        accumulation (tests/test_rescale.py asserts this contract).
+
+        Hierarchical mode (``n_nodes`` set) keys residuals per *node* —
+        the quantisation happens on per-node means, so the leading dim is
+        ``n_nodes``, not ``n_ranks``."""
+        lead = self.n_nodes if self.n_nodes else self.n_ranks
+        return _init_stacked_ef(params, lead, self.compress)
+
+    def place_replicated(self, tree):
+        """Replicated-state placement hook (trivial here: the sequential
+        oracle runs on the default device)."""
+        return tree
 
     def close(self) -> None:
         """Teardown: drop the jitted step functions (clearing their
@@ -637,6 +714,14 @@ class ShardMapEngine:
         rank count (see SequentialEngine.init_ef for the rescale contract)."""
         return _init_stacked_ef(params, self.n_ranks, self.compress)
 
+    def place_replicated(self, tree):
+        """Commit replicated state (params/opt/EMA/step scalar) onto this
+        engine's mesh.  The elastic-rescale path needs it explicitly: state
+        committed to the *previous* mesh's devices must be re-placed before
+        the first jitted step on the new mesh."""
+        replicated = jax.sharding.NamedSharding(self.mesh, P())
+        return jax.device_put(tree, replicated)
+
     def close(self) -> None:
         """Teardown: clear the jitted SPMD step's compilation cache and drop
         the mesh reference.  The engine used to assume its mesh outlives it;
@@ -691,9 +776,261 @@ class ShardMapEngine:
         return params, opt_state, ef_state, metrics
 
 
+class MultiHostEngine:
+    """Hierarchical SPMD data parallelism over a 2D ``("node", "device")``
+    mesh — the pod-scale backend (see the module docstring's *Mesh
+    topology* section).
+
+    One jax process per node in multi-process runs (brought up via
+    ``launch.multihost.initialize_distributed``); a single process can
+    also *emulate* the topology over forced host devices for tests.  The
+    jitted step runs value-and-grad per device, ``lax.pmean``s gradients
+    over the intra-node ``"device"`` axis, then reduces the per-node
+    means across ``"node"`` — plain ``pmean``, or ``compressed_psum_ef``
+    (int8 + per-node error feedback) when ``compress_grads`` — and
+    applies the optimizer update on replicated params.
+
+    Multi-process state placement: batches are built from each process's
+    *local* bins (``make_array_from_process_local_data``), EF residuals
+    are ``P("node")``-sharded global arrays, and replicated state flows
+    through ``place_replicated``/``host_state``/``ef_from_host`` so the
+    trainer's checkpoint path stays process-local (every process writes
+    ``arrays.<proc>.npz``; commit is barrier'd — see train.checkpoint).
+    """
+
+    name = "multihost"
+
+    def __init__(
+        self,
+        mace_cfg: MaceConfig,
+        tcfg,
+        optimizer: Transform,
+        n_graphs: int,
+        *,
+        mesh=None,
+    ):
+        self.n_ranks = tcfg.n_ranks
+        n_nodes = getattr(tcfg, "n_nodes", None) or jax.process_count()
+        if self.n_ranks % n_nodes:
+            raise ValueError(
+                f"n_ranks={self.n_ranks} not divisible by n_nodes={n_nodes}"
+            )
+        self.n_nodes = n_nodes
+        self.devices_per_node = self.n_ranks // n_nodes
+        self.process_index = jax.process_index()
+        self.process_count = jax.process_count()
+        if mesh is None:
+            mesh = make_node_device_mesh(n_nodes, self.devices_per_node)
+        if tuple(mesh.axis_names) != (NODE_AXIS, DEVICE_AXIS) or (
+            mesh.devices.shape != (n_nodes, self.devices_per_node)
+        ):
+            raise ValueError(
+                f"multihost engine needs a ({n_nodes}, {self.devices_per_node}) "
+                f"(node, device) mesh, got {mesh.devices.shape} over "
+                f"{mesh.axis_names}"
+            )
+        self.mesh = mesh
+        self.compress = tcfg.compress_grads
+        self.with_blocking = interaction_consumes_blocking(mace_cfg)
+        self.telemetry = RankTelemetry(self.n_ranks, lockstep=True)
+        loss_fn = make_loss_fn(mace_cfg, tcfg, n_graphs)
+        compress = self.compress
+
+        def rank_step(params, opt_state, ef, batch, step_idx):
+            batch = jax.tree.map(lambda x: x[0], batch)  # [1, ...] block -> [...]
+            (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+            # level 1: intra-node mean over the fast ("device") links —
+            # cheap bandwidth, so no quantisation here
+            grads = jax.lax.pmean(grads, DEVICE_AXIS)
+            if compress:
+                # level 2: int8-EF across nodes only, where bandwidth is
+                # scarce; residual is per-node (identical on every device
+                # of a row, since the inputs are post-pmean)
+                pairs = jax.tree.map(
+                    lambda g, e: compressed_psum_ef(
+                        g, e[0], NODE_AXIS, axis_size=n_nodes
+                    ),
+                    grads, ef,
+                )
+                is_pair = lambda x: isinstance(x, tuple)
+                grads = jax.tree.map(lambda x: x[0], pairs, is_leaf=is_pair)
+                ef = jax.tree.map(lambda x: x[1][None], pairs, is_leaf=is_pair)
+            else:
+                grads = jax.lax.pmean(grads, NODE_AXIS)
+            metrics = jax.lax.pmean(metrics, (NODE_AXIS, DEVICE_AXIS))
+            # node-major [R] of per-rank loads, replicated so the host can
+            # read it from any process (telemetry feeds two_level_metrics)
+            loads = jax.lax.all_gather(
+                _rank_load(batch)[None], (NODE_AXIS, DEVICE_AXIS), tiled=True
+            )
+            updates, opt_state = optimizer.update(grads, opt_state, params, step_idx)
+            return apply_updates(params, updates), opt_state, ef, metrics, loads
+
+        # check_rep must be off here regardless of kernels: shard_map's
+        # replication inference cannot see through the tiled all_gather
+        # (and pallas_call has no replication rule either)
+        self._step_fn = jax.jit(
+            shard_map(
+                rank_step,
+                mesh=self.mesh,
+                in_specs=(
+                    P(), P(), P(NODE_AXIS), P((NODE_AXIS, DEVICE_AXIS)), P(),
+                ),
+                out_specs=(P(), P(), P(NODE_AXIS), P(), P()),
+                check_rep=False,
+            )
+        )
+
+    # ------------------------- state placement ---------------------------
+
+    @staticmethod
+    def _leaf_to_host(x):
+        """np view of a leaf: addressable shard for global arrays (whose
+        full value np.asarray cannot touch), plain asarray otherwise."""
+        if isinstance(x, jax.Array) and not x.is_fully_addressable:
+            return np.asarray(x.addressable_shards[0].data)
+        return np.asarray(x)
+
+    def place_replicated(self, tree):
+        """Replicated state (params/opt/EMA/step scalar) -> global arrays
+        on the 2D mesh.  Multi-process: every process contributes its
+        (identical) host copy via ``make_array_from_process_local_data``;
+        single-process emulation is a plain device_put."""
+        sh = jax.sharding.NamedSharding(self.mesh, P())
+        if self.process_count == 1:
+            return jax.device_put(tree, sh)
+        return jax.tree.map(
+            lambda x: jax.make_array_from_process_local_data(
+                sh, self._leaf_to_host(x)
+            ),
+            tree,
+        )
+
+    def host_state(self, tree):
+        """Checkpointable host view: replicated leaves become their full
+        np value, ``P("node")``-sharded EF leaves become this process's
+        own ``[1, ...]`` node shard (single-process: the full
+        ``[n_nodes, ...]`` stack — everything is addressable)."""
+        return jax.tree.map(self._leaf_to_host, tree)
+
+    def ef_from_host(self, ef_host):
+        """Rebuild the ``P("node")``-sharded EF residuals from their
+        ``host_state`` form."""
+        if isinstance(ef_host, tuple) and ef_host == ():
+            return ()
+        sh = jax.sharding.NamedSharding(self.mesh, P(NODE_AXIS))
+        if self.process_count == 1:
+            return jax.tree.map(
+                lambda e: jax.device_put(jnp.asarray(e, jnp.float32), sh),
+                ef_host,
+            )
+
+        def one(e):
+            local = np.asarray(e, np.float32)  # [1, ...]: our node's row
+            gshape = (self.n_nodes,) + local.shape[1:]
+            return jax.make_array_from_callback(gshape, sh, lambda idx: local)
+
+        return jax.tree.map(one, ef_host)
+
+    def barrier(self, name: str) -> None:
+        """Cross-process sync point (checkpoint commit protocol).  No-op
+        in single-process emulation."""
+        if self.process_count > 1:
+            from jax.experimental import multihost_utils
+
+            multihost_utils.sync_global_devices(name)
+
+    # ----------------------------- engine API -----------------------------
+
+    def init_ef(self, params):
+        """Fresh ``[n_nodes, ...]`` error-feedback residuals, sharded
+        ``P("node")`` (one residual per quantisation site — see the module
+        docstring; the rescale contract matches SequentialEngine)."""
+        if not self.compress:
+            return ()
+        sh = jax.sharding.NamedSharding(self.mesh, P(NODE_AXIS))
+
+        def one(p):
+            gshape = (self.n_nodes,) + p.shape
+            return jax.make_array_from_callback(
+                gshape, sh, lambda idx, g=gshape: np.zeros(g, np.float32)[idx]
+            )
+
+        return jax.tree.map(one, params)
+
+    def close(self) -> None:
+        """Teardown (see ShardMapEngine.close): clear the SPMD step's jit
+        cache and drop the mesh so a successor engine can rebuild."""
+        if self._step_fn is not None and hasattr(self._step_fn, "clear_cache"):
+            self._step_fn.clear_cache()
+        self._step_fn = None
+        self.mesh = None
+
+    @property
+    def closed(self) -> bool:
+        return self._step_fn is None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc_info):
+        self.close()
+
+    def collate(
+        self, mols_per_rank: Sequence[Sequence[Any]], shape: BinShape
+    ):
+        if len(mols_per_rank) != self.n_ranks:
+            raise ValueError(
+                f"got {len(mols_per_rank)} bins for {self.n_ranks} ranks"
+            )
+        stats = {"block_s": 0.0}
+        if self.process_count > 1:
+            # each process collates only its own node's bins (node-major
+            # rank order: rank r -> node r // dpn) and contributes them as
+            # the local shard of the global [R, ...] batch
+            lo = self.process_index * self.devices_per_node
+            local = mols_per_rank[lo:lo + self.devices_per_node]
+            arrs = collate_stacked(
+                local, shape, with_blocking=self.with_blocking, timings=stats
+            )
+            sh = jax.sharding.NamedSharding(
+                self.mesh, P((NODE_AXIS, DEVICE_AXIS))
+            )
+            batch = {
+                k: jax.make_array_from_process_local_data(
+                    sh, v, (self.n_ranks,) + v.shape[1:]
+                )
+                for k, v in arrs.items()
+            }
+        else:
+            arrs = collate_stacked(
+                mols_per_rank, shape, with_blocking=self.with_blocking,
+                timings=stats,
+            )
+            batch = {k: jnp.asarray(v) for k, v in arrs.items()}
+        return batch, stats
+
+    def step(self, params, opt_state, ef_state, batch: Batch, step_idx):
+        if self.closed:
+            raise RuntimeError("engine is closed (rescaled away?)")
+        t0 = time.perf_counter()
+        params, opt_state, ef_state, metrics, loads = self._step_fn(
+            params, opt_state, ef_state, batch, step_idx
+        )
+        jax.block_until_ready(params)
+        wall = time.perf_counter() - t0
+        self.telemetry.record(
+            [wall] * self.n_ranks, [float(x) for x in np.asarray(loads)]
+        )
+        return params, opt_state, ef_state, metrics
+
+
 ENGINES = {
     SequentialEngine.name: SequentialEngine,
     ShardMapEngine.name: ShardMapEngine,
+    MultiHostEngine.name: MultiHostEngine,
 }
 
 
@@ -706,7 +1043,7 @@ def make_engine(
     *,
     mesh=None,
 ):
-    """Engine factory: ``name`` in {"sequential", "shard_map"}.
+    """Engine factory: ``name`` in {"sequential", "shard_map", "multihost"}.
 
     A ``mace_cfg`` still carrying an ``"auto"`` impl sentinel is resolved
     here against the committed tuning table (``kernels.autotune``) as a
@@ -732,6 +1069,6 @@ def make_engine(
             edge_factor=tcfg.edge_factor,
             block_candidates=[(tcfg.block_n, tcfg.block_e)],
         )
-    if cls is ShardMapEngine:
+    if cls in (ShardMapEngine, MultiHostEngine):
         return cls(mace_cfg, tcfg, optimizer, n_graphs, mesh=mesh)
     return cls(mace_cfg, tcfg, optimizer, n_graphs)

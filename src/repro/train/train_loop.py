@@ -57,7 +57,12 @@ from repro.data.collate import BinShape
 from repro.kernels import autotune
 from repro.data.molecules import SyntheticCFMDataset
 from repro.data.prefetch import PrefetchPipeline
-from repro.data.sampler import BalancedBatchSampler, FixedCountSampler, SamplerState
+from repro.data.sampler import (
+    BalancedBatchSampler,
+    FixedCountSampler,
+    HierarchicalBalancedSampler,
+    SamplerState,
+)
 from .checkpoint import latest_step, read_meta, restore_checkpoint, save_checkpoint
 from .engine import RankTelemetry, make_engine
 from .optimizer import EMA, adamw, chain, clip_by_global_norm
@@ -77,7 +82,13 @@ class TrainerConfig:
     forces_weight: float = 100.0
     remat: bool = False
     compress_grads: bool = False
-    engine: str = "sequential"       # "sequential" | "shard_map" (train.engine)
+    engine: str = "sequential"       # "sequential" | "shard_map" | "multihost"
+    # pod topology: node count of the 2D ("node", "device") mesh.  Set ->
+    # two-level Algorithm-1 packing (graphs -> ranks within a node, bins ->
+    # nodes) and the hierarchical reduction (intra-node pmean, int8-EF
+    # across nodes only).  None keeps the flat 1D layout.  n_ranks must be
+    # divisible by n_nodes (ranks_per_node = n_ranks // n_nodes).
+    n_nodes: Optional[int] = None
     prefetch: int = 0                # async collate lookahead depth (0 = inline)
     # overrides MaceConfig.impl (symcon + channelwise_tp contraction) when
     # set; "auto" resolves from the committed tuning table at build time
@@ -149,9 +160,20 @@ class Trainer:
             block_n=tcfg.block_n, block_e=tcfg.block_e,
         )
         if sampler == "balanced":
-            self.sampler = BalancedBatchSampler(
-                dataset.sizes, tcfg.capacity, tcfg.n_ranks, seed=seed
-            )
+            if tcfg.n_nodes:
+                if tcfg.n_ranks % tcfg.n_nodes:
+                    raise ValueError(
+                        f"n_ranks={tcfg.n_ranks} not divisible by "
+                        f"n_nodes={tcfg.n_nodes}"
+                    )
+                self.sampler = HierarchicalBalancedSampler(
+                    dataset.sizes, tcfg.capacity, tcfg.n_nodes,
+                    tcfg.n_ranks // tcfg.n_nodes, seed=seed,
+                )
+            else:
+                self.sampler = BalancedBatchSampler(
+                    dataset.sizes, tcfg.capacity, tcfg.n_ranks, seed=seed
+                )
         else:
             self.sampler = FixedCountSampler(
                 dataset.sizes, graphs_per_batch=tcfg.fixed_graphs_per_batch,
@@ -183,6 +205,12 @@ class Trainer:
                 f"BinShape.block_n={self.bin_shape.block_n} != "
                 f"MaceConfig.interaction_block_n={mace_cfg.interaction_block_n}"
             )
+        # commit replicated state to the engine's mesh before the first
+        # step — in multi-process runs the jitted step only accepts global
+        # arrays, and even single-process mesh engines re-place on rescale
+        self.params, self.opt_state, self.ema_params = self._place(
+            (self.params, self.opt_state, self.ema_params)
+        )
         # per-rank error-feedback residuals for the compressed all-reduce
         # (empty when compress_grads is off); checkpointed with the run.
         self.ef_state = self.engine.init_ef(self.params)
@@ -211,6 +239,12 @@ class Trainer:
 
     # -------------------------- fault tolerance ---------------------------
 
+    def _place(self, tree):
+        """Engine hook: commit replicated state to the engine's mesh
+        (identity for the sequential oracle)."""
+        place = getattr(self.engine, "place_replicated", None)
+        return place(tree) if place is not None else tree
+
     def _state(self):
         return {
             "params": self.params,
@@ -219,18 +253,29 @@ class Trainer:
             "ef": self.ef_state,
         }
 
+    def _host_state(self):
+        """This process's checkpoint shard: engines with multi-process
+        state (MultiHostEngine) reduce global arrays to their local host
+        view; single-process engines checkpoint the state as-is."""
+        state = self._state()
+        to_host = getattr(self.engine, "host_state", None)
+        return to_host(state) if to_host is not None else state
+
     def save(self):
         if not self.tcfg.ckpt_dir:
             return
         save_checkpoint(
             self.tcfg.ckpt_dir,
             self.global_step,
-            self._state(),
+            self._host_state(),
             meta={
                 "sampler": self.sampler_state.to_dict(),
                 "n_ranks": self.engine.n_ranks,
                 "lineage": [dict(h) for h in self._lineage],
             },
+            process_index=getattr(self.engine, "process_index", 0),
+            process_count=getattr(self.engine, "process_count", 1),
+            barrier=getattr(self.engine, "barrier", None),
         )
 
     def maybe_restore(self) -> bool:
@@ -238,28 +283,51 @@ class Trainer:
         if not d or latest_step(d) is None:
             return False
         step, meta = read_meta(d)
+        eng_procs = int(getattr(self.engine, "process_count", 1))
         ckpt_ranks = int(meta.get("n_ranks", self.engine.n_ranks))
+        ckpt_procs = int(meta.get("process_count", 1))
         cross_rank = ckpt_ranks != self.engine.n_ranks
+        cross_proc = ckpt_procs != eng_procs
         if cross_rank and not self.tcfg.elastic:
             raise ValueError(
                 f"checkpoint in {d} was written at n_ranks={ckpt_ranks} but "
                 f"this trainer runs n_ranks={self.engine.n_ranks}; set "
                 "TrainerConfig.elastic=True to restore across rank counts"
             )
-        template = self._state()
-        if cross_rank:
-            # the [R_ckpt, ...] error-feedback residuals are rank-local and
-            # cannot be restored into an engine with a different R: leave
-            # them out of the template and re-init below (documented
-            # contract, asserted in tests/test_rescale.py)
+        if cross_proc and not self.tcfg.elastic:
+            raise ValueError(
+                f"checkpoint in {d} was written by {ckpt_procs} process(es) "
+                f"but this trainer runs {eng_procs}; set "
+                "TrainerConfig.elastic=True to restore across host counts "
+                "(losing a host is a rescale event)"
+            )
+        template = self._host_state()
+        if cross_rank or cross_proc:
+            # rank-local state (the error-feedback residuals, whose leading
+            # dim and process layout are topology-bound) cannot be restored
+            # across a topology change: leave it out of the template and
+            # re-init below (documented contract, tests/test_rescale.py +
+            # tests/test_multihost.py)
             template = {k: v for k, v in template.items() if k != "ef"}
-        step, state, meta = restore_checkpoint(d, template, step=step)
-        self.params = state["params"]
-        self.opt_state = state["opt_state"]
-        self.ema_params = state["ema"]
-        self.ef_state = (
-            self.engine.init_ef(self.params) if cross_rank else state["ef"]
+        read_proc = int(getattr(self.engine, "process_index", 0))
+        if cross_proc or read_proc >= ckpt_procs:
+            # replicated state is identical in every writer's shard; shard 0
+            # always exists regardless of either topology
+            read_proc = 0
+        step, state, meta = restore_checkpoint(
+            d, template, step=step, process_index=read_proc,
+            expect_process_count=None if self.tcfg.elastic else eng_procs,
         )
+        self.params = self._place(state["params"])
+        self.opt_state = self._place(state["opt_state"])
+        self.ema_params = self._place(state["ema"])
+        if cross_rank or cross_proc:
+            self.ef_state = self.engine.init_ef(self.params)
+        else:
+            from_host = getattr(self.engine, "ef_from_host", None)
+            self.ef_state = (
+                from_host(state["ef"]) if from_host is not None else state["ef"]
+            )
         self.global_step = step
         st = SamplerState.from_dict(meta["sampler"])
         lineage = [dict(h) for h in meta.get("lineage", [])]
@@ -312,23 +380,27 @@ class Trainer:
         t1 = time.perf_counter()
         self.telemetry_generations.append(self.engine.telemetry)
         self.engine.close()
-        self.tcfg = dataclasses.replace(self.tcfg, n_ranks=n_ranks)
+        new_nodes = self.tcfg.n_nodes
+        if new_nodes:
+            # topology follows the sampler's with_ranks heuristic: keep
+            # ranks_per_node when the new R divides into whole nodes (losing
+            # a host = fewer nodes, same node width), else degrade to flat
+            rpn = old_ranks // new_nodes
+            new_nodes = n_ranks // rpn if rpn and n_ranks % rpn == 0 else None
+        self.tcfg = dataclasses.replace(
+            self.tcfg, n_ranks=n_ranks, n_nodes=new_nodes
+        )
         self.engine = make_engine(
             self.tcfg.engine, self.mace_cfg, self.tcfg, self.optimizer,
             self.tcfg.max_graphs, mesh=mesh,
         )
-        new_mesh = getattr(self.engine, "mesh", None)
-        if new_mesh is not None:
-            # replicated state is committed to the *old* mesh's devices;
-            # re-place it on the new mesh before the first jitted step
-            # (checkpoints stay device-free — logical addressing — so the
-            # restore path needs no equivalent)
-            replicated = jax.sharding.NamedSharding(
-                new_mesh, jax.sharding.PartitionSpec()
-            )
-            self.params, self.opt_state, self.ema_params = jax.device_put(
-                (self.params, self.opt_state, self.ema_params), replicated
-            )
+        # replicated state is committed to the *old* mesh's devices;
+        # re-place it on the new mesh before the first jitted step
+        # (checkpoints stay device-free — logical addressing — so the
+        # restore path re-places through the same hook)
+        self.params, self.opt_state, self.ema_params = self._place(
+            (self.params, self.opt_state, self.ema_params)
+        )
         self.ef_state = self.engine.init_ef(self.params)
         rebuild_s = time.perf_counter() - t1
         self.engine.telemetry.record_rescale(repack_s, rebuild_s)
@@ -394,14 +466,18 @@ class Trainer:
             ) as pipeline:
                 for item in pipeline:
                     batch, host_stats = item.batch
+                    # the step scalar must live on the engine's mesh too: a
+                    # jitted multi-process step rejects inputs committed to
+                    # a single local device (identity for the oracle)
+                    step_arr = self._place(jnp.asarray(self.global_step))
                     self.params, self.opt_state, self.ef_state, metrics = (
                         self.engine.step(
                             self.params, self.opt_state, self.ef_state, batch,
-                            jnp.asarray(self.global_step),
+                            step_arr,
                         )
                     )
                     self.ema_params = self.ema.update(
-                        self.ema_params, self.params, jnp.asarray(self.global_step)
+                        self.ema_params, self.params, step_arr
                     )
                     self.global_step += 1
                     self.sampler_state.cursor += 1

@@ -15,6 +15,8 @@ from repro.core.binpack import (
     create_balanced_batches,
     first_fit_decreasing,
     fixed_count_batches,
+    two_level_batches,
+    two_level_metrics,
 )
 
 
@@ -63,6 +65,70 @@ def test_oversize_graph_rejected():
 def test_empty_input():
     b = create_balanced_batches([], capacity=1024, n_ranks=4)
     assert b.n_bins == 0
+
+
+@given(
+    sizes=sizes_strategy,
+    n_nodes=st.integers(1, 4),
+    ranks_per_node=st.integers(1, 4),
+)
+@settings(max_examples=80, deadline=None)
+def test_two_level_preserves_multiset_and_budgets(sizes, n_nodes, ranks_per_node):
+    """Graphs -> ranks -> nodes composition: for ANY (n_nodes,
+    ranks_per_node) the flat packing holds every item exactly once and no
+    per-device bin exceeds the capacity budget (so no merged per-node bin
+    can exceed capacity * ranks_per_node either)."""
+    cap = 1024
+    tl = two_level_batches(sizes, cap, n_nodes, ranks_per_node)
+    # level structure: node-major flat order, whole steps only
+    assert tl.n_ranks == n_nodes * ranks_per_node
+    assert tl.flat.n_bins % tl.n_ranks == 0
+    # multiset preservation across both levels
+    counts = np.zeros(len(sizes))
+    for items in tl.flat.bins:
+        for i in items:
+            counts[i] += 1
+    assert (counts == 1).all()
+    # per-bin budgets at both levels
+    assert (tl.flat.loads() <= cap).all()
+    assert (tl.node_bins().loads() <= cap * ranks_per_node).all()
+
+
+def test_two_level_node_balance_not_worse_than_random_deal():
+    """Level-2 LPT must leave nodes at least as balanced as the naive
+    contiguous deal of level-1 bins (the whole point of the second level)."""
+    sizes = _table3_like_sizes(seed=11)
+    n_nodes, rpn = 4, 2
+    tl = two_level_batches(sizes, 3072, n_nodes, rpn)
+    m = two_level_metrics(tl)
+    # naive: leave level-1 bins in balance order, deal contiguously to nodes
+    flat = create_balanced_batches(sizes, 3072, n_nodes * rpn)
+    naive_node_loads = flat.loads().reshape(-1, n_nodes, rpn).sum(axis=2)
+    naive_straggler = float(
+        np.mean(
+            naive_node_loads.max(axis=1)
+            / np.maximum(naive_node_loads.mean(axis=1), 1e-12)
+        )
+    )
+    assert m["node"].straggler_ratio <= naive_straggler + 1e-9
+    # and both levels stay near-balanced on the Table-3 mixture
+    assert m["rank"].straggler_ratio < 1.1
+    assert m["node"].straggler_ratio < 1.1
+
+
+def test_two_level_degenerate_single_node_matches_flat():
+    """n_nodes=1 collapses to the plain Algorithm-1 packing."""
+    sizes = _table3_like_sizes(n=500, seed=12)
+    tl = two_level_batches(sizes, 3072, 1, 4)
+    flat = create_balanced_batches(sizes, 3072, 4)
+    assert tl.flat.bins == flat.bins
+
+
+def test_two_level_rejects_bad_topology():
+    with pytest.raises(ValueError):
+        two_level_batches([5, 6], 1024, 0, 2)
+    with pytest.raises(ValueError):
+        two_level_batches([5, 6], 1024, 2, 0)
 
 
 def _table3_like_sizes(n=4000, seed=0):

@@ -1,0 +1,136 @@
+"""Unit tests for the int8-EF collective's axis parameterisation.
+
+``compressed_psum_ef`` takes a single axis name OR a tuple of axes, plus a
+static ``axis_size`` hint.  The load-bearing contract for the hierarchical
+multi-host reduction is the degenerate group: when the "node" axis has size
+1 (single-host pod, or an elastic rescale down to one host) the collective
+must be the *exact identity* — no quantisation, no error-feedback drift —
+because there is no wire hop to compress.  These run on the plain 1-device
+CPU mesh so they stay in the quick tier.
+"""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.train.compression import compressed_psum_ef
+from repro.train.engine import _emulated_hier_compressed_mean
+
+
+def _mesh_1d():
+    return Mesh(np.array(jax.devices()[:1]), ("node",))
+
+
+def _g_e(seed=0, shape=(37,)):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    e = jnp.asarray(rng.normal(scale=1e-3, size=shape).astype(np.float32))
+    return g, e
+
+
+def test_axis_size_one_is_exact_identity():
+    """With the static hint, a size-1 group returns (g, e) bitwise."""
+    mesh = _mesh_1d()
+    g, e = _g_e()
+    f = shard_map(
+        lambda g, e: compressed_psum_ef(g, e, "node", axis_size=1),
+        mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
+    )
+    g_out, e_out = f(g, e)
+    np.testing.assert_array_equal(np.asarray(g_out), np.asarray(g))
+    np.testing.assert_array_equal(np.asarray(e_out), np.asarray(e))
+
+
+def test_axis_size_one_no_ef_drift_over_steps():
+    """Iterating the size-1 collective never accumulates residual: a
+    single-host run is bit-identical to an uncompressed one for any number
+    of steps."""
+    mesh = _mesh_1d()
+    f = jax.jit(shard_map(
+        lambda g, e: compressed_psum_ef(g, e, "node", axis_size=1),
+        mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
+    ))
+    e = jnp.zeros((37,), jnp.float32)
+    for step in range(8):
+        g, _ = _g_e(seed=step)
+        g_out, e = f(g, e)
+        np.testing.assert_array_equal(np.asarray(g_out), np.asarray(g))
+    np.testing.assert_array_equal(np.asarray(e), np.zeros((37,), np.float32))
+
+
+def test_without_hint_size_one_group_still_quantises():
+    """Contrast: no ``axis_size`` hint -> the generic path runs, which
+    quantises even a single-member group.  The result is close (the mean
+    of one rank) but NOT bitwise — exactly the drift the hint removes."""
+    mesh = _mesh_1d()
+    g, e = _g_e(seed=3)
+    f = shard_map(
+        lambda g, e: compressed_psum_ef(g, e, "node"),
+        mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
+    )
+    g_out, e_out = f(g, e)
+    # quantised (g + e): within int8 step size of the true value ...
+    c = np.asarray(g) + np.asarray(e)
+    scale = np.abs(c).max() / 127.0
+    np.testing.assert_allclose(np.asarray(g_out), c, atol=scale * 0.5 + 1e-7)
+    # ... but not the identity, and the residual is live
+    assert not np.array_equal(np.asarray(g_out), np.asarray(g))
+    assert float(np.abs(np.asarray(e_out)).max()) > 0.0
+
+
+def test_tuple_axis_name_accepted():
+    """The axis argument may be a tuple of mesh axes (group = product), as
+    used by the plain path's two-hop pmean; on a (1, 1) mesh both the
+    quantised path and the axis_size=1 short-circuit work."""
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("node", "device"))
+    g, e = _g_e(seed=4)
+    quant = shard_map(
+        lambda g, e: compressed_psum_ef(g, e, ("node", "device")),
+        mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
+    )
+    g_q, _ = quant(g, e)
+    np.testing.assert_allclose(
+        np.asarray(g_q), np.asarray(g) + np.asarray(e), rtol=0, atol=2e-2
+    )
+    ident = shard_map(
+        lambda g, e: compressed_psum_ef(g, e, ("node", "device"), axis_size=1),
+        mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
+    )
+    g_i, e_i = ident(g, e)
+    np.testing.assert_array_equal(np.asarray(g_i), np.asarray(g))
+    np.testing.assert_array_equal(np.asarray(e_i), np.asarray(e))
+
+
+def test_emulated_hier_single_node_matches_identity_semantics():
+    """The sequential oracle's host twin honours the same degenerate-group
+    contract: n_nodes=1 averages over local devices in f32 and leaves the
+    residual untouched (no quantisation site)."""
+    rng = np.random.default_rng(7)
+    stacked_g = jnp.asarray(rng.normal(size=(4, 11)).astype(np.float32))
+    stacked_e = jnp.asarray(rng.normal(size=(1, 11)).astype(np.float32))
+    g_hat, e_out = _emulated_hier_compressed_mean(stacked_g, stacked_e, n_nodes=1)
+    np.testing.assert_array_equal(
+        np.asarray(g_hat), np.asarray(jnp.mean(stacked_g, axis=0))
+    )
+    assert e_out is stacked_e  # untouched, not a quantised copy
+
+
+def test_emulated_hier_two_nodes_quantises_node_means():
+    """n_nodes=2: per-node device means go through shared-scale int8; the
+    returned mean is within one quantisation step and residuals satisfy
+    c = q*scale + e exactly (error feedback bookkeeping)."""
+    rng = np.random.default_rng(9)
+    stacked_g = jnp.asarray(rng.normal(size=(4, 11)).astype(np.float32))
+    stacked_e = jnp.asarray(np.zeros((2, 11), np.float32))
+    g_hat, e_out = _emulated_hier_compressed_mean(stacked_g, stacked_e, n_nodes=2)
+    node_means = np.asarray(stacked_g).reshape(2, 2, 11).mean(axis=1)
+    true_mean = node_means.mean(axis=0)
+    scale = np.abs(node_means).max() / 127.0
+    np.testing.assert_allclose(np.asarray(g_hat), true_mean, atol=scale + 1e-7)
+    # EF identity: with zero incoming residual, c = node_means, so
+    # node_means - new_e = q * scale must sit on the shared int8 grid
+    dequant = node_means - np.asarray(e_out)
+    q = dequant / (np.abs(node_means).max() / 127.0 + 1e-12)
+    np.testing.assert_allclose(q, np.round(q), atol=1e-3)

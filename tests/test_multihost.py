@@ -1,0 +1,466 @@
+"""Pod-scale multi-host tests: bring-up errors, 2D mesh construction, and
+the multi-process equivalence proof.
+
+Three tiers:
+
+* **quick** (no subprocess): actionable-error contracts of
+  ``initialize_distributed`` / ``make_node_device_mesh`` / ``spawn_local``,
+  the sampler's rescale-degrade heuristic, and the committed
+  ``BENCH_multihost.json`` trajectory contract.
+
+* **slow, emulated** (one subprocess, 4 forced devices, ONE jax process):
+  ``MultiHostEngine`` on a (2 nodes x 2 devices) mesh vs the
+  ``SequentialEngine`` hierarchical oracle — plain and int8-EF compressed,
+  inline and prefetched — plus an elastic rescale 4 -> 2 ranks that
+  degrades the node axis 2 -> 1.
+
+* **slow, pod** (one ``spawn_local`` run, 2 REAL jax processes x 2 forced
+  devices each): the acceptance proof.  Workers train plain + compressed
+  for >= 5 steps over the hierarchical reduction with barrier'd
+  checkpoints; the parent compares final params against in-process
+  sequential oracles (plain == hier oracle; compressed == hier oracle
+  bitwise-ish AND close to the single-level compressed oracle), then
+  proves the durability contract: ``process_count`` recorded, restore at
+  the wrong world size refused, elastic restore on one host continues
+  training (losing a host is a rescale event).
+
+Subprocess device meshes belong in the slow sweep (pytest.ini budget); CI
+runs this file in the dedicated ``multihost-smoke`` job.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.mace import MaceConfig
+from repro.data.molecules import SyntheticCFMDataset
+from repro.data.sampler import BalancedBatchSampler, HierarchicalBalancedSampler
+from repro.launch.mesh import make_node_device_mesh
+from repro.launch.multihost import (
+    ENV_COORDINATOR,
+    ENV_NUM_PROCESSES,
+    ENV_PROCESS_ID,
+    coordinator_reachable,
+    initialize_distributed,
+    pick_free_port,
+    spawn_local,
+)
+from repro.train.checkpoint import latest_step, read_meta, restore_checkpoint
+from repro.train.train_loop import Trainer, TrainerConfig
+
+ROOT = Path(__file__).resolve().parent.parent
+
+TINY = MaceConfig(
+    n_species=10, channels=4, hidden_ls=(0, 1), sh_lmax=2, a_ls=(0, 1, 2),
+    correlation=2, n_interactions=2, avg_num_neighbors=8.0, impl="fused",
+)
+# pod geometry shared by workers and oracles: 2 nodes x 2 devices, >= 5
+# steps (48 graphs @ capacity 128 is 3 steps/epoch, so 5 crosses an epoch
+# boundary — the sampler's epoch reshuffle is part of what must agree)
+POD_STEPS = 5
+POD_TCFG = dict(capacity=128, edge_factor=24, max_graphs=16, n_ranks=4)
+POD_DS = dict(n=48, seed=0, max_atoms=24)
+
+
+def _flat_params(tr):
+    return {
+        "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        ): np.asarray(leaf)
+        for path, leaf in jax.tree_util.tree_flatten_with_path(tr.params)[0]
+    }
+
+
+def _max_abs_diff(a, b):
+    keys = [k for k in a if k != "losses"]
+    assert set(keys) == {k for k in b if k != "losses"}
+    return max(float(np.max(np.abs(a[k] - b[k]))) for k in keys)
+
+
+def _assert_params_close(a, b, *, rtol, atol, label):
+    for k in a:
+        if k == "losses":
+            continue
+        np.testing.assert_allclose(
+            a[k], b[k], rtol=rtol, atol=atol, err_msg=f"{label}: {k}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# quick: bring-up error contracts (satellite: actionable --distributed errors)
+# ---------------------------------------------------------------------------
+
+
+def test_initialize_distributed_missing_config_names_the_knobs(monkeypatch):
+    for var in (ENV_COORDINATOR, ENV_NUM_PROCESSES, ENV_PROCESS_ID):
+        monkeypatch.delenv(var, raising=False)
+    with pytest.raises(RuntimeError) as ei:
+        initialize_distributed()
+    msg = str(ei.value)
+    # the error must name every missing piece AND how to provide it
+    for needle in (
+        "coordinator", "num-processes", "process-id",
+        "--coordinator", ENV_COORDINATOR, ENV_NUM_PROCESSES, ENV_PROCESS_ID,
+    ):
+        assert needle in msg, f"error message missing {needle!r}:\n{msg}"
+
+
+def test_initialize_distributed_partial_config_names_missing(monkeypatch):
+    monkeypatch.setenv(ENV_COORDINATOR, "127.0.0.1:1234")
+    monkeypatch.delenv(ENV_NUM_PROCESSES, raising=False)
+    monkeypatch.delenv(ENV_PROCESS_ID, raising=False)
+    with pytest.raises(RuntimeError, match="num-processes"):
+        initialize_distributed()
+
+
+def test_initialize_distributed_unreachable_coordinator_fails_fast():
+    # a freshly-picked free port has no listener; non-zero process_id probes
+    dead = f"127.0.0.1:{pick_free_port()}"
+    with pytest.raises(RuntimeError, match="unreachable"):
+        initialize_distributed(dead, 2, 1, probe_timeout=0.5)
+
+
+def test_coordinator_reachable_rejects_malformed():
+    assert not coordinator_reachable("no-port-here", timeout=0.1)
+    assert not coordinator_reachable("host:notaport", timeout=0.1)
+
+
+def test_spawn_local_validates_nprocs():
+    with pytest.raises(ValueError, match="n_procs"):
+        spawn_local(0, ["true"])
+
+
+def test_make_node_device_mesh_shapes_and_errors():
+    mesh = make_node_device_mesh(1, 1)
+    assert mesh.axis_names == ("node", "device")
+    assert dict(mesh.shape) == {"node": 1, "device": 1}
+    with pytest.raises(ValueError):
+        make_node_device_mesh(0, 1)
+    with pytest.raises(ValueError):
+        make_node_device_mesh(1, 0)
+    # single-process: asking for more devices than exist must say how to
+    # force them, not produce a silent wrong-shape mesh
+    have = len(jax.devices())
+    with pytest.raises(ValueError, match="XLA_FLAGS"):
+        make_node_device_mesh(2, have + 1)
+
+
+def test_hierarchical_sampler_rescale_degrade_heuristic():
+    sizes = np.random.default_rng(0).integers(4, 24, size=64).tolist()
+    s = HierarchicalBalancedSampler(sizes, 128, 2, 2, seed=0)
+    # rank counts divisible by ranks_per_node keep the node axis ...
+    s8 = s.with_ranks(8)
+    assert isinstance(s8, HierarchicalBalancedSampler)
+    assert s8.n_nodes * s8.ranks_per_node == 8
+    s6 = s.with_ranks(6)
+    assert isinstance(s6, HierarchicalBalancedSampler)
+    # ... indivisible ones degrade to the flat single-level sampler
+    s3 = s.with_ranks(3)
+    assert isinstance(s3, BalancedBatchSampler)
+    assert not isinstance(s3, HierarchicalBalancedSampler)
+
+
+def test_bench_multihost_trajectory_contract():
+    """The committed trajectory file parses, carries the schema, and its
+    newest run passes the CI gate's invariants."""
+    from benchmarks.bench_multihost import MAX_TRAJECTORY_RUNS, check_row
+
+    path = ROOT / "BENCH_multihost.json"
+    assert path.exists(), "BENCH_multihost.json missing from repo root"
+    payload = json.loads(path.read_text())
+    assert payload["schema"] == 1
+    assert payload["generated_by"] == "benchmarks/bench_multihost.py"
+    runs = payload["runs"]
+    assert 1 <= len(runs) <= MAX_TRAJECTORY_RUNS
+    last = runs[-1]
+    for key in (
+        "n_nodes", "devices_per_node", "steps",
+        "straggler_measured", "straggler_packed", "wire",
+    ):
+        assert key in last, key
+    assert last["wire"]["internode_savings_ratio"] >= 1.8
+    assert check_row(last) == []
+
+
+def test_bench_multihost_trajectory_append_and_cap(tmp_path):
+    from benchmarks.bench_multihost import MAX_TRAJECTORY_RUNS, write_bench_json
+
+    p = tmp_path / "t.json"
+    for i in range(MAX_TRAJECTORY_RUNS + 5):
+        out = write_bench_json({"i": i}, p)
+    assert len(out["runs"]) == MAX_TRAJECTORY_RUNS
+    assert out["runs"][-1]["i"] == MAX_TRAJECTORY_RUNS + 4  # newest last
+    # corrupt file -> fresh trajectory, no crash
+    p.write_text("not json")
+    out = write_bench_json({"i": -1}, p)
+    assert [r["i"] for r in out["runs"]] == [-1]
+
+
+# ---------------------------------------------------------------------------
+# slow: emulated pod in ONE jax process (4 forced devices, 2D mesh)
+# ---------------------------------------------------------------------------
+
+EMULATED_SCRIPT = r"""
+import os, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import numpy as np, jax
+from repro.core.mace import MaceConfig
+from repro.data.molecules import SyntheticCFMDataset
+from repro.train.train_loop import Trainer, TrainerConfig
+
+TINY = MaceConfig(n_species=10, channels=4, hidden_ls=(0, 1), sh_lmax=2,
+                  a_ls=(0, 1, 2), correlation=2, n_interactions=2,
+                  avg_num_neighbors=8.0, impl="fused")
+KW = dict(capacity=128, edge_factor=24, max_graphs=16, n_ranks=4)
+ds = SyntheticCFMDataset(48, seed=0, max_atoms=24)
+
+def run(engine, compress, n_nodes, prefetch=0, rescale_at=None):
+    tcfg = TrainerConfig(engine=engine, compress_grads=compress,
+                         n_nodes=n_nodes, prefetch=prefetch, elastic=True,
+                         **KW)
+    tr = Trainer(TINY, tcfg, ds, seed=0)
+    if rescale_at is not None:
+        tr.rescale_schedule = dict([rescale_at])
+    out = tr.train(n_epochs=10**9, max_steps=5)
+    flat = {"/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                     for p in path): np.asarray(leaf)
+            for path, leaf in jax.tree_util.tree_flatten_with_path(tr.params)[0]}
+    return tr, flat, [h["loss"] for h in out["history"]]
+
+report = {"devices": len(jax.devices())}
+for compress in (False, True):
+    _, oracle, olosses = run("sequential", compress, 2)
+    for prefetch in (0, 2):
+        tr, got, losses = run("multihost", compress, 2, prefetch=prefetch)
+        np.testing.assert_allclose(losses, olosses, rtol=1e-4)
+        for k in oracle:
+            np.testing.assert_allclose(
+                got[k], oracle[k], rtol=1e-4, atol=2e-5,
+                err_msg=f"compress={compress} prefetch={prefetch}: {k}")
+        report[f"c{int(compress)}_p{prefetch}"] = len(losses)
+
+# elastic rescale 4 -> 2 ranks mid-run: the node axis must degrade 2 -> 1
+# (with ranks_per_node=2, 2 ranks is one node) and training must continue
+tr, _, losses = run("multihost", True, 2, rescale_at=(3, 2))
+assert tr.engine.n_ranks == 2, tr.engine.n_ranks
+assert getattr(tr.sampler, "n_nodes", 1) == 1, "node axis did not degrade"
+assert len(losses) == 5 and np.all(np.isfinite(losses))
+report["rescale"] = {"final_ranks": tr.engine.n_ranks,
+                     "mesh": dict(tr.engine.mesh.shape)}
+print("RESULT " + json.dumps(report))
+"""
+
+
+@pytest.mark.slow
+def test_multihost_engine_emulated_equivalence_and_rescale():
+    """Single-process 4-device proof: MultiHostEngine's hierarchical
+    reduction (2 nodes x 2 devices) == SequentialEngine hierarchical
+    oracle, plain + compressed, inline + prefetch=2; then a mid-run
+    elastic rescale 4 -> 2 degrades the node axis and keeps training."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", EMULATED_SCRIPT],
+        capture_output=True, text=True, timeout=900, env=env,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    out = json.loads(line[len("RESULT "):])
+    assert out["devices"] == 4
+    assert all(out[f"c{c}_p{p}"] == 5 for c in (0, 1) for p in (0, 2))
+    assert out["rescale"]["final_ranks"] == 2
+    assert out["rescale"]["mesh"] == {"node": 1, "device": 2}
+
+
+# ---------------------------------------------------------------------------
+# slow: the REAL pod — 2 jax processes x 2 forced devices via spawn_local
+# ---------------------------------------------------------------------------
+
+POD_WORKER = textwrap.dedent("""\
+    import os, sys
+    sys.path.insert(0, sys.argv[2])
+    from repro.launch.multihost import initialize_distributed
+    initialize_distributed()
+    import numpy as np, jax
+    from repro.core.mace import MaceConfig
+    from repro.data.molecules import SyntheticCFMDataset
+    from repro.train.train_loop import Trainer, TrainerConfig
+
+    out_dir = sys.argv[1]
+    TINY = MaceConfig(n_species=10, channels=4, hidden_ls=(0, 1), sh_lmax=2,
+                      a_ls=(0, 1, 2), correlation=2, n_interactions=2,
+                      avg_num_neighbors=8.0, impl="fused")
+    ds = SyntheticCFMDataset(48, seed=0, max_atoms=24)
+    assert jax.process_count() == 2 and len(jax.devices()) == 4
+    for tag, compress in (("plain", False), ("comp", True)):
+        tcfg = TrainerConfig(capacity=128, edge_factor=24, max_graphs=16,
+                             n_ranks=4, n_nodes=2, engine="multihost",
+                             compress_grads=compress,
+                             ckpt_dir=os.path.join(out_dir, f"ckpt_{tag}"),
+                             ckpt_every=3)
+        tr = Trainer(TINY, tcfg, ds, seed=0)
+        out = tr.train(n_epochs=10**9, max_steps=5)
+        if jax.process_index() == 0:
+            flat = {"/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                             for p in path): np.asarray(leaf)
+                    for path, leaf in
+                    jax.tree_util.tree_flatten_with_path(tr.params)[0]}
+            np.savez(os.path.join(out_dir, f"params_{tag}.npz"), **flat,
+                     losses=np.asarray([h["loss"] for h in out["history"]]))
+    print(f"proc {jax.process_index()} done", flush=True)
+""")
+
+
+@pytest.fixture(scope="module")
+def pod_run(tmp_path_factory):
+    """ONE real 2-process x 2-device training run, shared by every pod
+    test: plain + compressed, >= 5 steps each, barrier'd checkpoints."""
+    base = tmp_path_factory.mktemp("pod")
+    out_dir, log_dir = base / "out", base / "logs"
+    out_dir.mkdir()
+    worker = base / "worker.py"
+    worker.write_text(POD_WORKER)
+    res = spawn_local(
+        2, [sys.executable, str(worker), str(out_dir), str(ROOT / "src")],
+        devices_per_proc=2, log_dir=str(log_dir),
+    )
+    codes = res.wait(timeout=420)
+    if codes != [0, 0]:
+        logs = "\n".join(
+            f"--- proc{i} ---\n" + (log_dir / f"proc{i}.log").read_text()[-3000:]
+            for i in range(2)
+        )
+        pytest.fail(f"pod workers exited {codes}\n{logs}")
+    return {
+        "out": out_dir,
+        "plain": dict(np.load(out_dir / "params_plain.npz")),
+        "comp": dict(np.load(out_dir / "params_comp.npz")),
+    }
+
+
+def _oracle(compress, *, n_nodes=2, flat_sampler=False, ckpt_dir=None,
+            elastic=False, engine="sequential", n_ranks=4):
+    tcfg = TrainerConfig(
+        engine=engine, compress_grads=compress, n_nodes=n_nodes,
+        elastic=elastic, ckpt_dir=ckpt_dir, ckpt_every=0,
+        **{**POD_TCFG, "n_ranks": n_ranks},
+    )
+    ds = SyntheticCFMDataset(POD_DS["n"], seed=POD_DS["seed"],
+                             max_atoms=POD_DS["max_atoms"])
+    tr = Trainer(TINY, tcfg, ds, seed=0)
+    if flat_sampler:
+        # single-level compressed oracle: SAME hierarchical bin stream, but
+        # one flat quantisation group over all 4 ranks (n_nodes=None above
+        # keeps the engine's reduction single-level)
+        tr.sampler = HierarchicalBalancedSampler(
+            ds.sizes, POD_TCFG["capacity"], 2, 2, seed=0
+        )
+    return tr
+
+
+@pytest.mark.slow
+def test_pod_plain_matches_hierarchical_sequential_oracle(pod_run):
+    """2 real processes, plain two-hop pmean == the sequential oracle's
+    hierarchical emulation.  Tolerance is float-reassociation noise
+    amplified through Adam over 5 steps (calibrated, not bitwise)."""
+    tr = _oracle(False)
+    out = tr.train(n_epochs=10**9, max_steps=POD_STEPS)
+    oracle = _flat_params(tr)
+    got = pod_run["plain"]
+    assert len(got["losses"]) == POD_STEPS
+    np.testing.assert_allclose(
+        got["losses"], [h["loss"] for h in out["history"]], rtol=1e-3
+    )
+    _assert_params_close(got, oracle, rtol=2e-3, atol=5e-4, label="plain")
+
+
+@pytest.mark.slow
+def test_pod_compressed_matches_hierarchical_sequential_oracle(pod_run):
+    """int8-EF path: quantisation snaps both runs onto the same int8 grid,
+    so the match with the hierarchical oracle is near-bitwise."""
+    tr = _oracle(True)
+    out = tr.train(n_epochs=10**9, max_steps=POD_STEPS)
+    oracle = _flat_params(tr)
+    got = pod_run["comp"]
+    assert len(got["losses"]) == POD_STEPS
+    np.testing.assert_allclose(
+        got["losses"], [h["loss"] for h in out["history"]], rtol=1e-4
+    )
+    _assert_params_close(got, oracle, rtol=1e-4, atol=2e-5, label="comp")
+
+
+@pytest.mark.slow
+def test_pod_compressed_close_to_single_level_oracle(pod_run):
+    """Hierarchical (intra-node mean, inter-node int8-EF over 2 groups)
+    vs single-level int8-EF over all 4 ranks: different quantisation
+    grouping, same algorithm — the gap must stay within the scale of
+    compression-induced drift itself (calibrated)."""
+    tr = _oracle(True, n_nodes=None, flat_sampler=True)
+    tr.train(n_epochs=10**9, max_steps=POD_STEPS)
+    oracle = _flat_params(tr)
+    got = pod_run["comp"]
+    assert _max_abs_diff(got, oracle) < 5e-2
+    _assert_params_close(got, oracle, rtol=0.0, atol=5e-2, label="comp-vs-1lvl")
+
+
+@pytest.mark.slow
+def test_pod_checkpoint_records_world_size(pod_run):
+    """Barrier'd multi-process commit: one committed step, meta carries the
+    writer topology, and BOTH process shards are present."""
+    d = str(pod_run["out"] / "ckpt_comp")
+    step = latest_step(d)
+    assert step is not None and step >= 3
+    step, meta = read_meta(d)
+    assert meta["process_count"] == 2
+    assert meta["n_ranks"] == 4
+    shard_dir = Path(d) / f"step_{step:010d}"
+    assert (shard_dir / "arrays.0.npz").exists()
+    assert (shard_dir / "arrays.1.npz").exists()
+    assert (shard_dir / "COMMITTED").exists()
+    # no stale staging left behind after the commit barrier
+    assert not list(Path(d).glob("tmp.*"))
+
+
+@pytest.mark.slow
+def test_pod_restore_refuses_wrong_world_size(pod_run):
+    d = str(pod_run["out"] / "ckpt_comp")
+    with pytest.raises(ValueError, match="process"):
+        restore_checkpoint(d, {"x": np.zeros(1)}, expect_process_count=4)
+
+
+@pytest.mark.slow
+def test_pod_nonelastic_cross_process_restore_raises(pod_run):
+    """A single-process reader of a 2-process checkpoint must refuse
+    unless elastic: losing a host is a rescale event, not a silent read."""
+    tr = _oracle(False, ckpt_dir=str(pod_run["out"] / "ckpt_plain"))
+    with pytest.raises(ValueError, match="rescale"):
+        tr.maybe_restore()
+
+
+@pytest.mark.slow
+def test_pod_elastic_restore_on_one_host_continues(pod_run):
+    """Elastic composition: restore the 2-process pod's checkpoint on ONE
+    process (sequential emulation, same 4 ranks), continue to step 5, and
+    land where the uninterrupted hierarchical oracle lands."""
+    tr = _oracle(False, ckpt_dir=str(pod_run["out"] / "ckpt_plain"),
+                 elastic=True)
+    assert tr.maybe_restore()
+    assert tr.global_step >= 3
+    tr.train(n_epochs=10**9, max_steps=POD_STEPS)
+    assert tr.global_step == POD_STEPS
+    restored = _flat_params(tr)
+    oracle_tr = _oracle(False)
+    oracle_tr.train(n_epochs=10**9, max_steps=POD_STEPS)
+    _assert_params_close(
+        restored, _flat_params(oracle_tr), rtol=2e-3, atol=5e-4,
+        label="elastic-restore",
+    )
