@@ -185,6 +185,9 @@ def time_impl(kind, impl, *, grad=False, repeats=5, N=None, E=None, k=None,
 
     k = int(k if k is not None else 8)
     caps = capabilities(kind).get(impl, {})
+    # recorded in every row so the autotuner keys measured evidence by
+    # precision (a bf16 row must never answer a fp32 query)
+    precision = caps.get("precision", "fp32")
 
     if kind in ("symcon", "symmetric_contraction"):
         N = int(N if N is not None else 64)
@@ -204,8 +207,11 @@ def time_impl(kind, impl, *, grad=False, repeats=5, N=None, E=None, k=None,
         t_fwd, t_both = _time_pair(
             partial(fwd, A, W), partial(vg, A, W) if vg else None, repeats
         )
-        return _rows_for("symcon", impl, {"N": N, "k": k, "nu": int(nu)},
-                         t_fwd, t_both)
+        return _rows_for(
+            "symcon", impl,
+            {"N": N, "k": k, "nu": int(nu), "precision": precision},
+            t_fwd, t_both,
+        )
 
     if kind in ("channelwise_tp", "tp"):
         E = int(E if E is not None else 256)
@@ -226,8 +232,10 @@ def time_impl(kind, impl, *, grad=False, repeats=5, N=None, E=None, k=None,
             partial(fwd, Y, h, R), partial(vg, Y, h, R) if vg else None,
             repeats,
         )
-        return _rows_for("channelwise_tp", impl, {"E": E, "k": k},
-                         t_fwd, t_both)
+        return _rows_for(
+            "channelwise_tp", impl, {"E": E, "k": k, "precision": precision},
+            t_fwd, t_both,
+        )
 
     if kind in ("interaction", "tp_scatter"):
         E = int(E if E is not None else 256)
@@ -242,7 +250,8 @@ def time_impl(kind, impl, *, grad=False, repeats=5, N=None, E=None, k=None,
         args = interaction_inputs(E, N, k, base_spec)
         senders, receivers, edge_mask = args[3], args[4], args[5]
         kwargs = {}
-        params = {"E": E, "N": N, "k": k, "blocked": blocked}
+        params = {"E": E, "N": N, "k": k, "blocked": blocked,
+                  "precision": precision}
         if blocked:
             b = block_edges(
                 np.asarray(receivers), np.asarray(edge_mask), N,
@@ -407,6 +416,10 @@ def main(argv=()):
                          "(default: BENCH_kernels.json at the repo root)")
     ap.add_argument("--no-json", action="store_true",
                     help="skip writing the JSON artifact")
+    ap.add_argument("--precisions", default="",
+                    help="comma-separated reduced precisions (bf16,fp8): "
+                         "additionally bench the pallas_<p> kernel variants "
+                         "(reduced operand compute, fp32 accumulation)")
     ap.add_argument("--repeats", type=int, default=5)
     ap.add_argument("--max-runs", type=int, default=MAX_TRAJECTORY_RUNS,
                     help="total run cap for the JSON trajectory")
@@ -460,6 +473,8 @@ def main(argv=()):
             # full-size interpret-mode pallas timings are meaningless and
             # slow; the CI tier measures pallas at --quick sizes instead
             impls = ("ref", "fused")
+    for prec in (s for s in args.precisions.split(",") if s):
+        impls = impls + (f"pallas_{prec}",)
     matrix = bench_matrix(grad=args.grad, quick=args.quick, impls=impls,
                           repeats=args.repeats)
     for r in matrix:

@@ -93,6 +93,12 @@ def main():
                          "'auto' resolves impl + tile geometry + bwd from the "
                          "tuning table for this run's shape bucket (pallas "
                          "consumes pre-blocked edges from collation)")
+    ap.add_argument("--precision", default=None,
+                    choices=["fp32", "bf16", "fp8"],
+                    help="kernel operand precision: rewrites pallas-family "
+                         "impls to their reduced-precision variants "
+                         "(accumulation stays fp32); refuses impls without "
+                         "a variant rather than silently running fp32")
     ap.add_argument("--engine", choices=["sequential", "shard_map", "multihost"],
                     default="sequential")
     ap.add_argument("--n-ranks", type=int, default=0,
@@ -156,6 +162,7 @@ def main():
         engine=args.engine,
         lr=5e-3, ema_decay=0.99, ckpt_dir=args.ckpt_dir, ckpt_every=50,
         compress_grads=args.compress_grads, prefetch=args.prefetch,
+        precision=args.precision,
         elastic=args.elastic or bool(schedule),
     )
     if schedule:
@@ -169,9 +176,10 @@ def main():
         f"params={param_count(tr.params):,} graphs={len(ds)} "
         f"steps/epoch={tr.sampler.steps_per_epoch()} sampler={args.sampler} "
         f"engine={args.engine} ranks={tcfg.n_ranks} prefetch={tcfg.prefetch} "
-        f"impl={tr.mace_cfg.impl} "
+        f"impl={tr.mace_cfg.symcon_impl_name} "
         f"interaction={tr.mace_cfg.interaction_impl_name} "
-        f"bwd={tr.mace_cfg.interaction_bwd_impl}"
+        f"bwd={tr.mace_cfg.interaction_bwd_impl} "
+        f"precision={tr.mace_cfg.precision}"
     )
     for d in tr.autotune_decisions.values():
         print(f"autotune: {d.describe()}")

@@ -69,12 +69,20 @@ class InteractionSpec:
     # (the capability fallback, and the second-order-autodiff escape hatch
     # on compiled backends).  Impls without a custom backward ignore it.
     bwd_impl: str = "pallas"
+    # compute precision of the pallas kernels (fwd + hand-written bwd):
+    # reduced precisions round operand tile loads, accumulation stays fp32
+    # (repro.kernels.precision).  ref/fused impls ignore it (always fp32);
+    # the second-order XLA twins stay fp32 at every setting.
+    precision: str = "fp32"
 
     def __post_init__(self):
         if self.bwd_impl not in ("pallas", "xla"):
             raise ValueError(
                 f"bwd_impl must be 'pallas' or 'xla', got {self.bwd_impl!r}"
             )
+        from repro.kernels.precision import check_precision
+
+        check_precision(self.precision)
 
 
 def resolve_interaction(name: str, spec: InteractionSpec):

@@ -104,7 +104,20 @@ class MaceConfig:
     # atom rows per kernel tile; must match BinShape.block_n when blocking
     # metadata is consumed (data.blocking.DEFAULT_BLOCK_N)
     interaction_block_n: int = 32
+    # compute precision of the hot-path kernels ("fp32" | "bf16" | "fp8"):
+    # reduced precisions steer pallas-family impl names to their
+    # ``pallas_<precision>`` registry variants (operand tile loads rounded,
+    # fp32 accumulation — ``repro.kernels.precision``) and ride the
+    # InteractionSpec into the fused kernels.  ref/fused impls have no
+    # reduced-precision variant: asking for one raises at resolve time
+    # rather than silently running fp32.
+    precision: str = "fp32"
     dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        from repro.kernels.precision import check_precision
+
+        check_precision(self.precision)
 
     @property
     def hidden_spec(self) -> LSpec:
@@ -129,14 +142,41 @@ class MaceConfig:
     def symcon_spec(self) -> SymConSpec:
         return SymConSpec(self.a_spec, self.hidden_spec, self.correlation)
 
+    def _with_precision(self, name: str) -> str:
+        """Map an impl name to its ``self.precision`` variant.
+
+        fp32 (or the ``"auto"`` sentinel, resolved later by the build path)
+        leaves the name alone; a reduced precision rewrites ``"pallas"`` to
+        ``"pallas_<precision>"``, accepts a name already carrying the right
+        suffix, and refuses any impl without a reduced-precision variant —
+        never silently running fp32 when the config asked for less.
+        """
+        if self.precision == "fp32" or name == "auto":
+            return name
+        if name.endswith("_" + self.precision):
+            return name
+        if name == "pallas":
+            return f"pallas_{self.precision}"
+        raise ValueError(
+            f"impl {name!r} has no {self.precision!r} variant; reduced "
+            "precision requires the pallas kernel family "
+            f"(got precision={self.precision!r})"
+        )
+
+    @property
+    def symcon_impl_name(self) -> str:
+        return self._with_precision(self.impl)
+
     @property
     def interaction_impl_name(self) -> str:
-        return self.impl if self.interaction_impl == "auto" else self.interaction_impl
+        name = self.impl if self.interaction_impl == "auto" else self.interaction_impl
+        return self._with_precision(name)
 
     def interaction_spec_at(self, layer: int) -> InteractionSpec:
         return InteractionSpec(
             self.tp_spec_at(layer), self.avg_num_neighbors,
             self.interaction_block_n, self.interaction_bwd_impl,
+            self.precision,
         )
 
 
@@ -250,7 +290,7 @@ def mace_energy(
         int_fn = resolve_interaction(
             cfg.interaction_impl_name, cfg.interaction_spec_at(t)
         )
-        sc_fn = resolve("symcon", cfg.impl, cfg.symcon_spec())
+        sc_fn = resolve("symcon", cfg.symcon_impl_name, cfg.symcon_spec())
 
         h_up = _apply_linear_per_l(layer["lin_up"], h, h_spec)
         R = apply_mlp(layer["radial"], radial).reshape(-1, tp_spec.n_paths, k)

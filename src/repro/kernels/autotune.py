@@ -36,7 +36,16 @@ Tuning-table schema (``schema`` = 1)::
        {"kind": "interaction", "platform": "tpu", "mode": "fwd_bwd",
         "bucket": "E4096-N512-k32", "dims": {"E": 4096, "N": 512, "k": 32},
         "impl": "pallas", "block_n": 32, "block_e": 128,
-        "bwd_impl": "pallas", "source": "measured", "score_us": 812.4}]}
+        "bwd_impl": "pallas", "precision": "fp32",
+        "source": "measured", "score_us": 812.4}]}
+
+Decisions are keyed by **precision** ("fp32" | "bf16" | "fp8"): entries and
+trajectory rows carry a ``precision`` field (legacy rows/entries without
+one normalise to ``"fp32"``), and every lookup/scoring path filters on it —
+a reduced-precision measured row can never answer a fp32 query, and vice
+versa (bf16 rows never shadow fp32 rows in the nearest-bucket match).
+``build_table`` emits fp32 + bf16 entries (``TABLE_PRECISIONS``); fp8 is
+resolved on the fly via the roofline fallback.
 
 Shape bucketing (the near-match rule): every dim (N/E/k) is rounded up to
 the next power of two; a query matches the entry (or trajectory row) with
@@ -137,10 +146,15 @@ class Decision:
     block_n: Optional[int] = None     # set iff the impl consumes blocking
     block_e: Optional[int] = None
     bwd_impl: Optional[str] = None    # set iff the impl has a custom bwd
+    # compute precision this decision was scored at; fp32 rows and
+    # reduced-precision rows never answer each other's queries
+    precision: str = "fp32"
 
     def describe(self) -> str:
         bits = [f"{self.kind}[{self.bucket},{self.platform},{self.mode}]",
                 f"-> {self.impl}"]
+        if self.precision != "fp32":
+            bits.append(f"@{self.precision}")
         if self.block_n is not None:
             bits.append(f"block {self.block_n}x{self.block_e}")
         if self.bwd_impl is not None:
@@ -194,15 +208,26 @@ def bucket_distance(a: Dict[str, int], b: Dict[str, int]) -> float:
 # ---------------------------------------------------------------------------
 
 
-def viable_candidates(kind: str, platform: str, mode: str) -> List[str]:
-    """Registry-pruned candidate impls: natively compiled on ``platform``
-    (interpret-mode bindings are correct but never performance candidates)
-    and — for ``fwd_bwd`` — differentiable there (a compiled pallas forward
-    without a hand-written backward cannot train)."""
+def viable_candidates(
+    kind: str, platform: str, mode: str, precision: str = "fp32"
+) -> List[str]:
+    """Registry-pruned candidate impls at ``precision``: natively compiled
+    on ``platform`` (interpret-mode bindings are correct but never
+    performance candidates) and — for ``fwd_bwd`` — differentiable there (a
+    compiled pallas forward without a hand-written backward cannot train).
+
+    Reduced precisions relax ``compiled_only``: asking for bf16/fp8 is an
+    explicit accuracy trade the user opted into, so the (interpret-mode on
+    CPU) precision-matching pallas variants stay selectable rather than the
+    query failing outright — but an impl of the *wrong* precision is never
+    a candidate."""
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
     out = []
-    for name in registry.available(kind, platform=platform, compiled_only=True):
+    for name in registry.available(
+        kind, platform=platform, compiled_only=(precision == "fp32"),
+        precision=precision,
+    ):
         impl = registry.get_impl(kind, name)
         if mode == "fwd_bwd" and impl.uses_pallas and not impl.has_custom_bwd:
             continue
@@ -210,9 +235,20 @@ def viable_candidates(kind: str, platform: str, mode: str) -> List[str]:
     return out
 
 
+def _base_impl(name: str) -> str:
+    """Strip a ``_bf16``/``_fp8`` variant suffix: precision variants share
+    the base impl's cost structure (the roofline model and the preference
+    order are precision-blind — tile traffic is modelled at fp32 widths,
+    which only biases *within* a precision, never across)."""
+    for prec in ("bf16", "fp8"):
+        if name.endswith("_" + prec):
+            return name[: -len(prec) - 1]
+    return name
+
+
 def _pref_index(name: str) -> int:
     try:
-        return PREFERENCE.index(name)
+        return PREFERENCE.index(_base_impl(name))
     except ValueError:
         return len(PREFERENCE)
 
@@ -260,10 +296,14 @@ def load_trajectory(path: Optional[Path] = None) -> List[Dict]:
 
 
 def _row_config_key(kind: str, row: Dict) -> Tuple:
-    """(impl, block_n, block_e, bwd_impl) identity for a trajectory row,
-    normalising legacy rows: a ``blocked`` interaction row without explicit
-    tile sizes ran the defaults; a pallas-family row without an explicit
-    ``bwd_impl`` ran the hand-written backward."""
+    """(impl, block_n, block_e, bwd_impl, precision) identity for a
+    trajectory row, normalising legacy rows: a ``blocked`` interaction row
+    without explicit tile sizes ran the defaults; a pallas-family row
+    without an explicit ``bwd_impl`` ran the hand-written backward; a row
+    without a ``precision`` param ran at the impl's registered precision
+    (fp32 for anything predating the precision variants) — so legacy fp32
+    rows can never be claimed by a reduced-precision query or vice
+    versa."""
     p = row.get("params", {})
     impl = row.get("impl")
     bn = be = None
@@ -279,7 +319,8 @@ def _row_config_key(kind: str, row: Dict) -> Tuple:
     bwd = None
     if reg is not None and reg.has_custom_bwd and row.get("mode") == "fwd_bwd":
         bwd = p.get("bwd_impl", "pallas")
-    return (impl, bn, be, bwd)
+    prec = p.get("precision") or (reg.precision if reg is not None else "fp32")
+    return (impl, bn, be, bwd, prec)
 
 
 def measured_scores(
@@ -291,9 +332,9 @@ def measured_scores(
     *,
     max_dist: float = NEAR_MATCH_MAX_DIST,
 ) -> Dict[Tuple, Tuple[float, float]]:
-    """Newest measured ``{(impl, block_n, block_e, bwd_impl): (us, dist)}``
-    per candidate config on ``platform``, nearest shape bucket winning
-    (newest row wins ties at equal distance)."""
+    """Newest measured ``{(impl, block_n, block_e, bwd_impl, precision):
+    (us, dist)}`` per candidate config on ``platform``, nearest shape
+    bucket winning (newest row wins ties at equal distance)."""
     kind = registry.canonical_kind(kind)
     query = bucket_dims(kind, params)
     best: Dict[Tuple, Tuple[float, float]] = {}
@@ -339,7 +380,8 @@ def roofline_score_us(
     shape = dict(params)
     if block_n is not None:
         shape["block_n"], shape["block_e"] = block_n, block_e
-    cell = kernel_cell_cost(kind, impl, shape, mode=mode, spec=spec)
+    # precision variants share the base impl's cost cells (see _base_impl)
+    cell = kernel_cell_cost(kind, _base_impl(impl), shape, mode=mode, spec=spec)
     peak_f, peak_b = ROOFLINE_PEAKS.get(platform, ROOFLINE_PEAKS["cpu"])
     bytes_ = cell["hbm_bytes"]
     if bwd_impl == "xla":
@@ -361,34 +403,38 @@ def candidate_scores(
     runs: Optional[Sequence[Dict]] = None,
     block_candidates: Optional[Sequence[Tuple[int, int]]] = None,
     spec: Any = None,
+    precision: str = "fp32",
 ) -> Tuple[Dict[Tuple, float], str]:
-    """Score every pruned candidate config.  Returns ``({(impl, bn, be,
-    bwd): us}, source)``: when *any* candidate config has a measured row
-    within the near-match distance, measurement is authoritative and
-    unmeasured configs are dropped (never mix measured and modelled
-    numbers); otherwise every config is roofline-scored."""
+    """Score every pruned candidate config at ``precision``.  Returns
+    ``({(impl, bn, be, bwd, precision): us}, source)``: when *any*
+    candidate config has a measured row within the near-match distance,
+    measurement is authoritative and unmeasured configs are dropped (never
+    mix measured and modelled numbers); otherwise every config is
+    roofline-scored.  Measured rows of a different precision are excluded
+    by the config key itself."""
     kind = registry.canonical_kind(kind)
-    names = viable_candidates(kind, platform, mode)
+    names = viable_candidates(kind, platform, mode, precision)
     if not names:
         raise LookupError(
-            f"no compiled candidate impls for {kind!r} on {platform!r} "
-            f"(mode={mode}); registry: {registry.available(kind)}"
+            f"no candidate impls for {kind!r} on {platform!r} "
+            f"(mode={mode}, precision={precision}); "
+            f"registry: {registry.available(kind)}"
         )
     configs: List[Tuple] = []
     for name in names:
         for bn, be in _block_candidates_for(kind, name, params, block_candidates):
             for bwd in _bwd_candidates_for(kind, name, mode):
-                configs.append((name, bn, be, bwd))
+                configs.append((name, bn, be, bwd, precision))
     measured = measured_scores(runs or [], kind, platform, mode, params)
     picked = {c: measured[c][0] for c in configs if c in measured}
     if picked:
         return picked, "measured"
     return {
-        (name, bn, be, bwd): roofline_score_us(
+        (name, bn, be, bwd, prec): roofline_score_us(
             kind, name, params, platform, mode,
             block_n=bn, block_e=be, bwd_impl=bwd, spec=spec,
         )
-        for (name, bn, be, bwd) in configs
+        for (name, bn, be, bwd, prec) in configs
     }, "roofline"
 
 
@@ -401,7 +447,7 @@ def _pick(scored: Dict[Tuple, float]) -> Tuple[Tuple, float]:
     from repro.data.blocking import DEFAULT_BLOCK_E, DEFAULT_BLOCK_N
 
     def order(cfg):
-        name, bn, be, bwd = cfg
+        name, bn, be, bwd, _prec = cfg
         return (
             _pref_index(name), name,
             (bn, be) != (None, None) and (bn, be) != (DEFAULT_BLOCK_N,
@@ -422,24 +468,33 @@ def decide(
     runs: Optional[Sequence[Dict]] = None,
     block_candidates: Optional[Sequence[Tuple[int, int]]] = None,
     spec: Any = None,
+    precision: str = "fp32",
 ) -> Decision:
-    """Full decision for one (kind, shape, platform, mode): measured rows
-    when any exist in-bucket, analytic roofline ranking otherwise."""
+    """Full decision for one (kind, shape, platform, mode, precision):
+    measured rows when any exist in-bucket, analytic roofline ranking
+    otherwise."""
     scored, source = candidate_scores(
         kind, params, platform, mode,
         runs=runs, block_candidates=block_candidates, spec=spec,
+        precision=precision,
     )
-    (name, bn, be, bwd), us = _pick(scored)
+    (name, bn, be, bwd, prec), us = _pick(scored)
     return Decision(
         kind=registry.canonical_kind(kind), impl=name, platform=platform,
         mode=mode, bucket=bucket_key(kind, params), source=source,
         score_us=float(us), block_n=bn, block_e=be, bwd_impl=bwd,
+        precision=prec,
     )
 
 
 # ---------------------------------------------------------------------------
 # the committed tuning table
 # ---------------------------------------------------------------------------
+
+# precisions the committed table covers per bucket; fp8 deliberately stays
+# off-table (roofline-resolved on the fly — the fp8 path is an emulation
+# contract, not a deployment default worth a committed row)
+TABLE_PRECISIONS = ("fp32", "bf16")
 
 # canonical shapes every table covers even with an empty trajectory: the
 # bench_kernels quick + full tiers plus the trainer-default bin geometry
@@ -481,7 +536,7 @@ def entry_from_decision(d: Decision, dims: Dict[str, int]) -> Dict[str, Any]:
         "kind": d.kind, "platform": d.platform, "mode": d.mode,
         "bucket": d.bucket, "dims": {k: int(v) for k, v in dims.items()},
         "impl": d.impl, "block_n": d.block_n, "block_e": d.block_e,
-        "bwd_impl": d.bwd_impl, "source": d.source,
+        "bwd_impl": d.bwd_impl, "precision": d.precision, "source": d.source,
         "score_us": round(d.score_us, 2) if d.score_us is not None else None,
     }
 
@@ -511,9 +566,19 @@ def build_table(
             for bkey in sorted(shapes):
                 dims = shapes[bkey]
                 for mode in MODES:
-                    d = decide(kind, dims, platform, mode, runs=runs)
-                    entries.append(entry_from_decision(d, bucket_dims(kind, dims)))
-    entries.sort(key=lambda e: (e["platform"], e["kind"], e["mode"], e["bucket"]))
+                    for precision in TABLE_PRECISIONS:
+                        try:
+                            d = decide(kind, dims, platform, mode, runs=runs,
+                                       precision=precision)
+                        except LookupError:
+                            if precision == "fp32":
+                                raise
+                            continue  # no variant at this precision here
+                        entries.append(
+                            entry_from_decision(d, bucket_dims(kind, dims))
+                        )
+    entries.sort(key=lambda e: (e["platform"], e["kind"], e["mode"],
+                                e.get("precision", "fp32"), e["bucket"]))
     return {
         "schema": SCHEMA,
         "generated_by": "repro.kernels.autotune",
@@ -558,11 +623,17 @@ def lookup(
     platform: str,
     mode: str,
     *,
+    precision: str = "fp32",
     max_dist: float = NEAR_MATCH_MAX_DIST,
 ) -> Optional[Decision]:
     """Nearest-bucket table entry as a Decision (None when nothing within
     the near-match distance, or the entry's impl is no longer a viable
-    registry candidate — a renamed/unregistered impl must not resurrect)."""
+    registry candidate — a renamed/unregistered impl must not resurrect).
+
+    Only entries of the queried ``precision`` participate in the
+    nearest-bucket match — an exact-bucket bf16 row must never shadow a
+    farther fp32 row for a fp32 query (and vice versa).  Legacy entries
+    without a ``precision`` field are fp32."""
     kind = registry.canonical_kind(kind)
     query = bucket_dims(kind, params)
     best = None
@@ -570,6 +641,8 @@ def lookup(
         if (e.get("kind"), e.get("platform"), e.get("mode")) != (
             kind, platform, mode,
         ):
+            continue
+        if e.get("precision", "fp32") != precision:
             continue
         dist = bucket_distance(query, e.get("dims", {}))
         if dist > max_dist:
@@ -580,14 +653,14 @@ def lookup(
     if best is None:
         return None
     e = best[1]
-    if e.get("impl") not in viable_candidates(kind, platform, mode):
+    if e.get("impl") not in viable_candidates(kind, platform, mode, precision):
         return None
     return Decision(
         kind=kind, impl=e["impl"], platform=platform, mode=mode,
         bucket=e.get("bucket", bucket_key(kind, params)),
         source=e.get("source", "measured"), score_us=e.get("score_us"),
         block_n=e.get("block_n"), block_e=e.get("block_e"),
-        bwd_impl=e.get("bwd_impl"),
+        bwd_impl=e.get("bwd_impl"), precision=precision,
     )
 
 
@@ -628,20 +701,25 @@ def check_table(
             continue
         if e["platform"] != platform:
             continue
-        covered.add((e["kind"], e["mode"]))
-        viable = viable_candidates(e["kind"], platform, e["mode"])
+        prec = e.get("precision", "fp32")
+        if prec == "fp32":
+            # coverage is a fp32 guarantee; precision rows are additive
+            covered.add((e["kind"], e["mode"]))
+        viable = viable_candidates(e["kind"], platform, e["mode"], prec)
         if e["impl"] not in viable:
             problems.append(
-                f"{e['kind']}[{e['bucket']},{platform},{e['mode']}]: impl "
-                f"{e['impl']!r} is not a viable compiled candidate "
+                f"{e['kind']}[{e['bucket']},{platform},{e['mode']},{prec}]: "
+                f"impl {e['impl']!r} is not a viable candidate "
                 f"(viable: {viable})"
             )
             continue
         scores = measured_scores(runs, e["kind"], platform, e["mode"],
                                  e["dims"], max_dist=0.0)
-        # prune to viable candidates: an interpret-mode pallas row in the
-        # trajectory must not set the staleness baseline
-        scores = {c: v for c, v in scores.items() if c[0] in viable}
+        # prune to viable same-precision candidates: an interpret-mode
+        # pallas row — or a row measured at another precision — must not
+        # set the staleness baseline
+        scores = {c: v for c, v in scores.items()
+                  if c[0] in viable and c[4] == prec}
         if not scores:
             continue
         best = min(us for us, _ in scores.values())
@@ -675,6 +753,7 @@ def tune(
     repeats: int = 3,
     trajectory_path: Optional[Path] = None,
     quick: bool = False,
+    precision: str = "fp32",
 ) -> List[Dict]:
     """Bounded on-device search: time candidate configs for ``shapes``
     through the ``bench_kernels`` harness until ``budget_s`` wall seconds
@@ -699,7 +778,7 @@ def tune(
             break
         for params in shape_list:
             configs = []
-            for name in viable_candidates(kind, platform, mode):
+            for name in viable_candidates(kind, platform, mode, precision):
                 for bn, be in _block_candidates_for(kind, name, params, None):
                     configs.append((name, bn, be))
             if time.perf_counter() - t0 > budget_s:
@@ -737,15 +816,16 @@ def _decision_for(
     mode: str,
     table: Optional[Dict],
     block_candidates,
+    precision: str = "fp32",
 ) -> Decision:
     if table is not None:
-        d = lookup(table, kind, params, platform, mode)
+        d = lookup(table, kind, params, platform, mode, precision=precision)
         if d is not None:
             return d
     # no table / no matching entry: rank with the roofline model on the
     # fly (never measure at engine-build time — that is tune()'s job)
     return decide(kind, params, platform, mode, runs=[],
-                  block_candidates=block_candidates)
+                  block_candidates=block_candidates, precision=precision)
 
 
 def resolve_mace_config(
@@ -784,14 +864,19 @@ def resolve_mace_config(
     N = int(capacity)
     E = int(capacity) * int(edge_factor)
     k = int(mace_cfg.channels)
+    # the config's precision keys every lookup: a bf16 build only sees
+    # bf16 rows/candidates (and the resolved names carry the suffix, so
+    # MaceConfig._with_precision passes them through unchanged)
+    precision = getattr(mace_cfg, "precision", "fp32")
     decisions: Dict[str, Decision] = {}
 
     if mace_cfg.impl == AUTO:
         sc_params = {"N": N, "k": k, "nu": int(mace_cfg.correlation)}
         tp_params = {"E": E, "k": k}
-        d_sc = _decision_for("symcon", sc_params, platform, mode, table, None)
+        d_sc = _decision_for("symcon", sc_params, platform, mode, table,
+                             None, precision)
         d_tp = _decision_for("channelwise_tp", tp_params, platform, mode,
-                             table, None)
+                             table, None, precision)
         if d_sc.impl == d_tp.impl:
             name = d_sc.impl
         else:
@@ -810,7 +895,7 @@ def resolve_mace_config(
     if mace_cfg.interaction_impl == AUTO:
         d = _decision_for(
             "interaction", {"E": E, "N": N, "k": k}, platform, mode, table,
-            block_candidates,
+            block_candidates, precision,
         )
         repl: Dict[str, Any] = {"interaction_impl": d.impl}
         if d.block_n is not None:

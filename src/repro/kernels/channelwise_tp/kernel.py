@@ -34,6 +34,13 @@ TP-transpose runs the unrolled CG nonzeros in reverse:
 The forward and backward share one tile geometry, so the data pipeline's
 blocking arrays serve both directions; ``ops.py`` wires the pair into
 ``jax.custom_vjp`` behind the ``InteractionSpec.bwd_impl`` knob.
+
+Mixed precision: both kernels take a ``precision`` knob ("fp32" | "bf16" |
+"fp8").  Reduced precisions round the operand tile loads (Y/h/R, and the
+cotangent G in the backward) to the compute dtype and widen back
+(``repro.kernels.precision.round_to``); the CG product chains run on fp32
+VREGs and both one-hot matmuls keep ``preferred_element_type=jnp.float32``
+— reduced-precision operands, fp32 accumulation, always.
 """
 from __future__ import annotations
 
@@ -45,6 +52,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.channelwise_tp import TPSpec, TPTables, build_tp_tables
+from repro.kernels.precision import check_precision, round_to
 
 
 def _tp_scatter_kernel(
@@ -58,6 +66,7 @@ def _tp_scatter_kernel(
     entries: List[Tuple[int, int, int, int, float]],
     d_out: int,
     block_n: int,
+    precision: str = "fp32",
 ):
     j = pl.program_id(1)
 
@@ -67,12 +76,15 @@ def _tp_scatter_kernel(
 
     block_e = y_ref.shape[0]
     k = h_ref.shape[2]
+    y_t = round_to(y_ref[...], precision)
+    h_t = round_to(h_ref[...], precision)
+    r_t = round_to(r_ref[...], precision)
 
     # --- fused TP across all CG paths (messages stay in VREGs) ---
     msg = [None] * d_out
     for (m1, m2, m3, p, val) in entries:
-        y = y_ref[:, m1][:, None]          # [block_e, 1] broadcast over lanes
-        contrib = (y * val) * h_ref[:, m2, :] * r_ref[:, p, :]
+        y = y_t[:, m1][:, None]            # [block_e, 1] broadcast over lanes
+        contrib = (y * val) * h_t[:, m2, :] * r_t[:, p, :]
         msg[m3] = contrib if msg[m3] is None else msg[m3] + contrib
     zeros = jnp.zeros((block_e, k), dtype=o_ref.dtype)
     msgs = jnp.stack([m if m is not None else zeros for m in msg], axis=1)
@@ -83,7 +95,7 @@ def _tp_scatter_kernel(
     em = em_ref[:, 0]                                        # [block_e]
     rows = jax.lax.broadcasted_iota(jnp.int32, (block_n, block_e), 0)
     onehot = (rows == lr[None, :]).astype(o_ref.dtype) * em[None, :]
-    flat = msgs.reshape(block_e, d_out * k)
+    flat = round_to(msgs.reshape(block_e, d_out * k), precision)
     acc = jax.lax.dot_general(
         onehot, flat, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
@@ -105,16 +117,20 @@ def _tp_gather_bwd_kernel(
     entries: List[Tuple[int, int, int, int, float]],
     d_out: int,
     block_n: int,
+    precision: str = "fp32",
 ):
     block_e = y_ref.shape[0]
     k = h_ref.shape[2]
     lr = lr_ref[:, 0]
     em = em_ref[:, 0]
+    y_t = round_to(y_ref[...], precision)
+    h_t = round_to(h_ref[...], precision)
+    r_t = round_to(r_ref[...], precision)
 
     # --- gather = transpose of the forward's one-hot scatter matmul ---
     cols = jax.lax.broadcasted_iota(jnp.int32, (block_e, block_n), 1)
     onehot_t = (cols == lr[:, None]).astype(g_ref.dtype) * em[:, None]
-    gflat = g_ref[...].reshape(block_n, d_out * k)
+    gflat = round_to(g_ref[...].reshape(block_n, d_out * k), precision)
     ge = jax.lax.dot_general(
         onehot_t, gflat, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
@@ -133,9 +149,9 @@ def _tp_gather_bwd_kernel(
 
     for (m1, m2, m3, p, val) in entries:
         gm = ge[:, m3, :]                              # [block_e, k]
-        y = y_ref[:, m1][:, None] * val                # [block_e, 1]
-        h = h_ref[:, m2, :]
-        r = r_ref[:, p, :]
+        y = y_t[:, m1][:, None] * val                  # [block_e, 1]
+        h = h_t[:, m2, :]
+        r = r_t[:, p, :]
         acc(dy, m1, jnp.sum(gm * h * r, axis=1, keepdims=True) * val)
         acc(dh, m2, (gm * r) * y)
         acc(dr, p, (gm * h) * y)
@@ -162,6 +178,7 @@ def tp_scatter_pallas_raw(
     block_n: int,
     block_e: int = 128,
     interpret: bool | None = None,
+    precision: str = "fp32",
 ) -> jnp.ndarray:
     """Returns A_t [n_atom_tiles*block_n, d_out, k]."""
     E_p = Y_b.shape[0]
@@ -179,7 +196,8 @@ def tp_scatter_pallas_raw(
         for i in range(len(tables.val))
     ]
     kern = functools.partial(
-        _tp_scatter_kernel, entries=entries, d_out=d_out, block_n=block_n
+        _tp_scatter_kernel, entries=entries, d_out=d_out, block_n=block_n,
+        precision=check_precision(precision),
     )
     inner = epb // block_e
 
@@ -221,6 +239,7 @@ def tp_bwd_pallas_raw(
     block_n: int,
     block_e: int = 128,
     interpret: bool | None = None,
+    precision: str = "fp32",
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Blocked gather + TP-transpose backward (same tile geometry as the
     forward).  Returns per-slot cotangents ``(dY_b [E_p, d_sh],
@@ -242,7 +261,8 @@ def tp_bwd_pallas_raw(
         for i in range(len(tables.val))
     ]
     kern = functools.partial(
-        _tp_gather_bwd_kernel, entries=entries, d_out=d_out, block_n=block_n
+        _tp_gather_bwd_kernel, entries=entries, d_out=d_out, block_n=block_n,
+        precision=check_precision(precision),
     )
     inner = epb // block_e
 

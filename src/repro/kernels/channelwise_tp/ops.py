@@ -57,6 +57,12 @@ step is a grad-of-grad (forces inside the loss), so each backward kernel is
 of the numerically-equivalent XLA formulation (``tp_fused`` /
 ``interaction_fused``): first-order backward = hand-written kernel, second
 and higher orders = XLA.
+
+Mixed precision: ``tp_pallas`` takes an explicit ``precision`` knob; the
+interaction ops read ``InteractionSpec.precision`` (the spec is already a
+nondiff static everywhere, so no custom_vjp signature changes).  Both route
+the knob to the kernels' operand-load rounding (fp32 accumulation — see
+``repro.kernels.precision``); the XLA second-order twins stay fp32.
 """
 from __future__ import annotations
 
@@ -76,6 +82,8 @@ from repro.core.interaction import (
 # Re-exported for backward compatibility: blocking is built by the data
 # pipeline now, but kernel-side callers/tests import it from here too.
 from repro.data.blocking import EdgeBlocking, block_edges  # noqa: F401
+
+from repro.kernels.precision import check_precision
 
 from .kernel import tp_bwd_pallas_raw, tp_scatter_pallas_raw
 
@@ -98,25 +106,28 @@ def _block_edge_operands(Y, h_send, R, block_e):
     return Y_b, h_b, R_b, E + pad
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
-def _tp_op(spec: TPSpec, block_e: int, interpret: bool, Y, h_send, R):
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _tp_op(spec: TPSpec, block_e: int, interpret: bool, precision: str,
+           Y, h_send, R):
     """TP-only core op (identity 'scatter': each edge is its own segment)."""
     Y_b, h_b, R_b, E_p = _block_edge_operands(Y, h_send, R, block_e)
     n_tiles, lr, em = _identity_blocking(E_p, block_e, h_b.dtype)
     A_t = tp_scatter_pallas_raw(
         Y_b, h_b, R_b, lr, em, spec, build_tp_tables(spec),
         n_atom_tiles=n_tiles, block_n=block_e, block_e=block_e,
-        interpret=interpret,
+        interpret=interpret, precision=precision,
     )                                             # [E_p, d_out, k]
     return jnp.swapaxes(A_t, 1, 2)[: h_send.shape[0]]
 
 
-def _tp_op_fwd(spec, block_e, interpret, Y, h_send, R):
-    return _tp_op(spec, block_e, interpret, Y, h_send, R), (Y, h_send, R)
+def _tp_op_fwd(spec, block_e, interpret, precision, Y, h_send, R):
+    return _tp_op(spec, block_e, interpret, precision, Y, h_send, R), (
+        Y, h_send, R,
+    )
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
-def _tp_bwd_op(spec, block_e, interpret, g, Y, h_send, R):
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _tp_bwd_op(spec, block_e, interpret, precision, g, Y, h_send, R):
     """First-order TP backward as a closed op: the identity-blocked
     TP-transpose kernel, shielded from linearization by its own custom_vjp
     (see the module docstring's second-order note)."""
@@ -127,18 +138,18 @@ def _tp_bwd_op(spec, block_e, interpret, g, Y, h_send, R):
     dY_b, dh_b, dR_b = tp_bwd_pallas_raw(
         G_t, Y_b, h_b, R_b, lr, em, spec, build_tp_tables(spec),
         n_atom_tiles=n_tiles, block_n=block_e, block_e=block_e,
-        interpret=interpret,
+        interpret=interpret, precision=precision,
     )
     return dY_b[:E], jnp.swapaxes(dh_b[:E], 1, 2), dR_b[:E]
 
 
-def _tp_bwd_op_fwd(spec, block_e, interpret, g, Y, h_send, R):
-    return _tp_bwd_op(spec, block_e, interpret, g, Y, h_send, R), (
+def _tp_bwd_op_fwd(spec, block_e, interpret, precision, g, Y, h_send, R):
+    return _tp_bwd_op(spec, block_e, interpret, precision, g, Y, h_send, R), (
         g, Y, h_send, R,
     )
 
 
-def _tp_bwd_op_bwd(spec, block_e, interpret, res, ct):
+def _tp_bwd_op_bwd(spec, block_e, interpret, precision, res, ct):
     g, Y, h_send, R = res
     tables = build_tp_tables(spec)
 
@@ -155,9 +166,9 @@ def _tp_bwd_op_bwd(spec, block_e, interpret, res, ct):
 _tp_bwd_op.defvjp(_tp_bwd_op_fwd, _tp_bwd_op_bwd)
 
 
-def _tp_op_bwd(spec, block_e, interpret, res, g):
+def _tp_op_bwd(spec, block_e, interpret, precision, res, g):
     Y, h_send, R = res
-    return _tp_bwd_op(spec, block_e, interpret, g, Y, h_send, R)
+    return _tp_bwd_op(spec, block_e, interpret, precision, g, Y, h_send, R)
 
 
 _tp_op.defvjp(_tp_op_fwd, _tp_op_bwd)
@@ -172,6 +183,7 @@ def tp_pallas(
     *,
     block_e: int = 128,
     interpret: bool | None = None,
+    precision: str = "fp32",
 ) -> jnp.ndarray:
     """TP-only drop-in for ``tp_fused``; forward *and* backward are Pallas
     kernels (the backward via the identity-blocked ``tp_bwd_pallas_raw``).
@@ -186,7 +198,8 @@ def tp_pallas(
         )
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
-    return _tp_op(spec, block_e, bool(interpret), Y, h_send, R)
+    return _tp_op(spec, block_e, bool(interpret), check_precision(precision),
+                  Y, h_send, R)
 
 
 # ---------------------------------------------------------------------------
@@ -223,7 +236,7 @@ def _blocked_forward(spec, interpret, Y, h_node, R, senders, receivers,
     A_t = tp_scatter_pallas_raw(
         Y_b, h_b, R_b, lr, em, spec.tp, t,
         n_atom_tiles=T, block_n=spec.block_n, block_e=epb,
-        interpret=interpret,
+        interpret=interpret, precision=spec.precision,
     )                                             # [T*block_n, d_out, k]
     # fold virtual tiles back onto atom rows: tiny [T*block_n] segment-add
     # (tile bases may repeat for hub atoms / overflow tiles)
@@ -287,7 +300,7 @@ def _blocked_bwd_op(spec, interpret, g, Y, h_node, R, senders, receivers,
     dY_b, dh_b, dR_b = tp_bwd_pallas_raw(
         G_t, Y_b, h_b, R_b, lr, em, spec.tp, t,
         n_atom_tiles=T, block_n=spec.block_n, block_e=epb,
-        interpret=interpret,
+        interpret=interpret, precision=spec.precision,
     )
     # un-permute: valid slots are a permutation of the valid edge ids and
     # masked slots already carry exact zeros (em gates the gather), so the
@@ -316,7 +329,8 @@ def _blocked_backward(spec, interpret, res, g):
 def _unblocked_forward(spec, interpret, Y, h_node, R, senders,
                        receivers, edge_mask):
     """Capability fallback: TP-only kernel + XLA segment-sum."""
-    msgs = tp_pallas(Y, h_node[senders], R, spec.tp, interpret=interpret)
+    msgs = tp_pallas(Y, h_node[senders], R, spec.tp, interpret=interpret,
+                     precision=spec.precision)
     return aggregate_edge_messages(
         msgs, receivers, edge_mask, h_node.shape[0], spec
     )
@@ -342,7 +356,7 @@ def _unblocked_bwd_op(spec, interpret, g, Y, h_node, R, senders, receivers,
     dY_b, dh_b, dR_b = tp_bwd_pallas_raw(
         G_t, Y_b, h_b, R_b, lr, em, spec.tp, build_tp_tables(spec.tp),
         n_atom_tiles=n_tiles, block_n=block_e, block_e=block_e,
-        interpret=interpret,
+        interpret=interpret, precision=spec.precision,
     )
     dh = jnp.swapaxes(
         jax.ops.segment_sum(dh_b[:E], senders, n_atoms), 1, 2

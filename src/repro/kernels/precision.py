@@ -1,0 +1,59 @@
+"""Reduced-precision compute contract shared by the Pallas kernels.
+
+The mixed-precision kernel variants (``pallas_bf16`` / ``pallas_fp8`` in the
+registry) compute on *rounded* operand tiles while keeping every
+accumulation in fp32:
+
+* **Operands** (the VMEM tile reads: A/W for symcon, Y/h/R and the incoming
+  adjoint G for the TP family) are rounded to the compute dtype —
+  ``jnp.bfloat16`` for ``"bf16"``, ``jnp.float8_e4m3fn`` for ``"fp8"`` —
+  and immediately widened back to fp32.  This emulates what the MXU/VPU
+  does natively with low-precision inputs (the mantissa truncation happens
+  at operand load) while staying runnable on every backend, including the
+  CPU interpret mode CI uses; on a real TPU the compiler is free to keep
+  the narrowed operands narrow.
+* **Accumulation** stays fp32: the elementwise product chains run on fp32
+  VREGs after the rounding, and the scatter/gather matmuls keep
+  ``preferred_element_type=jnp.float32`` — so a long contraction never
+  accumulates in the reduced dtype.
+* **fp8 is emulated**: there is no fp8 matmul requirement anywhere, only
+  operand rounding through ``float8_e4m3fn`` — the contract is numerical
+  (what would survive an fp8 operand path), not an instruction-selection
+  claim.
+
+The per-precision *tolerance contract* (what grad-parity vs the fp32 ref
+oracle is allowed to cost) lives with the tests — see
+``tests/test_precision.py::PRECISION_TOL`` — and is the bar every
+registered reduced-precision impl must clear.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# every precision the kernel family understands; "fp32" is the identity
+PRECISIONS = ("fp32", "bf16", "fp8")
+
+_COMPUTE_DTYPES = {
+    "fp32": None,
+    "bf16": jnp.bfloat16,
+    "fp8": jnp.float8_e4m3fn,
+}
+
+
+def check_precision(precision: str) -> str:
+    """Validate a precision name (returns it; raises ``ValueError`` else)."""
+    if precision not in PRECISIONS:
+        raise ValueError(
+            f"unknown precision {precision!r}; expected one of {PRECISIONS}"
+        )
+    return precision
+
+
+def round_to(x, precision: str):
+    """Round ``x`` to the compute dtype of ``precision``, widened back to
+    ``x.dtype`` — the operand-load rounding step of the mixed-precision
+    contract.  ``"fp32"`` is the identity (no-op, no copy)."""
+    dt = _COMPUTE_DTYPES[check_precision(precision)]
+    if dt is None:
+        return x
+    return x.astype(dt).astype(x.dtype)

@@ -36,6 +36,13 @@ Capability metadata (``platforms``, ``needs_tables``) lets callers filter:
 on the current backend (``pallas`` runs on CPU only in interpret mode and is
 tagged accordingly).
 
+Precision capability: ``precision`` names the compute precision an impl
+runs at ("fp32" default; the built-in ``pallas_bf16`` / ``pallas_fp8``
+variants round operand tile loads to the reduced dtype with fp32
+accumulation — see ``repro.kernels.precision``).  ``available(...,
+precision=...)`` filters on it; the autotuner keys decisions by it so a
+reduced-precision measurement can never answer a fp32 lookup.
+
 Backward-pass capability: ``has_custom_bwd`` marks impls that carry a
 ``jax.custom_vjp`` with a hand-written backward (the built-in pallas impls
 ship dedicated backward kernels).  ``capabilities()`` reports the full
@@ -92,6 +99,10 @@ class KernelImpl:
     # pallas impls WITHOUT one cannot be differentiated (resolve() wraps
     # them with a clear-error guard on their native platforms)
     has_custom_bwd: bool = False
+    # compute precision ("fp32" | "bf16" | "fp8"): reduced-precision impls
+    # round operand tile loads and keep fp32 accumulation; the autotuner
+    # never lets rows of one precision answer lookups for another
+    precision: str = "fp32"
     description: str = ""
 
     def supports(self, platform: str) -> bool:
@@ -142,6 +153,7 @@ def register(
     consumes_blocking: bool = False,
     uses_pallas: bool = False,
     has_custom_bwd: bool = False,
+    precision: str = "fp32",
     description: str = "",
     overwrite: bool = False,
 ) -> Callable[[Builder], Builder]:
@@ -156,7 +168,8 @@ def register(
             kind=kind, name=name, builder=builder, needs_tables=needs_tables,
             platforms=platforms, interpret_only_on=interpret_only_on,
             consumes_blocking=consumes_blocking, uses_pallas=uses_pallas,
-            has_custom_bwd=has_custom_bwd, description=description,
+            has_custom_bwd=has_custom_bwd, precision=precision,
+            description=description,
         )
         # a re-registration invalidates stale bindings
         for k in [k for k in _BIND_CACHE if k[0] == kind and k[1] == name]:
@@ -190,6 +203,7 @@ def available(
     *,
     with_custom_bwd: Optional[bool] = None,
     compiled_only: bool = False,
+    precision: Optional[str] = None,
 ) -> List[str]:
     """Impl names for ``kind``, optionally filtered by platform support and
     by backward capability (``with_custom_bwd=True`` keeps only impls whose
@@ -200,7 +214,11 @@ def available(
     that only run *emulated* on the platform (``interpret_only_on``) — e.g.
     pallas on CPU.  This is the autotuner's candidate filter: an
     interpret-mode impl is correct but never a performance choice, so it
-    must not be selectable by measured-trajectory or roofline scoring."""
+    must not be selectable by measured-trajectory or roofline scoring.
+
+    ``precision`` keeps only impls computing at that precision (the
+    autotuner's precision gate: a bf16 variant must never answer a fp32
+    candidate query, and vice versa)."""
     kind = canonical_kind(kind)
     if compiled_only and platform is None:
         raise ValueError("compiled_only=True needs an explicit platform")
@@ -214,6 +232,8 @@ def available(
             continue
         if with_custom_bwd is not None and impl.has_custom_bwd != with_custom_bwd:
             continue
+        if precision is not None and impl.precision != precision:
+            continue
         out.append(n)
     return out
 
@@ -223,7 +243,8 @@ def capabilities(kind: str, name: Optional[str] = None) -> Dict[str, Dict]:
 
     Everything a caller can filter on (``platforms``, ``interpret_only_on``,
     ``needs_tables``, ``consumes_blocking``, ``uses_pallas``,
-    ``has_custom_bwd``, ``description``) — the builder itself is omitted.
+    ``has_custom_bwd``, ``precision``, ``description``) — the builder
+    itself is omitted.
     A computed ``platform_modes`` entry reports per-platform validity
     ({platform: "compiled" | "interpret" | None} over cpu/gpu/tpu) so
     callers — the autotuner foremost — can tell a natively-compiled
@@ -414,3 +435,63 @@ def _interaction_pallas_builder(spec):
 
     build_tp_tables(spec.tp)  # warm the table cache at bind time
     return partial(interaction_pallas_op, spec=spec)
+
+
+# --- reduced-precision pallas variants (bf16 / fp8-emulated) ---------------
+# Same kernels, hand-written backwards included; operand tile loads rounded
+# to the reduced dtype, accumulation fp32 (repro.kernels.precision).  The
+# interaction builders force the precision onto the spec so one MaceConfig
+# spec serves every variant.
+
+
+def _register_precision_variants():
+    import dataclasses as _dc
+
+    for prec in ("bf16", "fp8"):
+        @register(KIND_TP, f"pallas_{prec}", needs_tables=True,
+                  platforms=("tpu",), interpret_only_on=("cpu",),
+                  uses_pallas=True, has_custom_bwd=True, precision=prec,
+                  description=f"Pallas TPU kernel at {prec} operand "
+                              "precision, fp32 accumulation (fwd+bwd)")
+        def _tp_variant_builder(spec, _prec=prec):
+            from functools import partial
+
+            from repro.core.channelwise_tp import build_tp_tables
+            from repro.kernels.channelwise_tp.ops import tp_pallas
+
+            build_tp_tables(spec)
+            return partial(tp_pallas, spec=spec, precision=_prec)
+
+        @register(KIND_SYMCON, f"pallas_{prec}", needs_tables=True,
+                  platforms=("tpu",), interpret_only_on=("cpu",),
+                  uses_pallas=True, has_custom_bwd=True, precision=prec,
+                  description=f"Pallas TPU kernel at {prec} operand "
+                              "precision, fp32 accumulation (fwd+bwd)")
+        def _symcon_variant_builder(spec, _prec=prec):
+            from functools import partial
+
+            from repro.core.symmetric_contraction import build_symcon_tables
+            from repro.kernels.symmetric_contraction.ops import symcon_pallas
+
+            build_symcon_tables(spec)
+            return partial(symcon_pallas, spec=spec, precision=_prec)
+
+        @register(KIND_INTERACTION, f"pallas_{prec}", needs_tables=True,
+                  platforms=("tpu",), interpret_only_on=("cpu",),
+                  consumes_blocking=True, uses_pallas=True,
+                  has_custom_bwd=True, precision=prec,
+                  description=f"fused TP+scatter kernel at {prec} operand "
+                              "precision, fp32 accumulation; backward = "
+                              "blocked gather + TP-transpose kernel")
+        def _interaction_variant_builder(spec, _prec=prec):
+            from functools import partial
+
+            from repro.core.channelwise_tp import build_tp_tables
+            from repro.kernels.channelwise_tp.ops import interaction_pallas_op
+
+            spec = _dc.replace(spec, precision=_prec)
+            build_tp_tables(spec.tp)
+            return partial(interaction_pallas_op, spec=spec)
+
+
+_register_precision_variants()

@@ -32,6 +32,13 @@ Both cotangents accumulate in VREG lists indexed by the (compile-time) input
 row and are written to VMEM once per tile, mirroring the forward's
 no-intermediate-HBM-traffic contract.  ``ops.py`` exposes the pair through
 ``jax.custom_vjp``.
+
+Mixed precision: both kernels take a ``precision`` knob ("fp32" | "bf16" |
+"fp8").  Reduced precisions round the operand tile *loads* (A, W, and the
+cotangent G in the backward) to the compute dtype and widen back — see
+``repro.kernels.precision`` — while every FMA chain and the output
+accumulation stay fp32.  The XLA twin remains fp32-only: second-order
+closure (grad-of-grad for forces) always runs at full precision.
 """
 from __future__ import annotations
 
@@ -44,6 +51,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core.symmetric_contraction import SymConSpec, SymConTables, build_symcon_tables
+from repro.kernels.precision import check_precision, round_to
 
 
 def _group_entries(
@@ -71,18 +79,24 @@ def _group_entries(
     return groups, w_off
 
 
-def _symcon_kernel(a_ref, w_ref, o_ref, *, groups):
-    """One grid step = one tile of atoms; everything unrolled."""
+def _symcon_kernel(a_ref, w_ref, o_ref, *, groups, precision="fp32"):
+    """One grid step = one tile of atoms; everything unrolled.
+
+    Reduced ``precision`` rounds the A/W tile loads to the compute dtype
+    (operand-load rounding); products and the output accumulate fp32.
+    """
+    a = round_to(a_ref[...], precision)
+    w = round_to(w_ref[...], precision)
     o_ref[...] = jnp.zeros_like(o_ref)
     for (w_idx, out_idx, nu, _, ents) in groups:
         s = None
         for (idx, val) in ents:
-            t = a_ref[:, idx[0], :]
+            t = a[:, idx[0], :]
             for x in range(1, nu):
-                t = t * a_ref[:, idx[x], :]
+                t = t * a[:, idx[x], :]
             term = t * val
             s = term if s is None else s + term
-        o_ref[:, out_idx, :] += w_ref[:, w_idx, :] * s
+        o_ref[:, out_idx, :] += w[:, w_idx, :] * s
 
 
 def symcon_pallas_raw(
@@ -93,6 +107,7 @@ def symcon_pallas_raw(
     *,
     block_n: int = 32,
     interpret: bool | None = None,
+    precision: str = "fp32",
 ) -> jnp.ndarray:
     """Returns B_t [N, d_out, k]."""
     N, d_in, k = A_t.shape
@@ -103,7 +118,9 @@ def symcon_pallas_raw(
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
 
-    kern = functools.partial(_symcon_kernel, groups=groups)
+    kern = functools.partial(
+        _symcon_kernel, groups=groups, precision=check_precision(precision)
+    )
     return pl.pallas_call(
         kern,
         grid=(N // block_n,),
@@ -146,14 +163,19 @@ def symcon_xla_raw(
     )
 
 
-def _symcon_bwd_kernel(a_ref, w_ref, g_ref, da_ref, dw_ref, *, groups):
+def _symcon_bwd_kernel(a_ref, w_ref, g_ref, da_ref, dw_ref, *, groups,
+                       precision="fp32"):
     """Backward tile sweep: dA and dW from (A, W, G) over the same groups.
 
     Cotangents accumulate per compile-time row index in VREGs (``da``/``dw``
-    lists) and hit VMEM exactly once per tile.
+    lists) and hit VMEM exactly once per tile.  Reduced ``precision``
+    rounds the A/W/G tile loads; the FMA sweeps accumulate fp32.
     """
     d_in = a_ref.shape[1]
     p_total = w_ref.shape[1]
+    a = round_to(a_ref[...], precision)
+    w = round_to(w_ref[...], precision)
+    g_t = round_to(g_ref[...], precision)
     da = [None] * d_in
     dw = [None] * p_total
 
@@ -161,14 +183,14 @@ def _symcon_bwd_kernel(a_ref, w_ref, g_ref, da_ref, dw_ref, *, groups):
         buf[i] = v if buf[i] is None else buf[i] + v
 
     for (w_idx, out_idx, nu, _, ents) in groups:
-        g = g_ref[:, out_idx, :]
-        gw = g * w_ref[:, w_idx, :]
+        g = g_t[:, out_idx, :]
+        gw = g * w[:, w_idx, :]
         s = None
         for (idx, val) in ents:
             # forward product (re-derived from the saved A residual) -> dW
-            t = a_ref[:, idx[0], :]
+            t = a[:, idx[0], :]
             for x in range(1, nu):
-                t = t * a_ref[:, idx[x], :]
+                t = t * a[:, idx[x], :]
             term = t * val
             s = term if s is None else s + term
             # product rule -> dA: drop factor x, keep the other nu-1
@@ -177,7 +199,7 @@ def _symcon_bwd_kernel(a_ref, w_ref, g_ref, da_ref, dw_ref, *, groups):
                 for y in range(nu):
                     if y == x:
                         continue
-                    ay = a_ref[:, idx[y], :]
+                    ay = a[:, idx[y], :]
                     p = ay if p is None else p * ay
                 acc(da, idx[x], gw * val if p is None else gw * (p * val))
         # several (eta, M) groups may share eta (same weight row, different
@@ -200,6 +222,7 @@ def symcon_bwd_pallas_raw(
     *,
     block_n: int = 32,
     interpret: bool | None = None,
+    precision: str = "fp32",
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Returns ``(dA_t [N, d_in, k], dW_t [N, P_total, k])``."""
     N, d_in, k = A_t.shape
@@ -211,7 +234,9 @@ def symcon_bwd_pallas_raw(
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
 
-    kern = functools.partial(_symcon_bwd_kernel, groups=groups)
+    kern = functools.partial(
+        _symcon_bwd_kernel, groups=groups, precision=check_precision(precision)
+    )
     return pl.pallas_call(
         kern,
         grid=(N // block_n,),

@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.symmetric_contraction import SymConSpec, SymConTables, build_symcon_tables
+from repro.kernels.precision import check_precision
 
 from .kernel import (
     gather_weights,
@@ -46,27 +47,29 @@ from .kernel import (
 )
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
 def _symcon_bwd_op(spec: SymConSpec, block_n: int, interpret: bool,
+                   precision: str,
                    A_t: jnp.ndarray, W_t: jnp.ndarray, G_t: jnp.ndarray):
     """First-order backward as a closed op: the Pallas backward kernel,
     shielded from linearization by its own custom_vjp (see module
     docstring)."""
     return symcon_bwd_pallas_raw(
         A_t, W_t, G_t, spec, build_symcon_tables(spec),
-        block_n=block_n, interpret=interpret,
+        block_n=block_n, interpret=interpret, precision=precision,
     )
 
 
-def _symcon_bwd_op_fwd(spec, block_n, interpret, A_t, W_t, G_t):
-    return _symcon_bwd_op(spec, block_n, interpret, A_t, W_t, G_t), (
-        A_t, W_t, G_t,
-    )
+def _symcon_bwd_op_fwd(spec, block_n, interpret, precision, A_t, W_t, G_t):
+    return _symcon_bwd_op(spec, block_n, interpret, precision,
+                          A_t, W_t, G_t), (A_t, W_t, G_t)
 
 
-def _symcon_bwd_op_bwd(spec, block_n, interpret, res, ct):
+def _symcon_bwd_op_bwd(spec, block_n, interpret, precision, res, ct):
     """Second-order rule: differentiate the XLA twin of the backward (the
-    VJP of ``symcon_xla_raw``), numerically equal to the kernel."""
+    VJP of ``symcon_xla_raw``), numerically equal to the kernel modulo the
+    reduced-precision operand rounding — second and higher orders always
+    run fp32 (the tolerance contract budgets for this)."""
     A_t, W_t, G_t = res
     tables = build_symcon_tables(spec)
 
@@ -82,8 +85,9 @@ def _symcon_bwd_op_bwd(spec, block_n, interpret, res, ct):
 _symcon_bwd_op.defvjp(_symcon_bwd_op_fwd, _symcon_bwd_op_bwd)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
 def _symcon_op(spec: SymConSpec, block_n: int, interpret: bool,
+               precision: str,
                A_t: jnp.ndarray, W_t: jnp.ndarray) -> jnp.ndarray:
     """Kernel-layout core op: ``(A_t [N,d_in,k], W_t [N,P,k]) -> B_t``.
 
@@ -91,17 +95,19 @@ def _symcon_op(spec: SymConSpec, block_n: int, interpret: bool,
     this is the same object every impl shares)."""
     return symcon_pallas_raw(
         A_t, W_t, spec, build_symcon_tables(spec),
-        block_n=block_n, interpret=interpret,
+        block_n=block_n, interpret=interpret, precision=precision,
     )
 
 
-def _symcon_op_fwd(spec, block_n, interpret, A_t, W_t):
-    return _symcon_op(spec, block_n, interpret, A_t, W_t), (A_t, W_t)
+def _symcon_op_fwd(spec, block_n, interpret, precision, A_t, W_t):
+    return _symcon_op(spec, block_n, interpret, precision, A_t, W_t), (
+        A_t, W_t,
+    )
 
 
-def _symcon_op_bwd(spec, block_n, interpret, res, g):
+def _symcon_op_bwd(spec, block_n, interpret, precision, res, g):
     A_t, W_t = res
-    return _symcon_bwd_op(spec, block_n, interpret, A_t, W_t, g)
+    return _symcon_bwd_op(spec, block_n, interpret, precision, A_t, W_t, g)
 
 
 _symcon_op.defvjp(_symcon_op_fwd, _symcon_op_bwd)
@@ -116,6 +122,7 @@ def symcon_pallas(
     *,
     block_n: int = 32,
     interpret: bool | None = None,
+    precision: str = "fp32",
 ) -> jnp.ndarray:
     # the custom_vjp core always binds the canonical lru-cached tables, and
     # the weight gather's term order must match the kernel's group order —
@@ -139,7 +146,8 @@ def symcon_pallas(
 
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
-    B_t = _symcon_op(spec, block_n, bool(interpret), A_t, W_t)
+    B_t = _symcon_op(spec, block_n, bool(interpret), check_precision(precision),
+                     A_t, W_t)
     # [N+pad, d_out, k]
     if pad:
         B_t = B_t[:N]

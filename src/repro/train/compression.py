@@ -9,16 +9,114 @@ of updates is unbiased — SGD/Adam convergence is preserved.
 ``compressed_psum`` is the shard_map-ready collective: quantise → integer
 psum → dequantise.  The scale is itself psum-maxed so all ranks dequantise
 identically (required for synchronous replicas).
+
+Wire-sum overflow contract
+--------------------------
+int8 payloads in [-127, 127] summed on an int16 wire are exact only while
+``127 * group_size <= 32767`` — i.e. group sizes up to
+``MAX_INT16_GROUP = 258``.  Beyond that the sum silently wraps, so the
+collectives here never run a flat int16 psum past the limit:
+
+* a **known** larger group (``axis_size`` passed) uses a chunked two-stage
+  reduction — int16 psum inside equal contiguous chunks of at most 258
+  members (``axis_index_groups``), then one chunk-leader per chunk
+  contributes the (exact) chunk partial to an int32 psum over the full
+  axis; non-leaders contribute zeros.  Chunk size is the largest divisor
+  of ``axis_size`` within the limit (``_chunk_size``), degrading to a
+  plain int32 sum when the size is prime.  Where the shard_map lowering
+  lacks grouped psum (NotImplementedError at trace time on some jax
+  versions), the sum falls back to the int32 wire — every exact strategy
+  computes the identical integer total, so the fallback is bitwise
+  equivalent and only the wire cost differs.
+* an **unknown** group (``axis_size=None`` in ``compressed_psum_ef``)
+  sums on an int32 wire — exact for any realistic group, at 4 bytes/elt.
+* a tuple ``axis_name`` past the limit raises: chunk leadership needs a
+  single ``lax.axis_index`` (pre-flatten the mesh axes or pass per-axis
+  hops instead).
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Sequence, Tuple, Union
+from typing import Any, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 PyTree = Any
 AxisName = Union[str, Sequence[str]]
+
+# largest group whose int8 payloads sum exactly on an int16 wire
+# (127 * 258 = 32766 <= 32767)
+MAX_INT16_GROUP = 258
+
+
+def _chunk_size(axis_size: int, max_group: int = MAX_INT16_GROUP) -> int:
+    """Largest divisor of ``axis_size`` that is ``<= max_group`` — the
+    stage-1 chunk width of the two-stage reduction.  ``axis_index_groups``
+    requires equal-size groups, hence a divisor; a prime ``axis_size``
+    returns 1 (stage 1 degenerates to the identity and stage 2 is a plain
+    int32 psum, still exact)."""
+    if axis_size <= 0:
+        raise ValueError(f"axis_size must be positive, got {axis_size}")
+    for d in range(min(max_group, axis_size), 0, -1):
+        if axis_size % d == 0:
+            return d
+    return 1
+
+
+def _chunk_groups(axis_size: int, max_group: int = MAX_INT16_GROUP) -> List[List[int]]:
+    """Contiguous equal-size ``axis_index_groups`` partition of the axis
+    (chunk width from ``_chunk_size``)."""
+    c = _chunk_size(axis_size, max_group)
+    return [list(range(i, i + c)) for i in range(0, axis_size, c)]
+
+
+def _exact_wire_sum(
+    q: jnp.ndarray,
+    axis_name: AxisName,
+    axis_size: Optional[int],
+    max_group: int = MAX_INT16_GROUP,
+) -> jnp.ndarray:
+    """Sum int8-valued payloads ``q`` (float32, in [-127, 127]) over
+    ``axis_name`` without silent integer wrap; returns the float32 total.
+
+    See the module docstring's *wire-sum overflow contract* for the
+    size-dependent strategy (flat int16 / chunked two-stage / int32)."""
+    if axis_size is not None and axis_size <= max_group:
+        # flat int16 wire: exact by the 127 * g <= 32767 bound
+        return jax.lax.psum(q.astype(jnp.int16), axis_name).astype(jnp.float32)
+    if axis_size is None:
+        # size unknown at trace time: int32 wire, exact for any real group
+        return jax.lax.psum(q.astype(jnp.int32), axis_name).astype(jnp.float32)
+    if not isinstance(axis_name, str):
+        raise ValueError(
+            f"group size {axis_size} exceeds the exact int16 wire-sum limit "
+            f"of {max_group} (int8 payloads wrap past 127 * {max_group} = "
+            f"{127 * max_group}), and chunk-leader selection needs a single "
+            f"mesh axis — got axis_name={axis_name!r}.  Flatten the axes or "
+            "reduce them in separate hops."
+        )
+    c = _chunk_size(axis_size, max_group)
+    if c > 1:
+        try:
+            # stage 1: exact int16 partial inside each contiguous chunk;
+            # every chunk member ends up holding the chunk total
+            part = jax.lax.psum(
+                q.astype(jnp.int16), axis_name,
+                axis_index_groups=_chunk_groups(axis_size, max_group),
+            )
+            # stage 2: one leader per chunk forwards the partial on an int32
+            # wire; the full-axis psum of leader-only values is the sum of
+            # chunk totals
+            leader = (jax.lax.axis_index(axis_name) % c) == 0
+            contrib = jnp.where(leader, part.astype(jnp.int32), 0)
+            return jax.lax.psum(contrib, axis_name).astype(jnp.float32)
+        except NotImplementedError:
+            # grouped psum isn't lowered under shard_map in every jax
+            # version; the int32 flat sum below computes the identical
+            # integer total (both are exact), so falling back is bitwise
+            # equivalent — only the wire cost differs
+            pass
+    return jax.lax.psum(q.astype(jnp.int32), axis_name).astype(jnp.float32)
 
 
 def int8_compress_decompress(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -54,23 +152,27 @@ def compressed_psum_ef(
     axis_name: AxisName,
     *,
     axis_size: Optional[int] = None,
+    max_group: int = MAX_INT16_GROUP,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """``compressed_psum`` with rank-local error feedback.
 
     The residual ``e`` (what quantisation dropped on *this* rank last step)
     is added to the gradient before quantising, and the new residual is
     returned — the accumulated update sequence stays unbiased while the
-    wire payload stays int8/int16.  Like ``compressed_psum``, the int16
-    wire sum is exact only for group sizes up to 258 (127 x g <= 32767);
-    larger data-parallel groups need a hierarchical reduction before this
-    collective.  Returns ``(g_hat_mean, new_e)``; the residual is
-    rank-local state and is never reduced.
+    wire payload stays integer.  Returns ``(g_hat_mean, new_e)``; the
+    residual is rank-local state and is never reduced.
 
     ``axis_name`` may be a single mesh axis or a tuple of axes (the group
     is their product).  Pass ``axis_size`` (the static size of the group,
-    e.g. ``mesh.shape[axis]``) to let the degenerate single-member group
-    short-circuit to the exact identity: with one participant there is no
-    wire hop, so quantising would only inject residual drift for nothing.
+    e.g. ``mesh.shape[axis]``) to pick the exact wire strategy: ``1``
+    short-circuits to the identity (no wire hop, no quantisation drift),
+    sizes up to 258 take the flat int16 wire, larger sizes the chunked
+    two-stage reduction (module docstring; a tuple ``axis_name`` past the
+    limit raises with the limit named).  Without the hint the sum runs on
+    an int32 wire — always exact, 4 bytes/elt instead of 2.
+
+    ``max_group`` overrides the 258 int16 limit — for tests that force the
+    chunked path on small emulated meshes; production callers leave it.
     """
     if axis_size == 1:
         # Single-node group: the mean of one rank is the rank itself.
@@ -79,24 +181,40 @@ def compressed_psum_ef(
     c = g.astype(jnp.float32) + e
     scale = jnp.max(jnp.abs(c)) / 127.0 + 1e-12
     scale = jax.lax.pmax(scale, axis_name)
-    q = jnp.clip(jnp.round(c / scale), -127, 127).astype(jnp.int16)
-    total = jax.lax.psum(q, axis_name)
+    q = jnp.clip(jnp.round(c / scale), -127, 127)
+    total = _exact_wire_sum(q, axis_name, axis_size, max_group)
     n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
-    g_hat = (total.astype(jnp.float32) * scale / n).astype(g.dtype)
-    return g_hat, c - q.astype(jnp.float32) * scale
+    g_hat = (total * scale / n).astype(g.dtype)
+    return g_hat, c - q * scale
 
 
-def compressed_psum(g: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+def compressed_psum(
+    g: jnp.ndarray,
+    axis_name: str,
+    *,
+    axis_size: Optional[int] = None,
+    max_group: int = MAX_INT16_GROUP,
+) -> jnp.ndarray:
     """Quantised-payload all-reduce for use inside shard_map.
 
-    Values are quantised to int8 and *summed in int16* — safe for group
-    sizes up to 258 (127 x g <= 32767) and exactly 2 bytes on the wire vs 4
-    for fp32 (a ring all-reduce transmits partial sums, so the accumulator
-    dtype is the wire dtype).  The shared pmax scale makes dequantisation
-    identical on all ranks (synchronous replicas stay bit-identical)."""
+    Values are quantised to int8 and summed in int16 — exactly 2 bytes on
+    the wire vs 4 for fp32 (a ring all-reduce transmits partial sums, so
+    the accumulator dtype is the wire dtype).  The shared pmax scale makes
+    dequantisation identical on all ranks (synchronous replicas stay
+    bit-identical).
+
+    The flat int16 sum is exact only up to group size 258; pass
+    ``axis_size`` to engage the chunked two-stage reduction past the limit
+    (module docstring).  Without the hint the legacy flat int16 wire is
+    kept for compatibility — callers on groups that may exceed 258 must
+    pass the size (``compressed_psum_ef`` without a hint instead widens to
+    int32, since the trainer path cannot vouch for the group size)."""
     scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
     scale = jax.lax.pmax(scale, axis_name)  # shared scale: identical dequant
-    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int16)
-    total = jax.lax.psum(q, axis_name)
+    q = jnp.clip(jnp.round(g / scale), -127, 127)
+    total = _exact_wire_sum(
+        q, axis_name, axis_size if axis_size is not None else max_group,
+        max_group,
+    )
     n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
-    return (total.astype(jnp.float32) * scale / n).astype(g.dtype)
+    return (total * scale / n).astype(g.dtype)

@@ -501,8 +501,8 @@ def _uses_pallas(mace_cfg: MaceConfig) -> bool:
     value-and-grad, so either flag disables the replication check.
     Third-party Pallas-backed impls under any name are covered."""
     selected = (
-        ("channelwise_tp", mace_cfg.impl),
-        ("symcon", mace_cfg.impl),
+        ("channelwise_tp", mace_cfg.symcon_impl_name),
+        ("symcon", mace_cfg.symcon_impl_name),
         ("interaction", mace_cfg.interaction_impl_name),
     )
     for kind, name in selected:
@@ -589,6 +589,12 @@ class SequentialEngine:
         """Replicated-state placement hook (trivial here: the sequential
         oracle runs on the default device)."""
         return tree
+
+    @property
+    def local_rank_range(self) -> range:
+        """Ranks whose molecules this process must materialise for
+        ``collate`` (all of them: the oracle is single-process)."""
+        return range(self.n_ranks)
 
     def close(self) -> None:
         """Teardown: drop the jitted step functions (clearing their
@@ -721,6 +727,12 @@ class ShardMapEngine:
         the first jitted step on the new mesh."""
         replicated = jax.sharding.NamedSharding(self.mesh, P())
         return jax.device_put(tree, replicated)
+
+    @property
+    def local_rank_range(self) -> range:
+        """Ranks whose molecules this process must materialise for
+        ``collate`` (all of them: one host drives the whole 1D mesh)."""
+        return range(self.n_ranks)
 
     def close(self) -> None:
         """Teardown: clear the jitted SPMD step's compilation cache and drop
@@ -943,6 +955,20 @@ class MultiHostEngine:
             multihost_utils.sync_global_devices(name)
 
     # ----------------------------- engine API -----------------------------
+
+    @property
+    def local_rank_range(self) -> range:
+        """Ranks whose molecules this process must materialise for
+        ``collate``: only this node's contiguous node-major slice in
+        multi-process runs (``collate`` builds the batch from exactly these
+        bins via ``make_array_from_process_local_data``), every rank in
+        single-process emulation.  The trainer's ``_fetch_batch`` consults
+        this so non-local ranks are never loaded or collated (the PR-8
+        every-process-collates-everything residual)."""
+        if self.process_count > 1:
+            lo = self.process_index * self.devices_per_node
+            return range(lo, lo + self.devices_per_node)
+        return range(self.n_ranks)
 
     def init_ef(self, params):
         """Fresh ``[n_nodes, ...]`` error-feedback residuals, sharded

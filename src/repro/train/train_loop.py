@@ -102,6 +102,11 @@ class TrainerConfig:
     # overrides MaceConfig.interaction_bwd_impl when set ("pallas" = the
     # dedicated backward kernel, "xla" = fused-XLA VJP fallback)
     interaction_bwd_impl: Optional[str] = None
+    # overrides MaceConfig.precision when set ("fp32" | "bf16" | "fp8"):
+    # reduced precisions run the pallas_<precision> kernel variants (operand
+    # tile loads rounded, fp32 accumulation) and key the autotune lookup so
+    # reduced-precision table rows never answer fp32 builds
+    precision: Optional[str] = None
     # fused-interaction edge blocking tile shape (data.blocking); block_n
     # must match MaceConfig.interaction_block_n when blocking is consumed
     block_n: int = 32
@@ -137,6 +142,8 @@ class Trainer:
             mace_cfg = dataclasses.replace(
                 mace_cfg, interaction_bwd_impl=tcfg.interaction_bwd_impl
             )
+        if tcfg.precision is not None:
+            mace_cfg = dataclasses.replace(mace_cfg, precision=tcfg.precision)
         # "auto" sentinels resolve against the committed tuning table (or
         # the roofline fallback) for THIS run's shape bucket — before the
         # BinShape is built, so an interaction decision's tile geometry can
@@ -417,8 +424,18 @@ class Trainer:
     def _fetch_batch(self, rank_bins):
         """Host side of one step: materialise molecules and collate to the
         engine's device layout (plus host-stats dict: blocking seconds).
-        Runs on the prefetch producer thread."""
-        mols_per_rank = [[self.dataset.get(i) for i in b] for b in rank_bins]
+        Runs on the prefetch producer thread.
+
+        Only ranks the engine declares process-local (``local_rank_range``)
+        are materialised — in a multi-process run every process used to
+        build all ranks' molecule lists and let collate slice its node's
+        rows; non-local ranks now get an empty placeholder the engine's
+        collate never touches, so host collate work is O(local ranks)."""
+        local = getattr(self.engine, "local_rank_range", range(len(rank_bins)))
+        mols_per_rank = [
+            [self.dataset.get(i) for i in b] if r in local else []
+            for r, b in enumerate(rank_bins)
+        ]
         return self.engine.collate(mols_per_rank, self.bin_shape)
 
     def run_epoch(

@@ -161,7 +161,8 @@ def test_legacy_blocked_rows_normalize_to_default_tiles():
     row = _row("interaction", "pallas", "fwd_bwd", 50.0, blocked=True, **Q_INT)
     scores = at.measured_scores([_run([row], backend="tpu")],
                                 "interaction", "tpu", "fwd_bwd", Q_INT)
-    assert ("pallas", 32, 128, "pallas") in scores
+    # legacy rows also lack a precision param -> normalise to fp32
+    assert ("pallas", 32, 128, "pallas", "fp32") in scores
 
 
 # ---------------------------------------------------------------------------
@@ -205,7 +206,8 @@ def test_build_write_load_lookup_roundtrip(tmp_path):
                    "cpu", "fwd_bwd")
     assert d2 is not None and d2.impl == "fused"
     # entries are sorted for stable human-readable diffs
-    keys = [(e["platform"], e["kind"], e["mode"], e["bucket"])
+    keys = [(e["platform"], e["kind"], e["mode"],
+             e.get("precision", "fp32"), e["bucket"])
             for e in table["entries"]]
     assert keys == sorted(keys)
 
@@ -421,3 +423,91 @@ def test_platform_mode_reporting():
     assert impl.platform_mode("tpu") == "compiled"
     assert impl.platform_mode("cpu") == "interpret"
     assert impl.platform_mode("gpu") is None
+
+
+# ---------------------------------------------------------------------------
+# precision keying: reduced-precision rows never shadow fp32 (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_measured_rows_key_by_precision():
+    """A bf16 measured row is evidence only for bf16 queries; legacy rows
+    without a precision param normalise to the impl's registered precision
+    (fp32 for everything predating the variants)."""
+    rows = [
+        _row("symcon", "pallas", "fwd_bwd", 40.0, **Q_SC),
+        _row("symcon", "pallas_bf16", "fwd_bwd", 20.0, **Q_SC),
+    ]
+    scores = at.measured_scores([_run(rows, backend="tpu")],
+                                "symcon", "tpu", "fwd_bwd", Q_SC)
+    assert ("pallas", None, None, "pallas", "fp32") in scores
+    assert ("pallas_bf16", None, None, "pallas", "bf16") in scores
+
+
+def test_viable_candidates_partition_by_precision():
+    fp32 = at.viable_candidates("symcon", "tpu", "fwd_bwd")
+    bf16 = at.viable_candidates("symcon", "tpu", "fwd_bwd", "bf16")
+    assert "pallas" in fp32 and "pallas_bf16" not in fp32
+    assert bf16 == ["pallas_bf16"]
+    # reduced precision relaxes compiled-only: the interpret-mode cpu
+    # binding stays selectable (explicit user intent), fp32 does not
+    assert at.viable_candidates("symcon", "cpu", "fwd_bwd", "bf16") == \
+        ["pallas_bf16"]
+    assert "pallas" not in at.viable_candidates("symcon", "cpu", "fwd_bwd")
+
+
+def test_lookup_never_crosses_precision():
+    """An exact-bucket bf16 entry must not answer a fp32 query even when
+    the only fp32 entry is a farther bucket — and vice versa."""
+    table = {"schema": at.SCHEMA, "entries": [
+        {"kind": "symcon", "platform": "tpu", "mode": "fwd_bwd",
+         "bucket": "N512-k32-nu3", "dims": {"N": 512, "k": 32, "nu": 3},
+         "impl": "pallas_bf16", "block_n": None, "block_e": None,
+         "bwd_impl": "pallas", "precision": "bf16",
+         "source": "measured", "score_us": 10.0},
+        {"kind": "symcon", "platform": "tpu", "mode": "fwd_bwd",
+         "bucket": "N1024-k32-nu3", "dims": {"N": 1024, "k": 32, "nu": 3},
+         "impl": "pallas", "block_n": None, "block_e": None,
+         "bwd_impl": "pallas", "source": "measured", "score_us": 20.0},
+    ]}
+    q = {"N": 512, "k": 32, "nu": 3}
+    d32 = at.lookup(table, "symcon", q, "tpu", "fwd_bwd")
+    assert d32 is not None and (d32.impl, d32.precision) == ("pallas", "fp32")
+    assert d32.bucket == "N1024-k32-nu3"  # farther fp32 row, not the bf16 one
+    d16 = at.lookup(table, "symcon", q, "tpu", "fwd_bwd", precision="bf16")
+    assert d16 is not None and (d16.impl, d16.precision) == \
+        ("pallas_bf16", "bf16")
+    # no fp8 entries: reduced-precision lookup misses (roofline fallback)
+    assert at.lookup(table, "symcon", q, "tpu", "fwd_bwd",
+                     precision="fp8") is None
+
+
+def test_decide_and_build_table_cover_precisions(tmp_path):
+    d = at.decide("symcon", Q_SC, "tpu", "fwd_bwd", precision="bf16")
+    assert d.impl == "pallas_bf16" and d.precision == "bf16"
+    payload = at.build_table(platforms=["tpu"])
+    precs = {e.get("precision") for e in payload["entries"]}
+    assert precs == set(at.TABLE_PRECISIONS)
+    # every bf16 entry resolves to a bf16 variant impl
+    for e in payload["entries"]:
+        if e["precision"] == "bf16":
+            assert e["impl"].endswith("_bf16"), e
+    tpath = at.write_table(payload, tmp_path / "TUNING_TABLE.json")
+    assert at.check_table("tpu", table_path=tpath,
+                          trajectory_path=tmp_path / "none.json") == []
+
+
+def test_resolve_mace_config_auto_at_bf16_selects_variants():
+    cfg = MaceConfig(
+        n_species=10, channels=8, hidden_ls=(0, 1), sh_lmax=2,
+        a_ls=(0, 1, 2), correlation=2, n_interactions=2,
+        avg_num_neighbors=8.0, impl="auto", interaction_impl="auto",
+        precision="bf16",
+    )
+    resolved, decisions = at.resolve_mace_config(
+        cfg, capacity=64, edge_factor=16, platform="tpu", table=None)
+    assert resolved.impl == "pallas_bf16"
+    assert resolved.interaction_impl == "pallas_bf16"
+    # the name already carries the suffix: property resolution is a no-op
+    assert resolved.symcon_impl_name == "pallas_bf16"
+    assert all(d.precision == "bf16" for d in decisions.values())

@@ -134,3 +134,121 @@ def test_emulated_hier_two_nodes_quantises_node_means():
     dequant = node_means - np.asarray(e_out)
     q = dequant / (np.abs(node_means).max() / 127.0 + 1e-12)
     np.testing.assert_allclose(q, np.round(q), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# int16 wire overflow: the chunked two-stage reduction past group size 258
+# ---------------------------------------------------------------------------
+
+
+def test_chunk_size_and_groups_properties():
+    """Chunk width is the largest divisor within the int16 limit and the
+    groups form an equal-size contiguous partition (the XLA
+    ``axis_index_groups`` contract)."""
+    from repro.train.compression import (
+        MAX_INT16_GROUP, _chunk_groups, _chunk_size,
+    )
+
+    assert MAX_INT16_GROUP == 258 and 127 * MAX_INT16_GROUP <= 32767
+    assert _chunk_size(300) == 150     # 300 = 150 * 2
+    assert _chunk_size(516) == 258     # exactly the limit
+    assert _chunk_size(1024) == 256
+    assert _chunk_size(997) == 1       # prime: degrade to pure int32
+    assert _chunk_size(259) == 37      # 259 = 7 * 37
+    for n in (300, 516, 997, 259):
+        c = _chunk_size(n)
+        assert n % c == 0 and c <= MAX_INT16_GROUP
+        groups = _chunk_groups(n)
+        flat = [i for grp in groups for i in grp]
+        assert flat == list(range(n))  # exact contiguous partition
+        assert all(len(grp) == c for grp in groups)
+    import pytest
+
+    with pytest.raises(ValueError):
+        _chunk_size(0)
+
+
+def test_overflow_guard_tuple_axis_raises_with_limit_named():
+    """A tuple axis name cannot select chunk leaders, so a known group past
+    the limit must fail loudly — naming the 258 bound — rather than wrap."""
+    import pytest
+
+    from repro.train.compression import _exact_wire_sum
+
+    with pytest.raises(ValueError, match="258"):
+        _exact_wire_sum(jnp.ones((4,), jnp.float32), ("node", "device"), 300)
+
+
+def test_naive_int16_wraps_past_limit_chunked_stays_exact():
+    """Numpy emulation of the wire at group size 300: every member sends
+    the extreme payload 127.  The flat int16 sum wraps (the PR-8 bug); the
+    chunked two-stage partials each stay within int16 range and the int32
+    combine recovers the exact total."""
+    from repro.train.compression import _chunk_groups, _chunk_size
+
+    group, payload = 300, 127
+    q = np.full((group,), payload, np.int16)
+    true_total = group * payload                      # 38100 > 32767
+    wrapped = q.sum(dtype=np.int16)                   # emulated int16 wire
+    assert int(wrapped) != true_total                 # silent wrap reproduced
+    c = _chunk_size(group)
+    partials = [
+        q[grp].sum(dtype=np.int16) for grp in _chunk_groups(group)
+    ]
+    assert all(abs(int(p)) <= 32767 for p in partials)
+    assert all(int(p) == c * payload for p in partials)  # stage 1 exact
+    assert sum(int(p) for p in partials) == true_total   # stage 2 (int32)
+
+
+WIRE_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np, jax, jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.train.compression import compressed_psum_ef
+
+mesh = Mesh(np.array(jax.devices()[:4]), ("node",))
+rng = np.random.default_rng(0)
+g = jnp.asarray(rng.normal(size=(4, 37)).astype(np.float32))
+e = jnp.asarray(rng.normal(scale=1e-3, size=(4, 37)).astype(np.float32))
+
+def run(**kw):
+    f = shard_map(lambda g, e: compressed_psum_ef(g, e, "node", **kw),
+                  mesh=mesh, in_specs=(P("node"), P("node")),
+                  out_specs=(P("node"), P("node")))
+    gh, eo = f(g, e)
+    return np.asarray(gh), np.asarray(eo)
+
+flat16 = run(axis_size=4)               # flat int16 wire (4 <= 258)
+variants = {
+    "chunk2": run(axis_size=4, max_group=2),  # forced two-stage reduction
+    "chunk1": run(axis_size=4, max_group=1),  # degenerate chunk -> int32
+    "nohint": run(),                          # unknown size -> int32
+}
+for name, (gh, eo) in variants.items():
+    assert np.array_equal(gh, flat16[0]), name
+    assert np.array_equal(eo, flat16[1]), name
+print("WIRE_OK")
+"""
+
+
+def test_wire_strategies_bitwise_equal_on_4_device_mesh():
+    """Every exact wire strategy (flat int16, forced chunked two-stage,
+    degenerate chunk, no-hint int32) computes the identical integer total,
+    so g_hat and the EF residual are bitwise equal across all of them.
+    Subprocess: the forced 4-device mesh needs XLA_FLAGS before the first
+    jax import."""
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", WIRE_SCRIPT], env=env,
+        capture_output=True, text=True, timeout=300,
+    )
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "WIRE_OK" in out.stdout

@@ -203,6 +203,51 @@ def test_bench_multihost_trajectory_append_and_cap(tmp_path):
     assert [r["i"] for r in out["runs"]] == [-1]
 
 
+def test_fetch_batch_materialises_only_local_ranks():
+    """Host-collate satellite: ``Trainer._fetch_batch`` fetches molecules
+    only for ranks the engine declares process-local; non-local ranks get
+    an empty placeholder the engine's collate never reads."""
+    from types import SimpleNamespace
+
+    fetched = []
+    captured = {}
+
+    def collate(mols_per_rank, bin_shape):
+        captured["mols"] = mols_per_rank
+        captured["shape"] = bin_shape
+        return "batch"
+
+    me = SimpleNamespace(
+        dataset=SimpleNamespace(get=lambda i: fetched.append(i) or f"m{i}"),
+        engine=SimpleNamespace(local_rank_range=range(2, 4), collate=collate),
+        bin_shape="shape",
+    )
+    rank_bins = [[0, 1], [2], [3, 4], [5]]
+    assert Trainer._fetch_batch(me, rank_bins) == "batch"
+    assert captured["mols"] == [[], [], ["m3", "m4"], ["m5"]]
+    assert captured["shape"] == "shape"
+    assert sorted(fetched) == [3, 4, 5]  # rank 0/1 graphs never touched
+
+    # engines without the property (third-party) keep the legacy behaviour:
+    # every rank materialised
+    fetched.clear()
+    del me.engine.local_rank_range
+    Trainer._fetch_batch(me, rank_bins)
+    assert sorted(fetched) == [0, 1, 2, 3, 4, 5]
+    assert captured["mols"] == [["m0", "m1"], ["m2"], ["m3", "m4"], ["m5"]]
+
+
+def test_engines_expose_full_local_rank_range_single_process():
+    """Single-process engines (and a 1-process MultiHostEngine) own every
+    rank — the sparse path degenerates to the legacy one exactly."""
+    from repro.train.train_loop import Trainer as _Tr
+
+    ds = SyntheticCFMDataset(8, seed=0, max_atoms=16)
+    tr = _Tr(TINY, TrainerConfig(capacity=48, edge_factor=24, max_graphs=8,
+                                 n_ranks=1, ckpt_dir=None), ds, seed=0)
+    assert tr.engine.local_rank_range == range(1)
+
+
 # ---------------------------------------------------------------------------
 # slow: emulated pod in ONE jax process (4 forced devices, 2D mesh)
 # ---------------------------------------------------------------------------
@@ -316,6 +361,25 @@ POD_WORKER = textwrap.dedent("""\
                     jax.tree_util.tree_flatten_with_path(tr.params)[0]}
             np.savez(os.path.join(out_dir, f"params_{tag}.npz"), **flat,
                      losses=np.asarray([h["loss"] for h in out["history"]]))
+    # sparse host collate (only this process's ranks materialised) must be
+    # bitwise-identical to the legacy path that built every rank's molecule
+    # list and let collate slice — the engine only ever reads the local rows
+    tcfg = TrainerConfig(capacity=128, edge_factor=24, max_graphs=16,
+                         n_ranks=4, n_nodes=2, engine="multihost")
+    tr = Trainer(TINY, tcfg, ds, seed=0)
+    rank_bins = next(iter(tr.sampler.step_iter(tr.sampler_state)))
+    lo = jax.process_index() * tr.engine.devices_per_node
+    local = tr.engine.local_rank_range
+    assert local == range(lo, lo + tr.engine.devices_per_node), local
+    batch_sparse, _ = tr._fetch_batch(rank_bins)
+    batch_full, _ = tr.engine.collate(
+        [[ds.get(i) for i in b] for b in rank_bins], tr.bin_shape)
+    for a, b in zip(jax.tree.leaves(batch_sparse), jax.tree.leaves(batch_full)):
+        sa = [np.asarray(s.data) for s in a.addressable_shards]
+        sb = [np.asarray(s.data) for s in b.addressable_shards]
+        assert len(sa) == len(sb) > 0
+        for x, y in zip(sa, sb):
+            assert np.array_equal(x, y), "sparse collate diverged"
     print(f"proc {jax.process_index()} done", flush=True)
 """)
 
