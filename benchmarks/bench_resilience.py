@@ -1,0 +1,289 @@
+"""Fault-tolerance benchmark: supervised pod recovery per fault class.
+
+    PYTHONPATH=src python -m benchmarks.bench_resilience --quick \
+        --json BENCH_resilience.json
+
+Drives :class:`repro.resilience.PodSupervisor` over a 2-process drill pod
+(lightweight children: heartbeat loop + real ``save_checkpoint`` /
+``restore_checkpoint``, no model) and injects one deterministic fault per
+class via ``REPRO_FAULT_PLAN``:
+
+* **crash** — a child raises at a step (nonzero exit; detected from the
+  exit code, so detection is one poll interval);
+* **hang** — a child stops beating mid-run (detected from heartbeat
+  staleness, so detection is ~the heartbeat deadline);
+* **corrupt** — a child poisons its newest committed checkpoint payload
+  and then crashes; the relaunch must *fall back* past the corrupt step
+  (SHA-256 verify) and re-commit it intact.
+
+Each class records the three numbers the supervisor exists to bound:
+**detection latency** (fault -> fatal incident), **recovery wall time**
+(kill -> first heartbeat of the relaunched world), and **steps lost**
+(work replayed because it post-dated the newest intact checkpoint).
+
+Same trajectory-file contract as ``bench_multihost``: one run appended
+per invocation, ``{"schema": 1, "runs": [...]}``, oldest first.
+``--check`` exits non-zero when a recovery invariant is violated (the CI
+``chaos-smoke`` gate); ``--incidents-sample`` copies one run's
+``incidents.jsonl`` out for artifact upload.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+import tempfile
+import textwrap
+import time
+from pathlib import Path
+
+MAX_TRAJECTORY_RUNS = 40
+
+ROOT = Path(__file__).resolve().parent.parent
+
+# Heartbeat loop + real checkpoint I/O, no jax compute: the benchmark
+# measures the supervision plane, not the training plane.  Process 0
+# checkpoints up to ``ckpt_cap`` so every relaunch resumes mid-run (a
+# resume past the last step would complete without ever beating, and the
+# recovery latency would be unmeasurable).
+CHILD = textwrap.dedent("""\
+    import json, os, sys, time
+    sys.path.insert(0, sys.argv[1])
+    cfg = json.loads(sys.argv[2])
+    import numpy as np
+    from repro.resilience.faults import FaultPlan
+    from repro.resilience.heartbeat import ENV_HEARTBEAT_DIR, HeartbeatWriter
+    from repro.train.checkpoint import (
+        latest_step, restore_checkpoint, save_checkpoint,
+    )
+
+    proc = int(os.environ["REPRO_PROCESS_ID"])
+    plan = FaultPlan.from_env()
+    hb = HeartbeatWriter(os.environ[ENV_HEARTBEAT_DIR], proc, plan=plan)
+    state = {"w": np.zeros(8, np.float32)}
+    start = 1
+    if proc == 0 and latest_step(cfg["ckpt_dir"]) is not None:
+        step0, state, _meta = restore_checkpoint(cfg["ckpt_dir"], state)
+        start = step0 + 1  # the RETURNED step: corrupt payloads fall back
+    for step in range(start, cfg["steps"] + 1):
+        time.sleep(cfg["period_s"])
+        state["w"] = state["w"] + 1.0
+        hb.beat(step)
+        plan.crash_at_step(step, process=proc)
+        plan.hang_at_step(step, process=proc)
+        if proc == 0 and step % cfg["ckpt_every"] == 0 and step <= cfg["ckpt_cap"]:
+            save_checkpoint(cfg["ckpt_dir"], step, state)
+    print("proc", proc, "done from step", start, flush=True)
+""")
+
+CKPT_EVERY = 2
+CKPT_CAP = 4  # newest commit is step 4 -> every relaunch resumes <= step 5
+
+
+def fault_classes(args) -> dict:
+    """Fault plans, keyed by class.  Crash/hang target the *peer* process
+    (proving plan stripping is not what saves the relaunch); corrupt must
+    target process 0, the checkpoint writer."""
+    return {
+        "crash": {"crash_at_step": {"step": args.fault_step, "process": 1}},
+        "hang": {"hang_at_step": {"step": args.hang_step, "process": 1}},
+        "corrupt": {
+            "corrupt_checkpoint_payload": {"step": CKPT_CAP, "process": 0},
+            "crash_at_step": {"step": args.fault_step, "process": 0},
+        },
+    }
+
+
+def run_class(name: str, plan: dict, args, work: Path) -> dict:
+    from repro.resilience import FaultPlan, PodSupervisor, SupervisorConfig
+    from repro.train.checkpoint import verify_payload
+
+    run_dir = work / name
+    ckpt_dir = run_dir / "ckpt"
+    child = work / "child.py"
+    if not child.exists():
+        child.write_text(CHILD)
+    child_cfg = {
+        "steps": args.steps, "period_s": args.period_s,
+        "ckpt_dir": str(ckpt_dir), "ckpt_every": CKPT_EVERY,
+        "ckpt_cap": CKPT_CAP,
+    }
+    sup = PodSupervisor(
+        [sys.executable, str(child), str(ROOT / "src"),
+         json.dumps(child_cfg)],
+        SupervisorConfig(
+            n_procs=2, heartbeat_deadline_s=args.deadline_s,
+            startup_grace_s=120.0, poll_s=0.05, max_restarts=2,
+            backoff_base_s=0.05, backoff_max_s=0.25, seed=0,
+        ),
+        str(run_dir),
+        fault_plan=FaultPlan.parse(plan),
+        env={"PYTHONPATH": str(ROOT / "src")},
+    )
+    t0 = time.perf_counter()
+    summary = sup.run()
+    wall = time.perf_counter() - t0
+    with open(sup.incidents_path) as f:
+        recs = [json.loads(line) for line in f if line.strip()]
+    fatal = next(r for r in recs if r["kind"] in ("crash", "hang"))
+    recovered = summary["recoveries"][0] if summary["recoveries"] else {}
+    return {
+        "class": name,
+        "ok": bool(summary["ok"]),
+        "restarts": summary["restarts"],
+        "world_size_final": summary["world_size_final"],
+        "wall_s": wall,
+        "detected_kind": fatal["kind"],
+        "detection_s": fatal["detection_s"],
+        "recovery_s": recovered.get("recovery_s"),
+        "steps_lost": recovered.get("steps_lost"),
+        "first_beat_step": recovered.get("first_beat_step"),
+        "incident_kinds": [r["kind"] for r in recs],
+        # corrupt class only: the relaunch re-commits the poisoned step
+        "ckpt_cap_intact": verify_payload(str(ckpt_dir), CKPT_CAP) is None,
+        "incidents_path": sup.incidents_path,
+    }
+
+
+def run_matrix(args) -> dict:
+    work = Path(tempfile.mkdtemp(prefix="bench_resilience_"))
+    classes = {}
+    for name, plan in fault_classes(args).items():
+        if args.classes and name not in args.classes:
+            continue
+        classes[name] = run_class(name, plan, args, work)
+    return {
+        "row": "resilience_drill",
+        "unix_time": int(time.time()),
+        "quick": bool(args.quick),
+        "n_procs": 2,
+        "steps": args.steps,
+        "period_s": args.period_s,
+        "heartbeat_deadline_s": args.deadline_s,
+        "ckpt_every": CKPT_EVERY,
+        "ckpt_cap": CKPT_CAP,
+        "classes": classes,
+    }
+
+
+def write_bench_json(row: dict, path) -> dict:
+    path = Path(path)
+    runs = []
+    if path.exists():
+        try:
+            prior = json.loads(path.read_text())
+            if prior.get("schema") == 1:
+                runs = list(prior.get("runs", []))
+        except (ValueError, AttributeError):
+            runs = []
+    # incident paths live in a tmp dir; keep the trajectory file portable
+    row = json.loads(json.dumps(row))
+    for c in row["classes"].values():
+        c.pop("incidents_path", None)
+    runs = (runs + [row])[-MAX_TRAJECTORY_RUNS:]
+    payload = {
+        "schema": 1,
+        "generated_by": "benchmarks/bench_resilience.py",
+        "runs": runs,
+    }
+    path.write_text(json.dumps(payload, indent=1) + "\n")
+    return payload
+
+
+def check_row(row: dict) -> list:
+    """CI gate: every fault class recovers once, within bounded latency."""
+    fails = []
+    deadline = row["heartbeat_deadline_s"]
+    for name, c in row["classes"].items():
+        if not c["ok"]:
+            fails.append(f"{name}: pod did not complete")
+            continue
+        if c["restarts"] != 1:
+            fails.append(f"{name}: {c['restarts']} restarts, expected 1")
+        if c["detection_s"] is None:
+            fails.append(f"{name}: no detection latency recorded")
+        elif not 0.0 <= c["detection_s"] < deadline + 15.0:
+            fails.append(f"{name}: detection {c['detection_s']:.2f}s "
+                         f"outside [0, {deadline + 15.0:.0f}s)")
+        if name == "hang" and c["detection_s"] is not None \
+                and c["detection_s"] < 0.9 * deadline:
+            fails.append(f"{name}: staleness detected at "
+                         f"{c['detection_s']:.2f}s, before the "
+                         f"{deadline:.1f}s deadline could have elapsed")
+        if c["recovery_s"] is None or not 0.0 < c["recovery_s"] < 120.0:
+            fails.append(f"{name}: recovery wall {c['recovery_s']} "
+                         f"outside (0, 120s)")
+        if c["steps_lost"] is None or not 0 <= c["steps_lost"] <= row["steps"]:
+            fails.append(f"{name}: steps_lost {c['steps_lost']} outside "
+                         f"[0, {row['steps']}]")
+        if c["incident_kinds"][-1] != "success":
+            fails.append(f"{name}: last incident is "
+                         f"{c['incident_kinds'][-1]!r}, not 'success'")
+    if "corrupt" in row["classes"]:
+        c = row["classes"]["corrupt"]
+        if c["ok"] and not c["ckpt_cap_intact"]:
+            fails.append("corrupt: poisoned checkpoint step was never "
+                         "re-committed intact by the relaunch")
+    return fails
+
+
+def main(argv=()):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--steps", type=int, default=None,
+                    help="drill steps per child (default: 8 quick, 12 full)")
+    ap.add_argument("--period-s", type=float, default=None,
+                    help="seconds per drill step (default: 0.1 quick, "
+                         "0.25 full)")
+    ap.add_argument("--deadline-s", type=float, default=2.0,
+                    help="heartbeat staleness deadline")
+    ap.add_argument("--fault-step", type=int, default=5)
+    ap.add_argument("--hang-step", type=int, default=3)
+    ap.add_argument("--classes", default=None,
+                    help="comma-separated subset of crash,hang,corrupt")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI tier: short drills")
+    ap.add_argument("--json", default=None, help="trajectory file to append")
+    ap.add_argument("--check", action="store_true",
+                    help="exit non-zero if a recovery invariant fails "
+                         "(CI chaos-smoke gate)")
+    ap.add_argument("--incidents-sample", default=None,
+                    help="copy one run's incidents.jsonl here (CI artifact)")
+    args = ap.parse_args(argv or None)
+    if args.steps is None:
+        args.steps = 8 if args.quick else 12
+    if args.period_s is None:
+        args.period_s = 0.1 if args.quick else 0.25
+    args.classes = (
+        [c.strip() for c in args.classes.split(",") if c.strip()]
+        if args.classes else None
+    )
+
+    row = run_matrix(args)
+    for name, c in row["classes"].items():
+        det = f"{c['detection_s']:.2f}s" if c["detection_s"] is not None else "-"
+        rec = f"{c['recovery_s']:.2f}s" if c["recovery_s"] is not None else "-"
+        print(
+            f"[resilience] {name:8s} detected as {c['detected_kind']:5s} in "
+            f"{det}, recovered in {rec}, steps lost "
+            f"{c['steps_lost']}, total {c['wall_s']:.1f}s "
+            f"({' -> '.join(c['incident_kinds'])})"
+        )
+    if args.incidents_sample:
+        src = next(iter(row["classes"].values()))["incidents_path"]
+        shutil.copyfile(src, args.incidents_sample)
+        print(f"[resilience] incidents sample -> {args.incidents_sample}")
+    if args.json:
+        write_bench_json(row, args.json)
+        print(f"[resilience] appended to {args.json}")
+    if args.check:
+        fails = check_row(row)
+        for f in fails:
+            print(f"[resilience] FAIL: {f}")
+        return 1 if fails else 0
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

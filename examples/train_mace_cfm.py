@@ -125,6 +125,14 @@ def main():
     ap.add_argument("--elastic", action="store_true",
                     help="allow resuming a checkpoint written at a different "
                          "rank count (implied by --rescale-at)")
+    ap.add_argument("--heartbeat-dir", default=None,
+                    help="write a per-step heartbeat file here (falls back "
+                         "to env REPRO_HEARTBEAT_DIR — set by a "
+                         "PodSupervisor; see repro.resilience)")
+    ap.add_argument("--step-deadline-s", type=float, default=None,
+                    help="StepWatchdog wall-clock deadline per step: a hung "
+                         "step (stalled collate/collective) exits 44 so a "
+                         "supervisor sees a crash, not a silent stall")
     args = ap.parse_args()
 
     # XLA device count must be pinned before the first jax import.
@@ -164,6 +172,8 @@ def main():
         compress_grads=args.compress_grads, prefetch=args.prefetch,
         precision=args.precision,
         elastic=args.elastic or bool(schedule),
+        heartbeat_dir=args.heartbeat_dir,
+        step_deadline_s=args.step_deadline_s,
     )
     if schedule:
         tr = ElasticTrainer(cfg, tcfg, ds, sampler=args.sampler, seed=0,

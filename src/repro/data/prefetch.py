@@ -55,7 +55,7 @@ import time
 import weakref
 from typing import Any, Callable, Iterable, Iterator, Optional
 
-__all__ = ["PrefetchItem", "PrefetchPipeline"]
+__all__ = ["PrefetchItem", "PrefetchPipeline", "ProducerStalled"]
 
 # producer poll period for stop-flag re-checks while the queue is full
 _PUT_POLL_S = 0.05
@@ -86,12 +86,22 @@ class _EndOfStream:
 _END = _EndOfStream()
 
 
+class ProducerStalled(RuntimeError):
+    """The prefetch producer has been stuck inside one ``fetch`` call for
+    longer than ``stall_deadline_s`` — alive, but making no progress (a
+    hung data source, a deadlocked collate)."""
+
+
 def _produce(items: Iterator[Any], fetch: Callable[[Any], Any],
-             q: "queue.Queue", stop: threading.Event) -> None:
+             q: "queue.Queue", stop: threading.Event,
+             progress: dict) -> None:
     """Producer loop.  A module-level function on purpose: the thread must
     hold no reference to the ``PrefetchPipeline`` itself, so an abandoned
     pipeline (no ``close()``) stays garbage-collectable and its
-    ``weakref.finalize`` can stop this loop."""
+    ``weakref.finalize`` can stop this loop.  ``progress`` (a plain dict,
+    also pipeline-reference-free) is this thread's liveness record: state
+    transitions (idle / fetch) are stamped with a monotonic time so the
+    consumer can tell a *stalled* fetch from a merely slow one."""
 
     def put(payload: Any) -> bool:
         # blocking put that aborts (False) once the stop flag is raised
@@ -107,14 +117,18 @@ def _produce(items: Iterator[Any], fetch: Callable[[Any], Any],
         for i, item in enumerate(items):
             if stop.is_set():
                 return
+            progress.update(state="fetch", index=i, t=time.monotonic())
             t0 = time.perf_counter()
             batch = fetch(item)
             dt = time.perf_counter() - t0
+            progress.update(state="idle", index=i, t=time.monotonic())
             if not put(PrefetchItem(i, item, batch, dt, 0.0)):
                 return
     except BaseException as exc:  # propagate into the consumer
+        progress.update(state="idle", t=time.monotonic())
         put(exc)
     else:
+        progress.update(state="idle", t=time.monotonic())
         put(_END)
 
 
@@ -135,6 +149,15 @@ class PrefetchPipeline:
     depth:
         Number of finished batches allowed in flight ahead of the consumer.
         ``0`` = synchronous inline fetch (no thread).
+    stall_deadline_s:
+        When set, a producer that has been inside ONE ``fetch`` call for
+        longer than this is reported as *stalled* (alive but wedged):
+        :meth:`stalled` returns a diagnosis, :meth:`raise_pending` raises
+        :class:`ProducerStalled`, and :meth:`close` gives up joining after
+        the deadline — logging, capturing the stall on :attr:`error`, and
+        abandoning the daemon thread instead of blocking forever on a
+        fetch that will never return.  ``None`` (default) keeps the
+        previous join-forever behaviour.
 
     Use as a context manager (or call :meth:`close`); iterating yields
     :class:`PrefetchItem` per step.
@@ -145,10 +168,17 @@ class PrefetchPipeline:
         items: Iterable[Any],
         fetch: Callable[[Any], Any],
         depth: int = 1,
+        *,
+        stall_deadline_s: Optional[float] = None,
     ):
         if depth < 0:
             raise ValueError(f"prefetch depth must be >= 0, got {depth}")
+        if stall_deadline_s is not None and stall_deadline_s <= 0:
+            raise ValueError(
+                f"stall_deadline_s must be positive, got {stall_deadline_s}"
+            )
         self.depth = depth
+        self.stall_deadline_s = stall_deadline_s
         self._fetch = fetch
         self._items: Iterator[Any] = iter(items)
         self._index = 0
@@ -162,11 +192,15 @@ class PrefetchPipeline:
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self._queue: Optional["queue.Queue"] = None
+        # producer liveness record (written only by the producer thread;
+        # holds no pipeline reference so GC-finalization still works)
+        self._progress = {"state": "idle", "index": None, "t": time.monotonic()}
         if depth >= 1:
             self._queue = queue.Queue(maxsize=depth)
             self._thread = threading.Thread(
                 target=_produce,
-                args=(self._items, fetch, self._queue, self._stop),
+                args=(self._items, fetch, self._queue, self._stop,
+                      self._progress),
                 name="prefetch-collate",
                 daemon=True,
             )
@@ -225,6 +259,30 @@ class PrefetchPipeline:
 
     # ----------------------------- lifecycle ------------------------------
 
+    def stalled(self) -> Optional[str]:
+        """Diagnose a stalled producer: a live thread that has been inside
+        one ``fetch`` call for longer than ``stall_deadline_s``.  Returns a
+        human-readable diagnosis naming the stuck item, or None (healthy,
+        no deadline configured, no thread, or producer already gone)."""
+        if (
+            self.stall_deadline_s is None
+            or self._thread is None
+            or not self._thread.is_alive()
+        ):
+            return None
+        p = dict(self._progress)  # snapshot: the producer writes it live
+        if p.get("state") != "fetch":
+            return None
+        age = time.monotonic() - p["t"]
+        if age <= self.stall_deadline_s:
+            return None
+        return (
+            f"prefetch producer stalled: fetch of item {p.get('index')} "
+            f"has been running for {age:.1f}s "
+            f"(> {self.stall_deadline_s:.1f}s stall deadline) — alive but "
+            f"making no progress"
+        )
+
     def close(self) -> None:
         """Stop the producer and join it.  Idempotent; never deadlocks —
         the producer's put loop re-checks the stop flag, and the queue is
@@ -233,13 +291,27 @@ class PrefetchPipeline:
         drain half of the rescale path's drain-and-rebuild.  An in-flight
         producer *exception* is never discarded with them: it is captured
         on :attr:`error` and logged, so deliberate early exits can surface
-        it via :meth:`raise_pending`."""
+        it via :meth:`raise_pending`.
+
+        A producer wedged *inside* ``fetch`` cannot observe the stop flag;
+        with ``stall_deadline_s`` set, close() detects that (via
+        :meth:`stalled`), logs it, captures a :class:`ProducerStalled` on
+        :attr:`error`, and abandons the daemon thread rather than joining
+        forever."""
         self._stop.set()
         if self._thread is None:
             return
         while self._thread.is_alive():
             self._drain_queue()
             self._thread.join(timeout=_PUT_POLL_S)
+            msg = self.stalled()
+            if msg is not None:
+                _log.warning(
+                    "prefetch close(): %s; abandoning daemon producer", msg
+                )
+                if self.error is None:
+                    self.error = ProducerStalled(msg)
+                break
         self._thread = None
         # the producer may have finished BEFORE close() was called (e.g. it
         # enqueued its exception and exited): the queue still needs one
@@ -268,8 +340,18 @@ class PrefetchPipeline:
 
     def raise_pending(self) -> None:
         """Re-raise a producer exception that the consumer never received
-        (one drained by :meth:`close` during an early exit).  No-op when the
-        stream ended cleanly or the error already surfaced in ``__next__``."""
+        (one drained by :meth:`close` during an early exit), or raise
+        :class:`ProducerStalled` for a producer that is alive but stuck in
+        one ``fetch`` past ``stall_deadline_s`` — a stalled producer must
+        be as loud as a dead one.  No-op when the stream ended cleanly or
+        the error already surfaced in ``__next__``.  Like the dead-producer
+        path, a stall is delivered once — teardown code often calls this
+        from several unwind points and must not fail twice for one fault."""
+        msg = self.stalled()
+        if msg is not None and not self._error_delivered:
+            self.error = self.error or ProducerStalled(msg)
+            self._error_delivered = True
+            raise ProducerStalled(msg)
         if self.error is not None and not self._error_delivered:
             self._error_delivered = True
             if isinstance(self.error, StopIteration):

@@ -28,12 +28,13 @@ CLI::
 from __future__ import annotations
 
 import os
+import random
 import socket
 import subprocess
 import sys
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, Iterator, List, Optional, Sequence
 
 ENV_COORDINATOR = "REPRO_COORDINATOR"
 ENV_NUM_PROCESSES = "REPRO_NUM_PROCESSES"
@@ -56,17 +57,44 @@ def pick_free_port() -> int:
         return s.getsockname()[1]
 
 
-def coordinator_reachable(coordinator: str, timeout: float = 2.0) -> bool:
+def backoff_delays(
+    base: float = 0.05,
+    factor: float = 2.0,
+    max_s: float = 2.0,
+    jitter: float = 0.25,
+    seed: Optional[int] = None,
+) -> Iterator[float]:
+    """Infinite exponential-backoff delay sequence with multiplicative
+    jitter: ``base * factor**k``, capped at ``max_s``, each scaled by a
+    uniform factor in ``[1-jitter, 1+jitter]``.  A ``seed`` makes the
+    sequence deterministic (tests, chaos drills); shared with the pod
+    supervisor's restart backoff."""
+    rng = random.Random(seed)
+    delay = base
+    while True:
+        scale = 1.0 + jitter * (2.0 * rng.random() - 1.0) if jitter else 1.0
+        yield min(delay, max_s) * scale
+        delay = min(delay * factor, max_s)
+
+
+def coordinator_reachable(
+    coordinator: str, timeout: float = 2.0, *, backoff_seed: Optional[int] = None
+) -> bool:
     """TCP-probe the coordinator. Cheap pre-flight so a typo'd address
     fails in seconds with a clear message instead of hanging in the
     distributed runtime's own (minutes-long) connect retry loop.
 
-    Retries until ``timeout``: a refused connect returns instantly, and
-    process 0 may still be importing jax when its peers first probe."""
+    Retries with exponential backoff + jitter until ``timeout``: a refused
+    connect returns instantly, process 0 may still be importing jax when
+    its peers first probe, and the jitter keeps a pod's worth of peers from
+    hammering the coordinator in lockstep."""
     host, _, port = coordinator.rpartition(":")
     if not host or not port.isdigit():
         return False
     deadline = time.monotonic() + timeout
+    delays = backoff_delays(
+        base=0.05, factor=2.0, max_s=1.0, jitter=0.25, seed=backoff_seed
+    )
     while True:
         left = deadline - time.monotonic()
         if left <= 0:
@@ -75,7 +103,7 @@ def coordinator_reachable(coordinator: str, timeout: float = 2.0) -> bool:
             with socket.create_connection((host, int(port)), timeout=max(left, 0.1)):
                 return True
         except OSError:
-            time.sleep(min(0.25, max(left, 0.0)))
+            time.sleep(min(next(delays), max(left, 0.0)))
 
 
 def initialize_distributed(

@@ -13,10 +13,21 @@ Fault tolerance: atomic checkpoints every --ckpt-every steps; on restart the
 trainer auto-resumes (params, optimizer, EMA, sampler cursor).  Elastic
 rescale: if the restarted world size differs, Algorithm 1 re-packs bins for
 the new rank count (host-side, milliseconds).
+
+Supervised pods (``--distributed --supervised``): this process becomes a
+``PodSupervisor`` parent instead of a trainer — it spawns ``--nprocs``
+copies of this same command (minus ``--supervised``) as one jax process
+group, watches exit codes + per-step heartbeats, and on a crash or hang
+kills the group and relaunches at degraded world size from the newest
+committed checkpoint (elastic restore), within ``--max-restarts``:
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --distributed --supervised --nprocs 2 --reduced --steps 20
 """
 from __future__ import annotations
 
 import argparse
+import os
 
 
 def main() -> None:
@@ -42,7 +53,68 @@ def main() -> None:
     ap.add_argument("--n-ranks", type=int, default=None,
                     help="total data-parallel ranks (devices)")
     ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--elastic", action="store_true",
+                    help="allow restoring a checkpoint written at a "
+                         "different rank/host count (implied by "
+                         "--supervised relaunches)")
+    ap.add_argument("--supervised", action="store_true",
+                    help="run as a PodSupervisor parent: spawn --nprocs "
+                         "children of this command, monitor heartbeats + "
+                         "exit codes, restart elastically on failure")
+    ap.add_argument("--nprocs", type=int, default=2,
+                    help="supervised pod world size (parent only)")
+    ap.add_argument("--devices-per-proc", type=int, default=1,
+                    help="forced CPU devices per supervised child")
+    ap.add_argument("--max-restarts", type=int, default=3,
+                    help="supervisor restart budget before failing loudly")
+    ap.add_argument("--heartbeat-deadline-s", type=float, default=60.0,
+                    help="supervisor declares a hang when a child's newest "
+                         "heartbeat is older than this")
+    ap.add_argument("--step-deadline-s", type=float, default=None,
+                    help="in-process StepWatchdog deadline per training "
+                         "step (a hung step exits 44 for the supervisor)")
+    ap.add_argument("--run-dir", default=None,
+                    help="supervisor state dir (incidents.jsonl, heartbeats,"
+                         " child logs); default <ckpt-dir>/supervisor")
     args = ap.parse_args()
+
+    if args.supervised:
+        import sys
+
+        from repro.resilience import FaultPlan, PodSupervisor, SupervisorConfig
+
+        # children run THIS command minus --supervised (plus --distributed
+        # and --elastic: a degraded relaunch is a cross-host-count restore)
+        child = [sys.executable, "-m", "repro.launch.train"] + [
+            a for a in sys.argv[1:] if a != "--supervised"
+        ]
+        for needed in ("--distributed", "--elastic"):
+            if needed not in child:
+                child.append(needed)
+        run_dir = args.run_dir or os.path.join(args.ckpt_dir, "supervisor")
+        sup = PodSupervisor(
+            child,
+            SupervisorConfig(
+                n_procs=args.nprocs,
+                devices_per_proc=args.devices_per_proc,
+                heartbeat_deadline_s=args.heartbeat_deadline_s,
+                max_restarts=args.max_restarts,
+            ),
+            run_dir,
+            # adopt a chaos plan armed on the parent (REPRO_FAULT_PLAN):
+            # the supervisor arms it for attempt 0 and strips it from
+            # relaunches, so an injected fault can't re-fire forever
+            fault_plan=FaultPlan.from_env(),
+            env={"PYTHONPATH": os.environ.get("PYTHONPATH", "")},
+        )
+        summary = sup.run()
+        print(
+            f"supervised pod done: attempts={summary['attempts']} "
+            f"restarts={summary['restarts']} "
+            f"final world={summary['world_size_final']} "
+            f"incidents={summary['incidents_path']}"
+        )
+        return
 
     if args.distributed:
         from repro.launch.multihost import initialize_distributed
@@ -83,7 +155,8 @@ def main() -> None:
         tcfg = TrainerConfig(
             capacity=cap, edge_factor=32, max_graphs=max(16, cap // 8),
             ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
-            compress_grads=args.compress_grads, **extra,
+            compress_grads=args.compress_grads, elastic=args.elastic,
+            step_deadline_s=args.step_deadline_s, **extra,
         )
         tr = Trainer(cfg, tcfg, ds, seed=0)
         if tr.maybe_restore():

@@ -52,6 +52,7 @@ from .buckets import (  # noqa: F401
 from .engine import ServeEngine, make_serve_engine, resolve_serve_config  # noqa: F401
 from .server import (  # noqa: F401
     GraphServer,
+    RequestTimeout,
     ServeConfig,
     ServeResult,
     ServerClosed,
@@ -65,6 +66,7 @@ __all__ = [
     "ServeEngine",
     "ServerClosed",
     "ServerSaturated",
+    "RequestTimeout",
     "RequestTooLarge",
     "bucket_ladder",
     "bucket_key",

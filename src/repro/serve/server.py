@@ -34,7 +34,7 @@ import logging
 import queue
 import threading
 import time
-from concurrent.futures import Future
+from concurrent.futures import Future, InvalidStateError
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -42,6 +42,7 @@ import numpy as np
 from repro.core.mace import MaceConfig
 from repro.data.collate import BinShape
 from repro.data.molecules import Molecule
+from repro.resilience.faults import FaultPlan
 
 from .buckets import (
     RequestTooLarge,
@@ -57,6 +58,7 @@ __all__ = [
     "GraphServer",
     "ServerClosed",
     "ServerSaturated",
+    "RequestTimeout",
     "RequestTooLarge",
 ]
 
@@ -71,6 +73,14 @@ class ServerClosed(RuntimeError):
 
 class ServerSaturated(RuntimeError):
     """The bounded request queue stayed full past the submit timeout."""
+
+
+class RequestTimeout(RuntimeError):
+    """A request's per-request deadline (``submit(timeout_s=...)``) expired
+    before a worker produced its result — the future fails instead of
+    waiting forever on a wedged fleet, and the slot it held is reclaimed
+    (expired requests are dropped from waves before packing and skipped at
+    result routing)."""
 
 
 @dataclasses.dataclass
@@ -108,6 +118,7 @@ class _Request:
     mol: Molecule
     future: Future
     t_submit: float
+    deadline: Optional[float] = None   # perf_counter domain (t_submit + timeout_s)
 
 
 @dataclasses.dataclass
@@ -188,6 +199,11 @@ class GraphServer:
         self._wids = itertools.count()
         self._inflight: Dict[int, _PackedBin] = {}
         self._fault_inject: set = set()        # worker ids to fail (tests/drills)
+        self._timed: Dict[int, _Request] = {}  # requests with a deadline
+        # env-armable chaos (REPRO_FAULT_PLAN serve_worker_fault): the
+        # first bin served after startup raises, same path as
+        # inject_worker_fault but drivable from outside the process
+        self._env_fault_pending = FaultPlan.from_env().serve_worker_fault()
 
         # telemetry
         self._latencies: List[float] = []
@@ -286,15 +302,27 @@ class GraphServer:
     # ------------------------------- client --------------------------------
 
     def submit(
-        self, mol: Molecule, *, timeout: Optional[float] = None
+        self,
+        mol: Molecule,
+        *,
+        timeout: Optional[float] = None,
+        timeout_s: Optional[float] = None,
     ) -> Future:
         """Enqueue one graph; returns a future of :class:`ServeResult`.
 
         Raises :class:`RequestTooLarge` immediately when no bucket can hold
         the graph even alone, and :class:`ServerSaturated` when the bounded
-        queue stays full past ``timeout`` (backpressure, not buffering)."""
+        queue stays full past ``timeout`` (backpressure, not buffering).
+
+        ``timeout_s`` is a per-*request* deadline: if no worker has resolved
+        the future within ``timeout_s`` of submission, it fails with
+        :class:`RequestTimeout` (swept by the batcher thread each poll) and
+        its slot is reclaimed — instead of the caller blocking forever when
+        the fleet is wedged."""
         if self._closed:
             raise ServerClosed("server is closed")
+        if timeout_s is not None and timeout_s <= 0:
+            raise ValueError(f"timeout_s must be positive, got {timeout_s}")
         largest = self.buckets[-1]
         if mol.n_atoms > largest.max_nodes or mol.n_edges > largest.max_edges:
             raise RequestTooLarge(
@@ -302,7 +330,11 @@ class GraphServer:
                 f"the largest bucket {bucket_key(largest)}"
             )
         fut: Future = Future()
-        req = _Request(next(self._req_ids), mol, fut, time.perf_counter())
+        now = time.perf_counter()
+        req = _Request(
+            next(self._req_ids), mol, fut, now,
+            deadline=None if timeout_s is None else now + timeout_s,
+        )
         try:
             self._requests.put(req, timeout=timeout)
         except queue.Full:
@@ -312,20 +344,62 @@ class GraphServer:
             ) from None
         with self._lock:
             self._n_submitted += 1
+            if req.deadline is not None:
+                self._timed[req.req_id] = req
             if self._t_first_submit is None:
                 self._t_first_submit = time.perf_counter()
         return fut
 
     def submit_many(
-        self, mols: Sequence[Molecule], *, timeout: Optional[float] = None
+        self,
+        mols: Sequence[Molecule],
+        *,
+        timeout: Optional[float] = None,
+        timeout_s: Optional[float] = None,
     ) -> List[Future]:
-        return [self.submit(m, timeout=timeout) for m in mols]
+        return [self.submit(m, timeout=timeout, timeout_s=timeout_s) for m in mols]
 
     # ------------------------------- batcher -------------------------------
+
+    def _sweep_timeouts(self) -> int:
+        """Expire deadline'd requests whose time is up: fail their futures
+        with :class:`RequestTimeout`.  Runs on the batcher thread each poll,
+        so requests expire whether they sit in the request queue, a packed
+        bin, or a wedged worker's in-flight bin.  Returns the number
+        expired."""
+        now = time.perf_counter()
+        with self._lock:
+            done = [
+                rid for rid, r in self._timed.items() if r.future.done()
+            ]
+            for rid in done:
+                del self._timed[rid]
+            expired = [
+                r for r in self._timed.values() if now > r.deadline
+            ]
+            for r in expired:
+                del self._timed[r.req_id]
+        n = 0
+        for r in expired:
+            try:
+                r.future.set_exception(RequestTimeout(
+                    f"request {r.req_id} ({r.mol.n_atoms} atoms) unserved "
+                    f"after {now - r.t_submit:.2f}s "
+                    f"(timeout_s={r.deadline - r.t_submit:.2f})"
+                ))
+                n += 1
+            except InvalidStateError:
+                pass  # a worker resolved it in the race window — it won
+        if n:
+            with self._lock:
+                self._n_failed += n
+            log.warning("serve: %d request(s) timed out", n)
+        return n
 
     def _batcher_loop(self) -> None:
         """Gather waves of requests and pack them onto the bucket ladder."""
         while not self._stop.is_set():
+            self._sweep_timeouts()
             try:
                 first = self._requests.get(timeout=_POLL_S)
             except queue.Empty:
@@ -345,6 +419,11 @@ class GraphServer:
             self._pack_wave(wave)
 
     def _pack_wave(self, wave: List[_Request]) -> None:
+        # reclaim slots of requests that already expired (RequestTimeout)
+        # or were cancelled: they must not consume pack or forward work
+        wave = [r for r in wave if not r.future.done()]
+        if not wave:
+            return
         sizes = [r.mol.n_atoms for r in wave]
         edges = [r.mol.n_edges for r in wave]
         try:
@@ -383,6 +462,12 @@ class GraphServer:
                     raise RuntimeError(
                         f"injected fault in worker {w.wid}"
                     )
+                if self._env_fault_pending:
+                    self._env_fault_pending = False
+                    raise RuntimeError(
+                        f"injected fault (REPRO_FAULT_PLAN "
+                        f"serve_worker_fault) in worker {w.wid}"
+                    )
                 self._serve_bin(w, item)
                 with self._lock:
                     self._inflight.pop(w.wid, None)
@@ -419,6 +504,7 @@ class GraphServer:
         t_done = time.perf_counter()
         key = bucket_key(pbin.bucket)
         n_off = 0
+        delivered: List[_Request] = []
         for g, r in enumerate(pbin.requests):
             n = r.mol.n_atoms
             res = ServeResult(
@@ -430,19 +516,28 @@ class GraphServer:
                 n_copacked=len(pbin.requests),
             )
             n_off += n
-            r.future.set_result(res)
+            # a request may have timed out (RequestTimeout) or been
+            # cancelled while this bin was queued or computing — its
+            # future is already resolved, and an unguarded set_result
+            # would raise InvalidStateError and kill the worker
+            try:
+                if not r.future.done():
+                    r.future.set_result(res)
+                    delivered.append(r)
+            except InvalidStateError:
+                pass  # the timeout sweeper resolved it in the race window
         with self._lock:
             w.served_bins += 1
-            w.served_graphs += len(pbin.requests)
+            w.served_graphs += len(delivered)
             w.busy_s += t_done - t0
-            self._n_served += len(pbin.requests)
+            self._n_served += len(delivered)
             self._t_last_result = t_done
             self._latencies.extend(
-                t_done - r.t_submit for r in pbin.requests
+                t_done - r.t_submit for r in delivered
             )
             self._bucket_bins[key] = self._bucket_bins.get(key, 0) + 1
             self._bucket_graphs[key] = (
-                self._bucket_graphs.get(key, 0) + len(pbin.requests)
+                self._bucket_graphs.get(key, 0) + len(delivered)
             )
 
     # --------------------------- fleet management --------------------------

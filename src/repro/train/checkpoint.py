@@ -23,13 +23,18 @@ asserted in tests/test_rescale.py).
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
-from typing import Any, Callable, Dict, Optional, Tuple
+import sys
+import warnings
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+from ..resilience.faults import FaultPlan, corrupt_file
 
 PyTree = Any
 _SEP = "/"
@@ -82,6 +87,14 @@ def _fsync_dir(path: str) -> None:
         os.close(fd)
 
 
+def _sha256_file(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
 def _write_shard(tmp: str, process_index: int, state: PyTree) -> None:
     """One process's array shard, fsynced before anyone may commit."""
     flat = _flatten(state)
@@ -102,10 +115,23 @@ def _commit(
     """meta + COMMITTED marker + atomic rename.  Durability contract:
     every payload byte must be on disk BEFORE the COMMITTED marker exists
     — a marker that can outlive its payload after a crash would surface a
-    "committed" checkpoint with truncated shards."""
+    "committed" checkpoint with truncated shards.  ``meta.json`` records a
+    SHA-256 per payload file so restore can detect post-commit corruption
+    (bit rot, torn storage) and fall back to an earlier committed step."""
+    checksums = {
+        name: _sha256_file(os.path.join(tmp, name))
+        for name in sorted(os.listdir(tmp))
+        if name.startswith("arrays.") and name.endswith(".npz")
+    }
     with open(os.path.join(tmp, "meta.json"), "w") as f:
         json.dump(
-            {"step": step, "process_count": process_count, **(meta or {})}, f
+            {
+                "step": step,
+                "process_count": process_count,
+                "checksums": checksums,
+                **(meta or {}),
+            },
+            f,
         )
         f.flush()
         os.fsync(f.fileno())
@@ -157,6 +183,7 @@ def save_checkpoint(
         os.makedirs(tmp)
         _write_shard(tmp, process_index, state)
         _commit(directory, tmp, final, step, meta, process_count=1)
+        _corrupt_if_armed(final, step, process_index)
         _gc(directory, keep, process_index=process_index)
         return final
 
@@ -179,7 +206,24 @@ def save_checkpoint(
     # nobody returns (and possibly starts the next step's checkpoint, or
     # restores) until the commit is visible everywhere
     barrier(f"ckpt-commit-{step}")
+    _corrupt_if_armed(final, step, process_index)
     return final
+
+
+def _corrupt_if_armed(final: str, step: int, process_index: int) -> None:
+    """``corrupt_checkpoint_payload`` chaos site: flips bytes in this
+    process's just-committed shard so restore-side checksum verification
+    has a real (checkpoint-looks-committed-but-is-garbage) fault to catch."""
+    plan = FaultPlan.from_env()
+    if not plan.corrupt_checkpoint_payload(step, process=process_index):
+        return
+    target = os.path.join(final, f"arrays.{process_index}.npz")
+    n = corrupt_file(target)
+    print(
+        f"fault injection: corrupt_checkpoint_payload flipped {n} bytes "
+        f"in {target} (step {step})",
+        file=sys.stderr, flush=True,
+    )
 
 
 def _gc(
@@ -253,6 +297,33 @@ def read_meta(
         return step, json.load(f)
 
 
+def verify_payload(
+    directory: str, step: int, *, process_index: int = 0
+) -> Optional[str]:
+    """Check this process's payload file of a committed step against the
+    SHA-256 recorded in ``meta.json`` at commit time.  Returns None when
+    intact (or when the checkpoint predates checksums), else a message
+    naming the corrupt file."""
+    path = os.path.join(directory, f"step_{step:010d}")
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    name = f"arrays.{process_index}.npz"
+    recorded = (meta.get("checksums") or {}).get(name)
+    if recorded is None:
+        return None
+    target = os.path.join(path, name)
+    try:
+        actual = _sha256_file(target)
+    except OSError as exc:
+        return f"checkpoint step {step}: cannot read {target}: {exc}"
+    if actual != recorded:
+        return (
+            f"checkpoint step {step}: payload {target} is corrupt "
+            f"(sha256 {actual[:12]}… != committed {recorded[:12]}…)"
+        )
+    return None
+
+
 def restore_checkpoint(
     directory: str,
     template: PyTree,
@@ -268,21 +339,50 @@ def restore_checkpoint(
     N shard files with process-local EF state, so silently reading it from
     a different world size would mis-restore — elastic readers (who re-init
     rank-local state and read the replicated shard 0) pass ``None``.
+
+    Payload integrity: each candidate's shard file is verified against the
+    SHA-256 committed in its ``meta.json``.  On mismatch the restore warns
+    (naming the corrupt file) and **falls back to the previous committed
+    step** — the newest *intact* checkpoint wins; only when every
+    committed step is corrupt does it raise.  Callers must therefore use
+    the *returned* step/meta, not the step they asked for.
     """
-    step = step if step is not None else latest_step(directory)
-    if step is None:
+    committed = sorted(_committed_steps(directory), reverse=True)
+    if step is not None:
+        candidates = [s for s in committed if s <= step]
+        if step not in committed:
+            candidates = [step] + candidates  # explicit step: try, fail loud
+    else:
+        candidates = committed
+    if not candidates:
         raise FileNotFoundError(f"no committed checkpoint in {directory}")
-    path = os.path.join(directory, f"step_{step:010d}")
-    with open(os.path.join(path, "meta.json")) as f:
-        meta = json.load(f)
-    ckpt_procs = int(meta.get("process_count", 1))
-    if expect_process_count is not None and ckpt_procs != expect_process_count:
-        raise ValueError(
-            f"checkpoint step {step} in {directory} was written by "
-            f"{ckpt_procs} process(es) but this reader expects "
-            f"{expect_process_count}; restore with TrainerConfig.elastic=True "
-            "to rescale across host counts (losing a host is a rescale event)"
-        )
-    with np.load(os.path.join(path, f"arrays.{process_index}.npz")) as z:
-        flat = {k: z[k] for k in z.files}
-    return step, _unflatten(template, flat), meta
+
+    corrupt: List[str] = []
+    for s in candidates:
+        problem = verify_payload(directory, s, process_index=process_index)
+        if problem is not None:
+            warnings.warn(
+                f"{problem}; falling back to the previous committed step",
+                RuntimeWarning,
+            )
+            print(f"restore_checkpoint: {problem}", file=sys.stderr, flush=True)
+            corrupt.append(problem)
+            continue
+        path = os.path.join(directory, f"step_{s:010d}")
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+        ckpt_procs = int(meta.get("process_count", 1))
+        if expect_process_count is not None and ckpt_procs != expect_process_count:
+            raise ValueError(
+                f"checkpoint step {s} in {directory} was written by "
+                f"{ckpt_procs} process(es) but this reader expects "
+                f"{expect_process_count}; restore with TrainerConfig.elastic=True "
+                "to rescale across host counts (losing a host is a rescale event)"
+            )
+        with np.load(os.path.join(path, f"arrays.{process_index}.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+        return s, _unflatten(template, flat), meta
+    raise RuntimeError(
+        f"every committed checkpoint in {directory} failed payload "
+        f"verification: {'; '.join(corrupt)}"
+    )

@@ -46,6 +46,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import os
 import time
 from typing import Any, Dict, List, Optional
 
@@ -53,6 +54,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.mace import MaceConfig, init_mace
+from repro.resilience.faults import FaultPlan
+from repro.resilience.heartbeat import (
+    ENV_HEARTBEAT_DIR,
+    HeartbeatWriter,
+    StepWatchdog,
+)
 from repro.data.collate import BinShape
 from repro.kernels import autotune
 from repro.data.molecules import SyntheticCFMDataset
@@ -119,6 +126,13 @@ class TrainerConfig:
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 50
     log_every: int = 10
+    # resilience wiring: directory for per-step heartbeat files (falls back
+    # to the REPRO_HEARTBEAT_DIR env var a PodSupervisor sets for its
+    # children), and an optional per-step wall-clock deadline — a step
+    # exceeding it trips the StepWatchdog, converting a silent collective
+    # stall into a loud, supervisor-visible failure (exit 44 by default)
+    heartbeat_dir: Optional[str] = None
+    step_deadline_s: Optional[float] = None
 
 
 class Trainer:
@@ -231,6 +245,25 @@ class Trainer:
         # telemetry of engines closed by past rescales (oldest first); the
         # whole-run view is ``self.telemetry``
         self.telemetry_generations: List[Any] = []
+        # resilience: the env-armed chaos plan (empty when REPRO_FAULT_PLAN
+        # is unset), the per-step liveness signal a PodSupervisor polls,
+        # and the in-process step watchdog
+        self.fault_plan = FaultPlan.from_env()
+        hb_dir = tcfg.heartbeat_dir or os.environ.get(ENV_HEARTBEAT_DIR)
+        self.heartbeat = (
+            HeartbeatWriter(
+                hb_dir, self._process_index, plan=self.fault_plan
+            )
+            if hb_dir
+            else None
+        )
+        self.watchdog = (
+            StepWatchdog(tcfg.step_deadline_s) if tcfg.step_deadline_s else None
+        )
+
+    @property
+    def _process_index(self) -> int:
+        return int(getattr(self.engine, "process_index", 0))
 
     @property
     def telemetry(self):
@@ -325,6 +358,10 @@ class Trainer:
             d, template, step=step, process_index=read_proc,
             expect_process_count=None if self.tcfg.elastic else eng_procs,
         )
+        # restore may have fallen back to an older committed step (payload
+        # checksum mismatch) — everything below must track the step/meta it
+        # actually RETURNED, not the newest step read_meta suggested
+        ckpt_ranks = int(meta.get("n_ranks", ckpt_ranks))
         self.params = self._place(state["params"])
         self.opt_state = self._place(state["opt_state"])
         self.ema_params = self._place(state["ema"])
@@ -430,7 +467,15 @@ class Trainer:
         are materialised — in a multi-process run every process used to
         build all ranks' molecule lists and let collate slice its node's
         rows; non-local ranks now get an empty placeholder the engine's
-        collate never touches, so host collate work is O(local ranks)."""
+        collate never touches, so host collate work is O(local ranks).
+
+        Chaos sites: ``slow_collate`` (every call) and ``hang_at_step``
+        (keyed to the live global step — exact with inline collate, ~1
+        step of slack under prefetch lookahead) fire here, on the thread
+        the pipeline runs collation on."""
+        proc = self._process_index
+        self.fault_plan.slow_collate(process=proc)
+        self.fault_plan.hang_at_step(self.global_step, process=proc)
         local = getattr(self.engine, "local_rank_range", range(len(rank_bins)))
         mols_per_rank = [
             [self.dataset.get(i) for i in b] if r in local else []
@@ -481,38 +526,58 @@ class Trainer:
                 self._fetch_batch,
                 depth=self.tcfg.prefetch,
             ) as pipeline:
-                for item in pipeline:
-                    batch, host_stats = item.batch
-                    # the step scalar must live on the engine's mesh too: a
-                    # jitted multi-process step rejects inputs committed to
-                    # a single local device (identity for the oracle)
-                    step_arr = self._place(jnp.asarray(self.global_step))
-                    self.params, self.opt_state, self.ef_state, metrics = (
-                        self.engine.step(
-                            self.params, self.opt_state, self.ef_state, batch,
-                            step_arr,
+                # the watchdog deadline spans the whole step: the wait on
+                # the (possibly hung) collate producer AND the collective
+                # engine step — armed before the pipeline wait, re-armed
+                # after each completed step, disarmed on every exit path
+                if self.watchdog is not None:
+                    self.watchdog.arm(self.global_step)
+                try:
+                    for item in pipeline:
+                        batch, host_stats = item.batch
+                        # the step scalar must live on the engine's mesh too: a
+                        # jitted multi-process step rejects inputs committed to
+                        # a single local device (identity for the oracle)
+                        step_arr = self._place(jnp.asarray(self.global_step))
+                        self.params, self.opt_state, self.ef_state, metrics = (
+                            self.engine.step(
+                                self.params, self.opt_state, self.ef_state, batch,
+                                step_arr,
+                            )
                         )
-                    )
-                    self.ema_params = self.ema.update(
-                        self.ema_params, self.params, step_arr
-                    )
-                    self.global_step += 1
-                    self.sampler_state.cursor += 1
-                    self.engine.telemetry.record_host(
-                        item.collate_s, item.wait_s,
-                        host_stats.get("block_s", 0.0),
-                    )
-                    history.append({k: float(v) for k, v in metrics.items()})
+                        self.ema_params = self.ema.update(
+                            self.ema_params, self.params, step_arr
+                        )
+                        self.global_step += 1
+                        self.sampler_state.cursor += 1
+                        self.engine.telemetry.record_host(
+                            item.collate_s, item.wait_s,
+                            host_stats.get("block_s", 0.0),
+                        )
+                        history.append({k: float(v) for k, v in metrics.items()})
+                        if self.heartbeat is not None:
+                            self.heartbeat.beat(
+                                self.global_step, self.sampler_state.epoch
+                            )
+                        if self.watchdog is not None:
+                            self.watchdog.check()
+                            self.watchdog.arm(self.global_step)
 
-                    if simulate_failure_at is not None and self.global_step >= simulate_failure_at:
-                        raise RuntimeError("simulated node failure")
-                    if self.tcfg.ckpt_every and self.global_step % self.tcfg.ckpt_every == 0:
-                        self.save()
-                    if self.global_step in self.rescale_schedule:
-                        break  # leave the with-block: drain, fire at loop top
-                    if max_steps and self.global_step >= max_steps:
-                        stop = True
-                        break
+                        if simulate_failure_at is not None and self.global_step >= simulate_failure_at:
+                            raise RuntimeError("simulated node failure")
+                        self.fault_plan.crash_at_step(
+                            self.global_step, process=self._process_index
+                        )
+                        if self.tcfg.ckpt_every and self.global_step % self.tcfg.ckpt_every == 0:
+                            self.save()
+                        if self.global_step in self.rescale_schedule:
+                            break  # leave the with-block: drain, fire at loop top
+                        if max_steps and self.global_step >= max_steps:
+                            stop = True
+                            break
+                finally:
+                    if self.watchdog is not None:
+                        self.watchdog.disarm()
             # the drain above (rescale boundary or max_steps) discards
             # in-flight batches but must never discard an in-flight producer
             # exception — a masked collate error would resurface steps later

@@ -32,6 +32,7 @@ import os
 import subprocess
 import sys
 import textwrap
+import time
 from pathlib import Path
 
 import numpy as np
@@ -132,6 +133,53 @@ def test_coordinator_reachable_rejects_malformed():
     assert not coordinator_reachable("host:notaport", timeout=0.1)
 
 
+def test_probe_backoff_waits_for_late_coordinator():
+    """The reachability probe retries with backoff: process 0 may still be
+    importing jax when its peers first connect, so a listener that appears
+    late (but within the timeout) must still count as reachable."""
+    import socket
+    import threading
+
+    port = pick_free_port()
+
+    def listen_late():
+        time.sleep(0.5)
+        srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        srv.bind(("127.0.0.1", port))
+        srv.listen(1)
+        try:
+            srv.accept()
+        except OSError:
+            pass
+        finally:
+            srv.close()
+
+    t = threading.Thread(target=listen_late, daemon=True)
+    t.start()
+    t0 = time.monotonic()
+    assert coordinator_reachable(f"127.0.0.1:{port}", timeout=10.0,
+                                 backoff_seed=0)
+    assert time.monotonic() - t0 < 10.0
+    t.join(timeout=5.0)
+
+
+def test_probe_never_comes_up_bounded_and_error_is_actionable():
+    """A coordinator that NEVER appears: the probe gives up within about
+    the timeout (backoff never outlives the deadline), and the bring-up
+    error names the address, the likely causes, and every config knob."""
+    dead = f"127.0.0.1:{pick_free_port()}"
+    t0 = time.monotonic()
+    assert not coordinator_reachable(dead, timeout=1.0, backoff_seed=0)
+    assert time.monotonic() - t0 < 3.0
+    with pytest.raises(RuntimeError) as ei:
+        initialize_distributed(dead, 2, 1, probe_timeout=0.5)
+    msg = str(ei.value)
+    for needle in (dead, "unreachable", "process 0 is up", "firewall",
+                   ENV_COORDINATOR, "--coordinator"):
+        assert needle in msg, f"bring-up error missing {needle!r}:\n{msg}"
+
+
 def test_spawn_local_validates_nprocs():
     with pytest.raises(ValueError, match="n_procs"):
         spawn_local(0, ["true"])
@@ -209,6 +257,8 @@ def test_fetch_batch_materialises_only_local_ranks():
     an empty placeholder the engine's collate never reads."""
     from types import SimpleNamespace
 
+    from repro.resilience import FaultPlan
+
     fetched = []
     captured = {}
 
@@ -221,6 +271,9 @@ def test_fetch_batch_materialises_only_local_ranks():
         dataset=SimpleNamespace(get=lambda i: fetched.append(i) or f"m{i}"),
         engine=SimpleNamespace(local_rank_range=range(2, 4), collate=collate),
         bin_shape="shape",
+        fault_plan=FaultPlan(),  # inert: no sites armed
+        global_step=0,
+        _process_index=0,
     )
     rank_bins = [[0, 1], [2], [3, 4], [5]]
     assert Trainer._fetch_batch(me, rank_bins) == "batch"

@@ -13,7 +13,7 @@ import pytest
 
 from repro.data.collate import BinShape, collate_stacked
 from repro.data.molecules import SyntheticCFMDataset
-from repro.data.prefetch import PrefetchItem, PrefetchPipeline
+from repro.data.prefetch import PrefetchItem, PrefetchPipeline, ProducerStalled
 from repro.data.sampler import BalancedBatchSampler, SamplerState
 from repro.train.engine import RankTelemetry
 
@@ -229,6 +229,49 @@ def test_close_captures_inflight_stopiteration_as_runtimeerror():
 def test_negative_depth_rejected():
     with pytest.raises(ValueError):
         PrefetchPipeline(range(3), lambda x: x, depth=-1)
+
+
+def test_stalled_producer_detected_raised_and_close_bounded():
+    """A live producer wedged inside ONE fetch past stall_deadline_s is a
+    detectable failure, not a silent forever-hang: stalled() names the
+    stuck item, raise_pending() raises ProducerStalled (once), and close()
+    abandons the wedged daemon thread instead of joining forever."""
+    release = threading.Event()
+
+    def fetch(x):
+        if x == 1:
+            release.wait(30.0)  # wedged until the test releases it
+        return x
+
+    pipe = PrefetchPipeline(range(4), fetch, depth=2, stall_deadline_s=0.1)
+    try:
+        assert next(pipe).batch == 0
+        t0 = time.perf_counter()
+        msg = pipe.stalled()
+        while msg is None:
+            assert time.perf_counter() - t0 < 10.0, "stall never detected"
+            time.sleep(0.01)
+            msg = pipe.stalled()
+        assert "item 1" in msg and "stall deadline" in msg
+        with pytest.raises(ProducerStalled, match="item 1"):
+            pipe.raise_pending()
+        pipe.raise_pending()  # delivered once: no double raise
+        t1 = time.perf_counter()
+        pipe.close()  # must give up on the wedged thread, not block
+        assert time.perf_counter() - t1 < 10.0
+        assert isinstance(pipe.error, ProducerStalled)
+    finally:
+        release.set()
+
+
+def test_stall_deadline_validated_and_silent_on_healthy_stream():
+    with pytest.raises(ValueError, match="stall_deadline_s"):
+        PrefetchPipeline(range(3), lambda x: x, stall_deadline_s=0.0)
+    pipe = PrefetchPipeline(range(3), lambda x: x, depth=1,
+                            stall_deadline_s=5.0)
+    assert [it.batch for it in pipe] == [0, 1, 2]
+    assert pipe.stalled() is None
+    pipe.raise_pending()  # nothing pending on a clean, fast stream
 
 
 def test_overlap_measured_when_consumer_is_slow():

@@ -559,11 +559,15 @@ CRASH_SCRIPT = r"""
 import os, sys
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import json
+cfg = json.loads(sys.argv[1])
+# arm the chaos plan BEFORE the trainer exists: this is the production
+# injection path (resilience.FaultPlan.from_env), not a test-only kwarg
+os.environ["REPRO_FAULT_PLAN"] = json.dumps(
+    {"crash_at_step": {"step": cfg["fail_at"], "mode": "raise"}})
 from repro.core.mace import MaceConfig
 from repro.data.molecules import SyntheticCFMDataset
 from repro.train.train_loop import Trainer, TrainerConfig
 
-cfg = json.loads(sys.argv[1])
 TINY_KW = dict(n_species=10, channels=4, hidden_ls=(0, 1), sh_lmax=2,
                a_ls=(0, 1, 2), correlation=2, n_interactions=2,
                avg_num_neighbors=8.0, impl="fused")
@@ -573,7 +577,7 @@ tcfg = TrainerConfig(capacity=64, edge_factor=48, max_graphs=8, lr=2e-3,
 tr = Trainer(MaceConfig(**TINY_KW), tcfg,
              SyntheticCFMDataset(48, seed=0, max_atoms=48), seed=0)
 # dies mid-epoch with the prefetch pipeline live -> nonzero exit
-tr.train(n_epochs=1, simulate_failure_at=cfg["fail_at"])
+tr.train(n_epochs=1)
 """
 
 RESTART_SCRIPT = r"""
@@ -655,7 +659,7 @@ def test_fault_injection_restart_at_new_rank(r_new, tmp_path):
         capture_output=True, text=True, timeout=900, env=env,
     )
     assert crash.returncode != 0, "fault injection did not kill the run"
-    assert "simulated node failure" in crash.stderr
+    assert "crash_at_step fired at step 5" in crash.stderr
     # newest committed checkpoint is step 4 (the step-5 failure hit first)
     assert latest_step(ckpt_dir) == 4
 

@@ -1,0 +1,692 @@
+"""Fault-tolerant pod supervision: chaos injection, heartbeats, supervisor.
+
+Two tiers:
+
+* **quick** (no jax subprocess): the ``FaultPlan`` env protocol (parse /
+  scope / one-shot step equality), heartbeat write/read/drop atomicity,
+  ``StepWatchdog`` deadline semantics, the pure ``assess`` classification
+  table (exit codes x heartbeat staleness x startup grace x stragglers),
+  ``backoff_delays`` determinism, checkpoint payload checksums with
+  restore fallback, and three end-to-end ``PodSupervisor`` drills over a
+  tiny no-jax child (crash -> degrade 2 -> 1 -> recover; hang detected by
+  heartbeat staleness; restart budget exhaustion failing loudly) with the
+  committed ``incidents.jsonl`` schema asserted on the way.
+
+* **slow chaos matrix** (real 2-process x 2-device pods under a
+  ``PodSupervisor``): the acceptance proof.  For each fault class —
+  injected crash, hung host collate, corrupted checkpoint payload — the
+  supervisor must detect, kill the stranded group, relaunch at world size
+  1, and the degraded run must restore elastically (falling back past the
+  corrupt step when needed), replay/skip ZERO graphs (multiset
+  accounting), and land on final params allclose to the uninterrupted
+  sequential hierarchical oracle.
+
+CI runs the quick tier (plus ``bench_resilience --quick --check``) in the
+dedicated ``chaos-smoke`` job.
+"""
+import itertools
+import json
+import os
+import sys
+import textwrap
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.launch.multihost import backoff_delays
+from repro.resilience import (
+    ENV_FAULT_PLAN,
+    EXIT_CRASH,
+    EXIT_HANG,
+    FaultPlan,
+    HeartbeatWriter,
+    PodSupervisor,
+    RestartBudgetExhausted,
+    SimulatedCrash,
+    StepDeadlineExceeded,
+    StepWatchdog,
+    SupervisorConfig,
+    assess,
+    corrupt_file,
+    read_heartbeats,
+)
+from repro.train.checkpoint import (
+    read_meta,
+    restore_checkpoint,
+    save_checkpoint,
+    verify_payload,
+)
+
+ROOT = Path(__file__).resolve().parent.parent
+
+# every incidents.jsonl record carries exactly this envelope (see
+# repro/resilience/__init__.py); extra keys (recovery_s, ...) may ride along
+INCIDENT_KEYS = {
+    "t", "kind", "attempt", "world_size", "process_index", "step",
+    "exit_codes", "detail", "detection_s",
+}
+INCIDENT_KINDS = {
+    "crash", "hang", "slow_straggler", "relaunch", "recovered",
+    "budget_exhausted", "success",
+}
+
+
+# ---------------------------------------------------------------------------
+# quick: fault plan protocol
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_parse_and_env_roundtrip():
+    plan = FaultPlan.parse({"crash_at_step": {"step": 5, "process": 1}})
+    assert plan
+    assert FaultPlan.parse(plan.to_env()) == plan
+    # empty / unset always means "no faults armed"
+    assert not FaultPlan.parse("")
+    assert not FaultPlan.parse(None)
+    assert not FaultPlan.from_env({})
+    assert FaultPlan.from_env({ENV_FAULT_PLAN: plan.to_env()}) == plan
+
+
+def test_fault_plan_rejects_typos_loudly():
+    """A typo'd chaos plan must never silently run fault-free."""
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultPlan.parse({"crash_at_stpe": {"step": 1}})
+    with pytest.raises(ValueError, match="not valid JSON"):
+        FaultPlan.parse("{nope")
+    with pytest.raises(ValueError, match="JSON object"):
+        FaultPlan.parse("[1, 2]")
+    with pytest.raises(ValueError, match="must be an object"):
+        FaultPlan.parse({"crash_at_step": 5})
+
+
+def test_crash_at_step_is_scoped_and_one_shot():
+    plan = FaultPlan.parse(
+        {"crash_at_step": {"step": 5, "process": 1, "mode": "raise"}}
+    )
+    plan.crash_at_step(4, process=1)   # wrong step: no fire
+    plan.crash_at_step(5, process=0)   # wrong process: no fire
+    # equality, not >=: a relaunch replaying steps past 5 must not re-fire
+    plan.crash_at_step(6, process=1)
+    with pytest.raises(SimulatedCrash, match="step 5"):
+        plan.crash_at_step(5, process=1)
+
+
+def test_hang_finite_and_slow_collate_delays():
+    plan = FaultPlan.parse({
+        "hang_at_step": {"step": 3, "hang_s": 0.05},
+        "slow_collate": {"sleep_s": 0.01, "process": 0},
+    })
+    t0 = time.monotonic()
+    plan.hang_at_step(3)
+    assert time.monotonic() - t0 >= 0.05
+    plan.hang_at_step(2)  # wrong step: returns immediately
+    assert plan.slow_collate(process=0) == 0.01
+    assert plan.slow_collate(process=1) == 0.0
+
+
+def test_drop_heartbeat_is_persistent_not_one_shot():
+    plan = FaultPlan.parse({"drop_heartbeat": {"step": 3}})
+    assert not plan.drop_heartbeat(2)
+    assert plan.drop_heartbeat(3)
+    assert plan.drop_heartbeat(10)  # a dropped stream stays dropped
+
+
+def test_corrupt_file_flips_bytes_in_place(tmp_path):
+    p = tmp_path / "payload.bin"
+    data = bytes(range(256)) * 8
+    p.write_bytes(data)
+    assert corrupt_file(str(p)) == 64
+    got = p.read_bytes()
+    assert got != data and len(got) == len(data)
+    empty = tmp_path / "empty.bin"
+    empty.write_bytes(b"")
+    assert corrupt_file(str(empty)) == 0
+
+
+# ---------------------------------------------------------------------------
+# quick: heartbeats
+# ---------------------------------------------------------------------------
+
+
+def test_heartbeat_write_read_roundtrip(tmp_path):
+    HeartbeatWriter(str(tmp_path), 1).beat(3, epoch=2)
+    HeartbeatWriter(str(tmp_path), 0).beat(4)
+    beats = read_heartbeats(str(tmp_path))
+    assert set(beats) == {0, 1}
+    assert beats[1]["step"] == 3 and beats[1]["epoch"] == 2
+    assert beats[1]["seq"] == 1 and beats[1]["pid"] == os.getpid()
+    assert beats[0]["step"] == 4
+    # no torn tmp files left behind by the atomic replace
+    assert sorted(p.name for p in tmp_path.iterdir()) == [
+        "heartbeat.0.json", "heartbeat.1.json",
+    ]
+
+
+def test_heartbeat_drop_fault_suppresses_write_but_counts_seq(tmp_path):
+    plan = FaultPlan.parse({"drop_heartbeat": {"step": 2, "process": 0}})
+    hb = HeartbeatWriter(str(tmp_path), 0, plan=plan)
+    assert hb.beat(1)
+    assert not hb.beat(2)
+    assert not hb.beat(3)
+    assert hb.seq == 3  # attempts counted even when suppressed
+    assert read_heartbeats(str(tmp_path))[0]["step"] == 1
+
+
+def test_read_heartbeats_tolerates_missing_dir_and_garbage(tmp_path):
+    assert read_heartbeats(str(tmp_path / "missing")) == {}
+    (tmp_path / "heartbeat.0.json").write_text("{torn")
+    (tmp_path / "heartbeat.1.json").write_text("{}")  # no process_index
+    (tmp_path / "unrelated.txt").write_text("hi")
+    assert read_heartbeats(str(tmp_path)) == {}
+
+
+# ---------------------------------------------------------------------------
+# quick: step watchdog
+# ---------------------------------------------------------------------------
+
+
+def test_watchdog_fires_once_and_check_raises():
+    fired = []
+    wd = StepWatchdog(
+        0.15, poll_s=0.02, on_deadline=lambda s, e, d: fired.append((s, e, d))
+    )
+    try:
+        wd.arm(7)
+        t_end = time.monotonic() + 5.0
+        while not fired and time.monotonic() < t_end:
+            time.sleep(0.02)
+        assert fired, "watchdog never fired"
+        step, elapsed, deadline = fired[0]
+        assert step == 7 and elapsed > 0.15 and deadline == 0.15
+        with pytest.raises(StepDeadlineExceeded, match="step 7"):
+            wd.check()
+        time.sleep(0.1)
+        assert len(fired) == 1  # fires once per armed step
+    finally:
+        wd.close()
+
+
+def test_watchdog_disarmed_fast_step_never_fires():
+    fired = []
+    wd = StepWatchdog(0.05, poll_s=0.01, on_deadline=lambda *a: fired.append(a))
+    try:
+        with wd.observe(1):
+            pass  # a step faster than the deadline
+        time.sleep(0.2)
+        assert not fired
+        wd.check()  # no expiry recorded
+    finally:
+        wd.close()
+
+
+def test_watchdog_rejects_nonpositive_deadline():
+    with pytest.raises(ValueError, match="deadline_s"):
+        StepWatchdog(0.0)
+
+
+# ---------------------------------------------------------------------------
+# quick: the pure classification table
+# ---------------------------------------------------------------------------
+
+
+def _beat(i, step, t_wall):
+    return {"process_index": i, "step": step, "epoch": 0,
+            "t_wall": t_wall, "seq": step, "pid": 1}
+
+
+def test_assess_classifies_exit_codes():
+    now = 1000.0
+    inc = assess(
+        [EXIT_CRASH, None], {0: _beat(0, 5, now - 1.0), 1: _beat(1, 5, now)},
+        now_wall=now, attempt_start_wall=now - 10.0,
+        heartbeat_deadline_s=30.0, startup_grace_s=60.0,
+    )
+    assert len(inc) == 1
+    assert inc[0].kind == "crash" and inc[0].fatal
+    assert inc[0].process_index == 0 and inc[0].step == 5
+    assert "exited 43" in inc[0].detail
+    assert inc[0].detection_s == pytest.approx(1.0)
+
+    # the watchdog's exit code is classified as a hang, not a crash
+    inc = assess(
+        [EXIT_HANG], {}, now_wall=now, attempt_start_wall=now - 2.0,
+        heartbeat_deadline_s=30.0, startup_grace_s=60.0,
+    )
+    assert inc[0].kind == "hang" and "watchdog-converted" in inc[0].detail
+    assert "before first beat" in inc[0].detail
+
+    # clean exits and healthy live processes produce nothing
+    assert assess(
+        [0, None], {1: _beat(1, 3, now)}, now_wall=now,
+        attempt_start_wall=now - 5.0, heartbeat_deadline_s=30.0,
+        startup_grace_s=60.0,
+    ) == []
+
+
+def test_assess_detects_stale_heartbeat_as_hang():
+    now = 1000.0
+    inc = assess(
+        [None, None], {0: _beat(0, 4, now - 45.0), 1: _beat(1, 4, now - 1.0)},
+        now_wall=now, attempt_start_wall=now - 100.0,
+        heartbeat_deadline_s=30.0, startup_grace_s=60.0,
+    )
+    assert len(inc) == 1
+    assert inc[0].kind == "hang" and inc[0].process_index == 0
+    assert inc[0].step == 4 and "stale" in inc[0].detail
+    assert inc[0].detection_s == pytest.approx(45.0)
+
+
+def test_assess_startup_grace_covers_slow_bringup():
+    now = 1000.0
+    # never beat, but still within the grace window: not an incident
+    assert assess(
+        [None], {}, now_wall=now, attempt_start_wall=now - 30.0,
+        heartbeat_deadline_s=5.0, startup_grace_s=60.0,
+    ) == []
+    inc = assess(
+        [None], {}, now_wall=now, attempt_start_wall=now - 90.0,
+        heartbeat_deadline_s=5.0, startup_grace_s=60.0,
+    )
+    assert inc[0].kind == "hang" and "never published" in inc[0].detail
+
+
+def test_assess_straggler_is_nonfatal_and_gated():
+    now = 1000.0
+    beats = {0: _beat(0, 9, now), 1: _beat(1, 3, now)}
+    inc = assess(
+        [None, None], beats, now_wall=now, attempt_start_wall=now - 50.0,
+        heartbeat_deadline_s=30.0, startup_grace_s=60.0, slow_step_gap=4,
+    )
+    assert len(inc) == 1
+    assert inc[0].kind == "slow_straggler" and not inc[0].fatal
+    assert inc[0].process_index == 1 and "lags pod max" in inc[0].detail
+    # slow_step_gap=0 disables straggler reporting entirely
+    assert assess(
+        [None, None], beats, now_wall=now, attempt_start_wall=now - 50.0,
+        heartbeat_deadline_s=30.0, startup_grace_s=60.0, slow_step_gap=0,
+    ) == []
+
+
+# ---------------------------------------------------------------------------
+# quick: backoff (shared by supervisor restarts + coordinator probe)
+# ---------------------------------------------------------------------------
+
+
+def test_backoff_delays_deterministic_growing_capped():
+    kw = dict(base=0.1, factor=2.0, max_s=1.0, jitter=0.25)
+    a = list(itertools.islice(backoff_delays(seed=7, **kw), 8))
+    assert a == list(itertools.islice(backoff_delays(seed=7, **kw), 8))
+    assert a != list(itertools.islice(backoff_delays(seed=8, **kw), 8))
+    for i, d in enumerate(a):
+        nominal = min(0.1 * 2.0 ** i, 1.0)
+        assert 0.75 * nominal - 1e-9 <= d <= 1.25 * nominal + 1e-9, (i, d)
+    assert list(itertools.islice(
+        backoff_delays(base=0.1, factor=2.0, max_s=1.0, jitter=0.0), 6
+    )) == pytest.approx([0.1, 0.2, 0.4, 0.8, 1.0, 1.0])
+
+
+# ---------------------------------------------------------------------------
+# quick: checkpoint payload checksums + restore fallback
+# ---------------------------------------------------------------------------
+
+
+def _state(v):
+    return {"w": np.full((4, 3), v, np.float32),
+            "b": np.arange(3, dtype=np.float32) + v}
+
+
+def _shard_path(d, step, proc=0):
+    return os.path.join(d, f"step_{step:010d}", f"arrays.{proc}.npz")
+
+
+def test_checkpoint_records_and_verifies_checksums(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 2, _state(2.0))
+    save_checkpoint(d, 4, _state(4.0))
+    _, meta = read_meta(d)
+    assert set(meta["checksums"]) == {"arrays.0.npz"}
+    assert verify_payload(d, 4) is None
+    corrupt_file(_shard_path(d, 4))
+    msg = verify_payload(d, 4)
+    assert msg is not None
+    assert "corrupt" in msg and "arrays.0.npz" in msg and "sha256" in msg
+
+
+def test_restore_falls_back_past_corrupt_step(tmp_path):
+    d = str(tmp_path)
+    for s in (2, 4, 6):
+        save_checkpoint(d, s, _state(float(s)))
+    corrupt_file(_shard_path(d, 6))
+    with pytest.warns(RuntimeWarning, match="corrupt"):
+        step, state, meta = restore_checkpoint(d, _state(0.0))
+    # the newest INTACT checkpoint wins; callers use the returned step
+    assert step == 4 and meta["step"] == 4
+    np.testing.assert_array_equal(state["w"], _state(4.0)["w"])
+
+
+def test_restore_every_step_corrupt_fails_loudly(tmp_path):
+    d = str(tmp_path)
+    for s in (2, 4):
+        save_checkpoint(d, s, _state(float(s)))
+        corrupt_file(_shard_path(d, s))
+    with pytest.warns(RuntimeWarning):
+        with pytest.raises(RuntimeError, match="every committed checkpoint"):
+            restore_checkpoint(d, _state(0.0))
+
+
+def test_corrupt_checkpoint_payload_fault_site(tmp_path, monkeypatch):
+    monkeypatch.setenv(
+        ENV_FAULT_PLAN,
+        json.dumps({"corrupt_checkpoint_payload": {"step": 4}}),
+    )
+    d = str(tmp_path)
+    save_checkpoint(d, 2, _state(2.0))
+    save_checkpoint(d, 4, _state(4.0))
+    # the commit itself succeeded; the payload was poisoned post-commit
+    assert verify_payload(d, 2) is None
+    assert verify_payload(d, 4) is not None
+    with pytest.warns(RuntimeWarning, match="corrupt"):
+        step, state, _ = restore_checkpoint(d, _state(0.0))
+    assert step == 2
+    np.testing.assert_array_equal(state["w"], _state(2.0)["w"])
+
+
+# ---------------------------------------------------------------------------
+# quick: PodSupervisor end-to-end drills (tiny no-jax child)
+# ---------------------------------------------------------------------------
+
+# A stand-in trainer: beats once per "step", consults the same fault sites
+# the real step loop does.  Keeps the supervisor's full detect -> kill ->
+# degrade -> relaunch -> recover cycle testable in a couple of seconds.
+DRILL_CHILD = textwrap.dedent("""\
+    import os, sys, time
+    sys.path.insert(0, sys.argv[1])
+    from repro.resilience.faults import FaultPlan
+    from repro.resilience.heartbeat import ENV_HEARTBEAT_DIR, HeartbeatWriter
+
+    proc = int(os.environ["REPRO_PROCESS_ID"])
+    plan = FaultPlan.from_env()
+    hb = HeartbeatWriter(os.environ[ENV_HEARTBEAT_DIR], proc, plan=plan)
+    for step in range(1, 7):
+        time.sleep(0.05)
+        hb.beat(step)
+        plan.crash_at_step(step, process=proc)
+        plan.hang_at_step(step, process=proc)
+    print(f"proc {proc} done", flush=True)
+""")
+
+
+def _drill_supervisor(tmp_path, plan, **cfg_overrides):
+    child = tmp_path / "child.py"
+    child.write_text(DRILL_CHILD)
+    kw = dict(
+        n_procs=2, heartbeat_deadline_s=2.0, startup_grace_s=30.0,
+        poll_s=0.05, max_restarts=2, backoff_base_s=0.05,
+        backoff_max_s=0.1, seed=0,
+    )
+    kw.update(cfg_overrides)
+    return PodSupervisor(
+        [sys.executable, str(child), str(ROOT / "src")],
+        SupervisorConfig(**kw),
+        str(tmp_path / "run"),
+        fault_plan=FaultPlan.parse(plan),
+        env={"PYTHONPATH": str(ROOT / "src")},
+    )
+
+
+def _incidents(sup):
+    with open(sup.incidents_path) as f:
+        recs = [json.loads(line) for line in f if line.strip()]
+    for r in recs:
+        assert INCIDENT_KEYS <= set(r), r
+        assert r["kind"] in INCIDENT_KINDS, r
+    return recs
+
+
+def test_supervisor_recovers_from_injected_crash(tmp_path):
+    # crash on process 0 so the relaunch (which runs only process 0) proves
+    # the supervisor strips the fault plan: a re-armed plan would re-crash
+    sup = _drill_supervisor(
+        tmp_path, {"crash_at_step": {"step": 3, "process": 0}}
+    )
+    summary = sup.run()
+    assert summary["ok"]
+    assert summary["restarts"] == 1 and summary["attempts"] == 2
+    assert summary["world_size_final"] == 1
+    recs = _incidents(sup)
+    assert [r["kind"] for r in recs] == [
+        "crash", "relaunch", "recovered", "success"
+    ]
+    crash, relaunch, recovered, success = recs
+    assert crash["process_index"] == 0 and crash["step"] == 3
+    assert crash["exit_codes"][0] == EXIT_CRASH
+    assert "exited 43" in crash["detail"]
+    assert crash["detection_s"] is not None and crash["detection_s"] < 10.0
+    assert relaunch["world_size"] == 1
+    assert "checkpoint" in relaunch["detail"]
+    assert recovered["recovery_s"] > 0.0
+    # the failed attempt's high-water step is >= 3 (the crash step) and
+    # <= 6 (the survivor may advance before the kill); the relaunch's first
+    # OBSERVED beat is step >= 1 (drill steps are faster than the poll, so
+    # the supervisor may first see step 2+) — steps_lost stays in [0, 6]
+    assert 0 <= recovered["steps_lost"] <= 6
+    assert recovered["first_beat_step"] >= 1
+    assert summary["recoveries"] == [recovered]
+    assert "0 restarts" not in success["detail"]
+
+
+def test_supervisor_detects_hang_via_heartbeat_staleness(tmp_path):
+    sup = _drill_supervisor(
+        tmp_path, {"hang_at_step": {"step": 2, "process": 1}}
+    )
+    t0 = time.monotonic()
+    summary = sup.run()
+    wall = time.monotonic() - t0
+    assert summary["ok"] and summary["restarts"] == 1
+    assert summary["world_size_final"] == 1
+    hangs = [r for r in _incidents(sup) if r["kind"] == "hang"]
+    assert hangs
+    assert hangs[0]["process_index"] == 1 and hangs[0]["step"] == 2
+    assert "stale" in hangs[0]["detail"]
+    # detected by staleness: after the deadline, but promptly — not the
+    # indefinite stall an unsupervised collective would produce
+    assert hangs[0]["detection_s"] >= 2.0
+    assert wall < 30.0
+
+
+def test_supervisor_budget_exhaustion_fails_loudly(tmp_path):
+    # rearm_faults + min_procs=2 keeps every attempt crashing the same way
+    sup = _drill_supervisor(
+        tmp_path, {"crash_at_step": {"step": 2, "process": 0}},
+        max_restarts=1, min_procs=2, rearm_faults=True,
+    )
+    with pytest.raises(RestartBudgetExhausted) as ei:
+        sup.run()
+    msg = str(ei.value)
+    assert "budget" in msg and "process 0" in msg
+    assert "incidents.jsonl" in msg  # points the operator at the log
+    recs = _incidents(sup)
+    assert recs[-1]["kind"] == "budget_exhausted"
+    assert recs[-1]["process_index"] == 0
+    assert "process 0" in recs[-1]["detail"]
+    kinds = [r["kind"] for r in recs]
+    assert kinds.count("crash") == 2 and kinds.count("relaunch") == 1
+    assert "success" not in kinds
+
+
+# ---------------------------------------------------------------------------
+# slow: the chaos matrix — real pods under supervision
+# ---------------------------------------------------------------------------
+
+CHAOS_STEPS = 6
+
+CHAOS_WORKER = textwrap.dedent("""\
+    import os, sys
+    sys.path.insert(0, sys.argv[2])
+    from repro.launch.multihost import initialize_distributed
+    initialize_distributed()
+    import json
+    import numpy as np, jax
+    from repro.core.mace import MaceConfig
+    from repro.data.molecules import SyntheticCFMDataset
+    from repro.data.sampler import SamplerState
+    from repro.train.checkpoint import read_meta
+    from repro.train.train_loop import Trainer, TrainerConfig
+
+    out_dir = sys.argv[1]
+    TINY = MaceConfig(n_species=10, channels=4, hidden_ls=(0, 1), sh_lmax=2,
+                      a_ls=(0, 1, 2), correlation=2, n_interactions=2,
+                      avg_num_neighbors=8.0, impl="fused")
+    ds = SyntheticCFMDataset(48, seed=0, max_atoms=24)
+    nproc = jax.process_count()
+    # the LOGICAL schedule (4 ranks, 2-node hierarchy) is fixed; only the
+    # physical execution degrades with the world size — a 1-process
+    # relaunch runs the sequential hierarchical emulation of the same pod
+    tcfg = TrainerConfig(capacity=128, edge_factor=24, max_graphs=16,
+                         n_ranks=4, n_nodes=2,
+                         engine="multihost" if nproc > 1 else "sequential",
+                         prefetch=0, elastic=True,
+                         ckpt_dir=os.path.join(out_dir, "ckpt"),
+                         ckpt_every=2)
+    tr = Trainer(TINY, tcfg, ds, seed=0)
+    resumed = tr.maybe_restore()
+    acct = {}
+    if resumed:
+        # zero dropped / zero duplicated: the committed prefix (recomputed
+        # at the writer's rank count) plus the restarted remainder covers
+        # the epoch's graphs exactly once
+        step, meta = read_meta(tcfg.ckpt_dir, step=tr.global_step)
+        old = tr.sampler.with_ranks(meta["n_ranks"])
+        consumed = old.consumed_indices(
+            SamplerState(meta["sampler"]["epoch"], meta["sampler"]["cursor"]))
+        remaining = [i for grp in tr.sampler.step_iter(tr.sampler_state)
+                     for b in grp for i in b]
+        assert sorted(consumed + remaining) == list(range(48)), \\
+            "restart dropped or duplicated graphs"
+        acct = {"resumed_at": int(tr.global_step),
+                "consumed": len(consumed), "remaining": len(remaining)}
+    out = tr.train(n_epochs=10**9, max_steps=%(steps)d)
+    if jax.process_index() == 0 and tr.global_step >= %(steps)d:
+        flat = {"/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                         for p in path): np.asarray(leaf)
+                for path, leaf in
+                jax.tree_util.tree_flatten_with_path(tr.params)[0]}
+        np.savez(os.path.join(out_dir, "final.npz"), **flat,
+                 losses=np.asarray([h["loss"] for h in out["history"]]))
+        with open(os.path.join(out_dir, "accounting.json"), "w") as f:
+            json.dump({"world": nproc, **acct}, f)
+    print(f"proc {jax.process_index()} done", flush=True)
+""" % {"steps": CHAOS_STEPS})
+
+# fault plans and the step the degraded relaunch must restore from.
+# checkpoints commit at steps 2, 4 (ckpt_every=2; the fault fires first at
+# 5); the corrupt scenario poisons step 4's shard 0 — the shard an elastic
+# 1-process reader restores — so the restore must fall back to step 2.
+CHAOS_SCENARIOS = {
+    "crash": (
+        {"crash_at_step": {"step": 5, "process": 1}}, 4,
+    ),
+    "hang": (
+        {"hang_at_step": {"step": 4, "process": 1}}, 4,
+    ),
+    "corrupt": (
+        {"corrupt_checkpoint_payload": {"step": 4, "process": 0},
+         "crash_at_step": {"step": 5, "process": 1}}, 2,
+    ),
+}
+
+
+def _chaos_oracle(flat_out):
+    """Uninterrupted sequential hierarchical oracle of the same schedule."""
+    import jax
+
+    from repro.core.mace import MaceConfig
+    from repro.data.molecules import SyntheticCFMDataset
+    from repro.train.train_loop import Trainer, TrainerConfig
+
+    tiny = MaceConfig(
+        n_species=10, channels=4, hidden_ls=(0, 1), sh_lmax=2,
+        a_ls=(0, 1, 2), correlation=2, n_interactions=2,
+        avg_num_neighbors=8.0, impl="fused",
+    )
+    ds = SyntheticCFMDataset(48, seed=0, max_atoms=24)
+    tcfg = TrainerConfig(
+        capacity=128, edge_factor=24, max_graphs=16, n_ranks=4, n_nodes=2,
+        engine="sequential", prefetch=0, ckpt_dir=None, ckpt_every=0,
+    )
+    tr = Trainer(tiny, tcfg, ds, seed=0)
+    out = tr.train(n_epochs=10**9, max_steps=CHAOS_STEPS)
+    oracle = {
+        "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        ): np.asarray(leaf)
+        for path, leaf in jax.tree_util.tree_flatten_with_path(tr.params)[0]
+    }
+    for k in flat_out:
+        if k == "losses":
+            continue
+        np.testing.assert_allclose(
+            flat_out[k], oracle[k], rtol=2e-3, atol=5e-4,
+            err_msg=f"chaos final params diverged from oracle: {k}",
+        )
+    return out
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("scenario", sorted(CHAOS_SCENARIOS))
+def test_chaos_matrix_supervised_pod_recovers(scenario, tmp_path):
+    """Acceptance proof, one fault class per parametrization: a real
+    2-process x 2-device pod under a PodSupervisor hits the injected fault,
+    the supervisor detects it (exit code or heartbeat staleness), kills the
+    stranded group and relaunches at world size 1; the degraded run
+    restores elastically from the newest INTACT committed checkpoint
+    (falling back past the poisoned step in the corrupt scenario), replays
+    or skips zero graphs, and lands allclose to the uninterrupted
+    sequential hierarchical oracle."""
+    plan, want_resume = CHAOS_SCENARIOS[scenario]
+    out_dir = tmp_path / "out"
+    out_dir.mkdir()
+    worker = tmp_path / "worker.py"
+    worker.write_text(CHAOS_WORKER)
+    sup = PodSupervisor(
+        [sys.executable, str(worker), str(out_dir), str(ROOT / "src")],
+        SupervisorConfig(
+            # deadline: well above the post-compile per-step wall (seconds)
+            # but tight enough that the hung-collate scenario is detected by
+            # heartbeat STALENESS, before any collective-layer timeout on
+            # the peer could convert it into a process death
+            n_procs=2, devices_per_proc=2, heartbeat_deadline_s=30.0,
+            startup_grace_s=600.0, poll_s=0.5, max_restarts=2,
+            backoff_base_s=0.1, backoff_max_s=0.5, seed=0,
+        ),
+        str(tmp_path / "run"),
+        fault_plan=FaultPlan.parse(plan),
+        env={"PYTHONPATH": str(ROOT / "src")},
+    )
+    summary = sup.run()
+    assert summary["ok"], summary
+    assert summary["restarts"] == 1 and summary["world_size_final"] == 1
+    recs = _incidents(sup)
+    kinds = [r["kind"] for r in recs]
+    want_kind = "hang" if scenario == "hang" else "crash"
+    assert want_kind in kinds, kinds
+    assert kinds.count("relaunch") == 1 and kinds[-1] == "success"
+    fatal = next(r for r in recs if r["kind"] == want_kind)
+    assert fatal["detection_s"] is not None
+    if scenario != "hang":
+        assert fatal["exit_codes"][1] == EXIT_CRASH
+
+    # the degraded relaunch restored from the expected committed step and
+    # accounted for every graph exactly once
+    with open(out_dir / "accounting.json") as f:
+        acct = json.load(f)
+    assert acct["world"] == 1
+    assert acct["resumed_at"] == want_resume
+    assert acct["consumed"] + acct["remaining"] == 48
+
+    # final params match the uninterrupted oracle (same logical schedule)
+    flat = dict(np.load(out_dir / "final.npz"))
+    assert len(flat["losses"]) + want_resume == CHAOS_STEPS
+    _chaos_oracle(flat)

@@ -17,6 +17,7 @@ from repro.core.mace import MaceConfig, init_mace, mace_energy_forces
 from repro.data.molecules import SyntheticCFMDataset
 from repro.serve import (
     GraphServer,
+    RequestTimeout,
     RequestTooLarge,
     ServeConfig,
     ServerClosed,
@@ -190,6 +191,42 @@ def test_submit_rejects_oversize_and_closed(served):
     closed._closed = True
     with pytest.raises(ServerClosed):
         closed.submit(served["mols"][0])
+
+
+# ---------------------------------------------------------------------------
+# per-request deadline: a wedged fleet fails futures, never blocks callers
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_submit_timeout_s_expires_unserved_request():
+    """A request no worker will ever pick up (n_workers=0 wedge) fails with
+    RequestTimeout shortly after its deadline, the failure is counted, and
+    the slot is reclaimed — the batcher's wave packer skips the expired
+    future so it consumes no pack/forward work, and drain completes."""
+    params = init_mace(jax.random.PRNGKey(0), _TINY)
+    ds = SyntheticCFMDataset(4, seed=7, max_atoms=24)
+    server = GraphServer(
+        _TINY, params,
+        ServeConfig(capacities=(24,), edge_factor=48, n_workers=0,
+                    max_wait_s=0.005),
+    )
+    try:
+        with pytest.raises(ValueError, match="timeout_s"):
+            server.submit(ds.get(0), timeout_s=0.0)
+        t0 = time.perf_counter()
+        fut = server.submit(ds.get(0), timeout_s=0.2)
+        with pytest.raises(RequestTimeout, match="unserved"):
+            fut.result(timeout=30.0)
+        assert time.perf_counter() - t0 < 10.0  # expired, not blocked
+        while server.stats()["failed"] < 1:  # counter lands post-exception
+            assert time.perf_counter() - t0 < 10.0
+            time.sleep(0.01)
+        stats = server.stats()
+        assert stats["failed"] == 1 and stats["served"] == 0
+        assert not server._timed, "expired request's slot not reclaimed"
+    finally:
+        server.close()
 
 
 # ---------------------------------------------------------------------------
